@@ -1,0 +1,142 @@
+"""Shared benchmark substrate: a small LM trained in-container on the
+structured synthetic corpus (the stand-in for pretrained Llama/Qwen — no
+external weights exist offline; DESIGN.md §Hardware-adaptation).
+
+The trained model is cached under benchmarks/results/bench_model so the
+whole suite trains it exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.core.lp import EMPTY_PLAN, LPPlan
+from repro.data import SynthConfig, eval_ppl_batch, icl_eval_batch, lm_batch
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.train import OptConfig, TrainConfig, checkpoint as CK
+from repro.train.trainer import init_state, make_train_step
+
+PC = ParallelContext()
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+CACHE = os.path.join(RESULTS, "bench_model")
+
+#: The benchmark model: llama-family, deep enough for meaningful LP sweeps.
+BENCH_CFG = ArchConfig(
+    name="bench-12l",
+    family="dense",
+    n_layers=12,
+    d_model=256,
+    n_heads=8,
+    n_kv_heads=4,
+    d_ff=1024,
+    vocab_size=512,
+    rope_theta=10_000.0,
+    block_pattern=(LayerSpec(mixer="attn", ffn="mlp"),),
+    max_position=512,
+)
+SC = SynthConfig(vocab_size=BENCH_CFG.vocab_size)
+SEQ = 128
+
+
+def train_bench_model(steps: int = 1200, *, force: bool = False):
+    """Train (or load) the shared benchmark model. Returns fp32 params."""
+    ms = T.build_structure(BENCH_CFG, tp=1)
+    os.makedirs(RESULTS, exist_ok=True)
+    marker = os.path.join(CACHE, "DONE")
+    if os.path.exists(marker) and not force:
+        with open(marker) as f:
+            meta = json.load(f)
+        if meta.get("steps") == steps:
+            logical_like = {"params": jax.tree.map(
+                lambda x: np.zeros(x.shape, np.float32),
+                T.init_params(ms, jax.random.PRNGKey(0)))}
+            logical = CK.restore(CACHE, logical_like)
+            return logical["params"]
+    tc = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=50,
+                                   total_steps=steps, schedule="wsd"))
+    state = init_state(ms, jax.random.PRNGKey(0), PC, tc)
+    step_fn = jax.jit(make_train_step(ms, PC, tc), donate_argnums=(0,))
+    key = jax.random.PRNGKey(123)
+    for s in range(steps):
+        batch = lm_batch(jax.random.fold_in(key, s), SC, SEQ, 16)
+        state, m = step_fn(state, batch)
+        if s % 50 == 0 or s == steps - 1:
+            print(f"  [bench-train {s:4d}] loss={float(m['loss']):.4f}",
+                  flush=True)
+    from repro.train.trainer import from_flat_global, _leaf_meta
+    tmpl, treedef, infos = _leaf_meta(ms)
+    flats = treedef.flatten_up_to(state["master"])
+    params = treedef.unflatten([
+        from_flat_global(f, li.pd.shape, li.pspec, PC)
+        for f, li in zip(flats, infos)])
+    CK.save(CACHE, {"params": params}, steps)
+    # CK.save names dirs step_<n>; relocate via manifest-less reload contract:
+    import shutil
+    src = os.path.join(CACHE, f"step_{steps:08d}")
+    for fn in os.listdir(src):
+        shutil.copy(os.path.join(src, fn), os.path.join(CACHE, fn))
+    with open(os.path.join(CACHE, "DONE"), "w") as f:
+        json.dump({"steps": steps}, f)
+    return params
+
+
+def layer_params_of(params) -> List:
+    """Split the vanilla (no-LP) param tree into per-layer trees."""
+    ms = T.build_structure(BENCH_CFG, tp=1)
+    assert len(ms.segments) == 1 and ms.segments[0].count == BENCH_CFG.n_layers
+    sp = params["segments"][0]
+    return [jax.tree.map(lambda v: v[i], sp) for i in range(BENCH_CFG.n_layers)]
+
+
+def params_with_plan(params, plan: LPPlan):
+    """Re-pack the trained weights under an LP plan (retraining-free)."""
+    from repro.core.lp import lp_convert
+    layers = layer_params_of(params)
+    segs, seg_params = lp_convert(BENCH_CFG, layers, plan)
+    out = dict(params)
+    out["segments"] = seg_params
+    return T.build_structure(BENCH_CFG, plan=plan, tp=1), out
+
+
+def eval_ppl(params, ms, *, n_batches: int = 2, batch: int = 8) -> float:
+    """Perplexity on the held-out trigram language (the RedPajama analogue)."""
+    tot, cnt = 0.0, 0
+    for i in range(n_batches):
+        b = eval_ppl_batch(jax.random.PRNGKey(10_000 + i), SC, SEQ, batch)
+        loss, parts = T.loss_fn(params, b, ms=ms, pc=PC)
+        tot += float(parts["xent"])
+        cnt += 1
+    return float(np.exp(tot / cnt))
+
+
+def eval_icl(params, ms, *, n_batches: int = 2, batch: int = 8,
+             last_k: int = 8) -> float:
+    """ICL accuracy: fraction of correct answer tokens over the LAST k
+    demonstrations (the model has seen enough shots by then)."""
+    hits, tot = 0, 0
+    for i in range(n_batches):
+        b = icl_eval_batch(jax.random.PRNGKey(20_000 + i), SC, SEQ, batch)
+        logits, _, _ = T.forward_full(params, b["tokens"], ms=ms, pc=PC)
+        # predict the token AT ans_pos from position ans_pos-1
+        pred = jnp.argmax(logits, -1)
+        sel = jnp.take_along_axis(pred, b["ans_pos"] - 1, axis=1)
+        ok = sel == b["ans_tok"]
+        hits += int(ok[:, -last_k:].sum())
+        tot += ok[:, -last_k:].size
+    return hits / tot
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path

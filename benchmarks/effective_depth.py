@@ -1,0 +1,91 @@
+"""Paper Fig. 3/4 — effective-depth heatmaps.
+
+Applies each transformation (shuffle / prune / merge / parallel /
+2-parallel) to contiguous layer stretches [s, e] of the trained benchmark
+model and records the perplexity grid. Reproduces the paper's QUALITATIVE
+claims:
+  * mid-stack stretches tolerate shuffling and 2-parallel with small PPL
+    cost; pruning/merging the same stretch is far worse;
+  * contiguous 2-parallel tolerates the LONGEST stretches (the basis of LP).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import interventions as IV
+from repro.data import eval_ppl_batch
+from repro.model import transformer as T
+from repro.model.norms import apply_norm
+from repro.model import embedding as E
+
+
+def _ppl_with_plan(params, layer_params, plan, *, n_batches=2, batch=8):
+    """PPL evaluating the intervened stack inside the full model."""
+    cfg = C.BENCH_CFG
+    tot = 0.0
+    for i in range(n_batches):
+        b = eval_ppl_batch(jax.random.PRNGKey(10_000 + i), C.SC, C.SEQ, batch)
+        toks, labels = b["tokens"], b["labels"]
+        pos = jnp.arange(toks.shape[1])[None]
+        x = E.embed_lookup(params["embed"], toks, C.PC)
+        x = IV.apply_intervened(layer_params, plan, x, cfg=cfg, positions=pos)
+        x = apply_norm(x, params["final_norm"], cfg)
+        logits = E.local_logits(params["embed"], x, cfg, C.PC)
+        xent = E.vocab_parallel_xent(logits, labels, C.PC)
+        tot += float(xent)
+    return float(np.exp(tot / n_batches))
+
+
+def run(*, stride: int = 2, n_batches: int = 2, train_steps: int = 1200):
+    params = C.train_bench_model(train_steps)
+    layers = C.layer_params_of(params)
+    n = C.BENCH_CFG.n_layers
+    base = _ppl_with_plan(params, layers, IV.sequential_plan(n),
+                          n_batches=n_batches)
+    print(f"base ppl = {base:.3f}")
+    grids = {}
+    kinds = ["shuffle", "prune", "merge", "parallel", "parallel2"]
+    for kind in kinds:
+        grid = {}
+        for s in range(0, n - 1, stride):
+            for e in range(s + 1, n, stride):
+                if kind == "shuffle":
+                    plan = IV.shuffle_plan(n, s, e, jax.random.PRNGKey(s * n + e))
+                    lp = layers
+                elif kind == "prune":
+                    plan = IV.prune_plan(n, s, e)
+                    lp = layers
+                elif kind == "merge":
+                    lp, plan = IV.merge_avg(layers, s, e)
+                elif kind == "parallel":
+                    plan = IV.parallel_plan(n, s, e, form="par")
+                    lp = layers
+                else:
+                    plan = IV.parallel2_plan(n, s, e, form="tp")
+                    lp = layers
+                ppl = _ppl_with_plan(params, lp, plan, n_batches=n_batches)
+                grid[f"{s},{e}"] = round(ppl, 3)
+        grids[kind] = grid
+        best = min(grid.values())
+        worst = max(grid.values())
+        print(f"{kind:10s}: ppl range [{best:.2f}, {worst:.2f}] over "
+              f"{len(grid)} (s,e) cells")
+
+    # The paper's headline orderings, asserted on the mid-stack stretch:
+    mid = f"{2},{n - 3}"
+    summary = {
+        "base_ppl": base,
+        "mid_stretch": mid,
+        "mid": {k: grids[k].get(mid) for k in kinds},
+        "grids": grids,
+    }
+    C.save_result("effective_depth", summary)
+    print("mid-stretch ppl:", {k: summary['mid'][k] for k in kinds})
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Paper Table 2 — accuracy restoration by fine-tuning ONLY the LP-merged
+layers (AdamW, linear decay — the paper's recipe)."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common as C
+from repro.core.lp import plan_for_depth
+from repro.data import lm_batch
+from repro.model import transformer as T
+from repro.train import OptConfig, TrainConfig
+from repro.train.trainer import make_train_step, state_from_params
+
+
+def run(*, train_steps: int = 1200, ft_steps: int = 300, depth_cut: int = 3):
+    params = C.train_bench_model(train_steps)
+    n = C.BENCH_CFG.n_layers
+    ms0 = T.build_structure(C.BENCH_CFG, tp=1)
+    base_icl = C.eval_icl(params, ms0)
+    base_ppl = C.eval_ppl(params, ms0)
+
+    plan = plan_for_depth(C.BENCH_CFG, n - depth_cut, end=n - 1)
+    ms, p_lp = C.params_with_plan(params, plan)
+    rows = [{"steps": "base", "icl": round(base_icl, 4),
+             "ppl": round(base_ppl, 3)},
+            {"steps": 0, "icl": round(C.eval_icl(p_lp, ms), 4),
+             "ppl": round(C.eval_ppl(p_lp, ms), 3)}]
+    print(f"base: icl={rows[0]['icl']} ppl={rows[0]['ppl']}")
+    print(f"LP  : icl={rows[1]['icl']} ppl={rows[1]['ppl']}")
+
+    tc = TrainConfig(opt=OptConfig(lr=1e-4, warmup_steps=10,
+                                   total_steps=ft_steps, schedule="linear",
+                                   weight_decay=0.01),
+                     finetune_lp_only=True)
+    state = state_from_params(p_lp, ms, C.PC, tc)
+    step_fn = jax.jit(make_train_step(ms, C.PC, tc), donate_argnums=(0,))
+    key = jax.random.PRNGKey(777)
+    checkpoints = sorted({ft_steps // 4, ft_steps // 2, ft_steps})
+    for s in range(ft_steps):
+        batch = lm_batch(jax.random.fold_in(key, s), C.SC, C.SEQ, 16)
+        state, m = step_fn(state, batch)
+        if (s + 1) in checkpoints:
+            icl = C.eval_icl(state["params"], ms)
+            ppl = C.eval_ppl(state["params"], ms)
+            rows.append({"steps": s + 1, "icl": round(icl, 4),
+                         "ppl": round(ppl, 3)})
+            print(f"ft {s + 1:4d}: icl={icl:.4f} ppl={ppl:.3f} "
+                  f"(loss {float(m['loss']):.3f})")
+    out = {"plan_pairs": list(map(list, plan.pairs)), "rows": rows}
+    C.save_result("finetune_recovery", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""§Perf hillclimb driver: re-lower the three featured cells after each
+optimisation and append (hypothesis -> change -> before -> after) records to
+benchmarks/results/perf_log.json.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --tag iter123
+"""
+import argparse
+import dataclasses
+import json
+import os
+
+CELLS = [
+    # (arch, shape, label, policy_override)
+    ("yi-6b", "train_4k", "lp", None),
+    ("yi-6b", "decode_32k", "lp", None),
+    ("yi-6b", "decode_32k", "nolp", "nolp"),
+    ("minicpm-2b", "decode_32k", "lp", None),
+    ("llama4-scout-17b-a16e", "prefill_32k", "lp", None),
+    ("dbrx-132b", "decode_32k", "lp", None),
+    ("dbrx-132b", "decode_32k", "lp+int8", "quant"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--cells", default=None,
+                    help="comma-separated indices into CELLS")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import RESULTS, lower_cell
+    out_path = os.path.join(RESULTS, "perf_log.json")
+    log = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            log = json.load(f)
+
+    idxs = (list(range(len(CELLS))) if args.cells is None
+            else [int(i) for i in args.cells.split(",")])
+    for i in idxs:
+        arch, shape, label, mode = CELLS[i]
+        key = f"{args.tag}/{arch}/{shape}/{label}"
+        if key in log:
+            print(f"[cached] {key}")
+            continue
+        override = None
+        lp = True
+        if mode == "quant":
+            override = lambda p: dataclasses.replace(p, quant=True)
+        elif mode == "nolp":
+            lp = False
+        print(f"[lower] {key}", flush=True)
+        try:
+            rec = lower_cell(arch, shape, lp=lp, policy_override=override)
+        except Exception as e:
+            import traceback; traceback.print_exc()
+            rec = {"error": str(e)[:400]}
+        log[key] = rec
+        with open(out_path, "w") as f:
+            json.dump(log, f, indent=1)
+        if "roofline" in rec:
+            r = rec["roofline"]
+            print(f"  {r['bottleneck']} t=({r['t_compute_s']:.4f},"
+                  f"{r['t_memory_s']:.4f},{r['t_collective_s']:.4f})s "
+                  f"ops={int(r['coll_ops'])} "
+                  f"peak={rec['memory'].get('peak_gb', -1):.2f}GB "
+                  f"roofline={r['roofline_fraction']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

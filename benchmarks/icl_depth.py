@@ -1,0 +1,38 @@
+"""Paper Table 1 — in-context-learning accuracy vs effective depth.
+
+The ICL proxy: per-sequence random feature->class maps demonstrated
+in-context (repro.data.synthetic); accuracy on the late answer slots is the
+analogue of the 5-shot benchmark average. Reproduces the qualitative claim:
+accuracy declines gradually with LP, then drops sharply past a threshold.
+"""
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core.lp import plan_for_depth
+from repro.model import transformer as T
+
+
+def run(*, train_steps: int = 1200):
+    params = C.train_bench_model(train_steps)
+    n = C.BENCH_CFG.n_layers
+    ms0 = T.build_structure(C.BENCH_CFG, tp=1)
+    rows = [{"eff_depth": n, "kind": "base",
+             "icl_acc": round(C.eval_icl(params, ms0), 4),
+             "ppl": round(C.eval_ppl(params, ms0), 3)}]
+    print(f"base     depth={n:2d} icl={rows[0]['icl_acc']:.4f} "
+          f"ppl={rows[0]['ppl']:.3f}")
+    for depth in range(n - 1, n - 6, -1):
+        plan = plan_for_depth(C.BENCH_CFG, depth, end=n - 1)
+        ms, p = C.params_with_plan(params, plan)
+        acc = C.eval_icl(p, ms)
+        ppl = C.eval_ppl(p, ms)
+        rows.append({"eff_depth": depth, "kind": "lp",
+                     "icl_acc": round(acc, 4), "ppl": round(ppl, 3)})
+        print(f"LP       depth={depth:2d} icl={acc:.4f} ppl={ppl:.3f}")
+    out = {"rows": rows}
+    C.save_result("icl_depth", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 6 — perplexity when running pairs of consecutive layers in
+parallel, as a function of Δ (layers merged) and the end index of the
+parallelised interval."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common as C
+from repro.core.lp import LPPlan, plan_range
+
+
+def run(*, train_steps: int = 1200):
+    params = C.train_bench_model(train_steps)
+    n = C.BENCH_CFG.n_layers
+    ms0 = __import__("repro.model.transformer", fromlist=["build_structure"]) \
+        .build_structure(C.BENCH_CFG, tp=1)
+    base = C.eval_ppl(params, ms0)
+    rows = []
+    for end in (n, n - 1):
+        for n_pairs in range(1, (end // 2) + 1):
+            start = end - 2 * n_pairs
+            if start < 0:
+                continue
+            plan = plan_range(C.BENCH_CFG, start, end)
+            plan = LPPlan(plan.pairs[-n_pairs:])
+            ms, p = C.params_with_plan(params, plan)
+            ppl = C.eval_ppl(p, ms)
+            rows.append({"end": end, "delta": plan.delta,
+                         "eff_depth": ms.effective_depth,
+                         "ppl": round(ppl, 3)})
+            print(f"end={end:2d} Δ={plan.delta:2d} "
+                  f"eff_depth={ms.effective_depth:2d} ppl={ppl:.3f}")
+    out = {"base_ppl": base, "rows": rows}
+    C.save_result("lp_ppl_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,106 @@
+"""Paper Fig. 7/8 + Table 3 + Appendix C — inference speed and the source
+of the acceleration.
+
+Two measurements, both on an 8-host-device mesh (subprocess):
+  (a) STRUCTURAL (the dry-run analogue of the paper's flame graphs):
+      all-reduce count + wire bytes of one decode step, prefill and train
+      micro, vanilla vs LP — LP must remove exactly 2 ARs per pair.
+  (b) WALL-CLOCK: decode-step latency on the CPU mesh (collectives are
+      real inter-device copies here), vanilla vs LP across Δ.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks import common as C
+
+_CHILD = r"""
+import json, time
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduced_config
+from repro.core.lp import LPPlan, plan_range
+from repro.model import transformer as T
+from repro.model import stack as STK
+from repro.serve.engine import ServeConfig, make_sharded_serve_step
+from repro.analysis.roofline import collective_bytes
+
+cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=12)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+MAXLEN = 512
+BATCH = 8
+
+def build(plan):
+    ms = T.build_structure(cfg, plan=plan, tp=4)
+    sv = ServeConfig(max_len=MAXLEN, kv_mode="heads", cache_dtype=jnp.float32)
+    fn, c_abs, c_specs, pc = make_sharded_serve_step(ms, mesh, sv, batch=BATCH)
+    params = T.init_params(ms, jax.random.PRNGKey(0))
+    caches = jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), c_abs)
+    tok = jnp.zeros((BATCH,), jnp.int32)
+    key = jax.random.PRNGKey(1)
+    return ms, fn, params, caches, tok, key
+
+rows = []
+for n_pairs in (0, 2, 4, 6):
+    plan = LPPlan(plan_range(cfg, 0, 12).pairs[:n_pairs])
+    ms, fn, params, caches, tok, key = build(plan)
+    # (a) structural: collective counts from compiled HLO (scans unrolled)
+    STK.set_scan_unroll(True)
+    try:
+        low = fn.lower(params, tok, caches, jnp.int32(64), key)
+        txt = low.compile().as_text()
+    finally:
+        STK.set_scan_unroll(False)
+    coll = collective_bytes(txt)
+    # (b) wall clock: median of 30 steps after warmup
+    nxt, caches = fn(params, tok, caches, jnp.int32(64), key)  # compile+warm
+    jax.block_until_ready(nxt)
+    times = []
+    for i in range(30):
+        t0 = time.perf_counter()
+        nxt, caches = fn(params, nxt, caches, jnp.int32(65 + i), key)
+        jax.block_until_ready(nxt)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    med = times[len(times) // 2]
+    rows.append({
+        "delta": plan.delta,
+        "eff_depth": ms.effective_depth,
+        "ar_count": int(coll.get("count:all-reduce", 0)),
+        "coll_bytes": coll.get("total", 0.0),
+        "decode_ms": round(med * 1e3, 3),
+    })
+print("RESULT " + json.dumps(rows))
+"""
+
+
+def run():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
+                       text=True, env=env, timeout=1200)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rows = json.loads([l for l in r.stdout.splitlines()
+                       if l.startswith("RESULT")][0][7:])
+    base = rows[0]
+    print(f"{'Δ':>3s} {'depth':>5s} {'ARs':>4s} {'collGB':>8s} "
+          f"{'decode ms':>10s} {'speedup':>8s}")
+    for row in rows:
+        sp = base["decode_ms"] / row["decode_ms"]
+        row["speedup"] = round(sp, 3)
+        print(f"{row['delta']:3d} {row['eff_depth']:5d} {row['ar_count']:4d} "
+              f"{row['coll_bytes'] / 1e9:8.4f} {row['decode_ms']:10.3f} "
+              f"{sp:8.3f}x")
+    # The paper's structural claim: 2 fewer ARs per pair.
+    for row in rows[1:]:
+        pairs = row["delta"] // 2
+        assert base["ar_count"] - row["ar_count"] == 2 * pairs, (base, row)
+    C.save_result("lp_speed", {"rows": rows})
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

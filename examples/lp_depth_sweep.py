@@ -1,0 +1,60 @@
+"""Example: the accuracy/latency trade-off of LP at serving time.
+
+    PYTHONPATH=src python examples/lp_depth_sweep.py
+
+Trains a small model once, then sweeps the effective depth (the paper's Δ
+knob), reporting perplexity and the structural decode-cost proxy (number of
+TP sync points per token = 2 x effective depth) — a miniature of the
+paper's Fig. 1 trade-off curve.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core.lp import lp_convert, plan_for_depth
+from repro.data import DataConfig, SynthConfig, eval_ppl_batch, make_source
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.train import OptConfig, TrainConfig
+from repro.train.trainer import (_leaf_meta, from_flat_global, init_state,
+                                 make_train_step)
+
+PC = ParallelContext()
+
+
+def main():
+    cfg = reduced_config(get_config("yi-6b"), n_layers=10)
+    ms = T.build_structure(cfg, tp=1)
+    tc = TrainConfig(opt=OptConfig(lr=2e-3, warmup_steps=20, total_steps=250))
+    state = init_state(ms, jax.random.PRNGKey(0), PC, tc)
+    step = jax.jit(make_train_step(ms, PC, tc), donate_argnums=(0,))
+    sc = SynthConfig(vocab_size=cfg.vocab_size)
+    src = make_source(DataConfig(seq_len=64, global_batch=8), sc)
+    for s in range(250):
+        state, m = step(state, src.batch_at(s))
+    print(f"trained: final loss {float(m['loss']):.3f}")
+
+    tmpl, treedef, infos = _leaf_meta(ms)
+    params = treedef.unflatten([
+        from_flat_global(f, li.pd.shape, li.pspec, PC)
+        for f, li in zip(treedef.flatten_up_to(state["master"]), infos)])
+    layers = [jax.tree.map(lambda v: v[i], params["segments"][0])
+              for i in range(cfg.n_layers)]
+
+    def ppl(p, m_):
+        b = eval_ppl_batch(jax.random.PRNGKey(99), sc, 64, 8)
+        _, parts = T.loss_fn(p, b, ms=m_, pc=PC)
+        return float(jnp.exp(parts["xent"]))
+
+    print(f"\n{'depth':>6s} {'Δ':>3s} {'syncs/token':>12s} {'ppl':>8s}")
+    for depth in range(cfg.n_layers, cfg.n_layers - 5, -1):
+        plan = plan_for_depth(cfg, depth)
+        segs, seg_params = lp_convert(cfg, layers, plan)
+        p = dict(params, segments=seg_params)
+        m_ = T.build_structure(cfg, plan=plan, tp=1)
+        print(f"{depth:6d} {plan.delta:3d} {2 * depth:12d} "
+              f"{ppl(p, m_):8.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.analysis.roofline import Roofline, collective_bytes, model_flops  # noqa: F401

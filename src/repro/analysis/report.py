@@ -1,0 +1,72 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m repro.analysis.report
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results")
+
+
+def load(name):
+    p = os.path.join(RESULTS, f"{name}.json")
+    if not os.path.exists(p):
+        return {}
+    with open(p) as f:
+        return json.load(f)
+
+
+def roofline_table(d, *, title):
+    lines = [f"### {title}", "",
+             "| cell | bneck | t_comp (s) | t_mem (s) | t_coll (s) | "
+             "coll ops | peak GB | MF/HF | roofline |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for k in sorted(d):
+        v = d[k]
+        if "skipped" in v:
+            lines.append(f"| {k} | — | — | — | — | — | — | — | "
+                         f"skip: {v['skipped'][:40]} |")
+            continue
+        if "error" in v:
+            lines.append(f"| {k} | ERROR {v['error'][:60]} | | | | | | | |")
+            continue
+        r = v["roofline"]
+        m = v["memory"].get("peak_gb", float("nan"))
+        lines.append(
+            f"| {k} | {r['bottleneck']} | {r['t_compute_s']:.4f} | "
+            f"{r['t_memory_s']:.4f} | {r['t_collective_s']:.4f} | "
+            f"{int(r.get('coll_ops', 0))} | {m:.2f} | "
+            f"{r['useful_fraction']:.3f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def summary_stats(d):
+    ok = [v for v in d.values() if "roofline" in v]
+    sk = [v for v in d.values() if "skipped" in v]
+    er = [v for v in d.values() if "error" in v]
+    over = [f"{v['arch']}/{v['shape']}" for v in ok
+            if v["memory"].get("peak_gb", 0) > 16]
+    return (f"{len(ok)} compiled, {len(sk)} documented skips, "
+            f"{len(er)} errors; cells over the 16 GB HBM budget: "
+            f"{', '.join(over) if over else 'none'}")
+
+
+def main():
+    for name, title in [("dryrun", "Single pod — (data=16, model=16), 256 chips"),
+                        ("dryrun_mp", "Multi-pod — (pod=2, data=16, model=16), 512 chips")]:
+        d = load(name)
+        if not d:
+            print(f"[{name}: no results yet]\n")
+            continue
+        print(roofline_table(d, title=title))
+        print()
+        print(f"**Summary:** {summary_stats(d)}")
+        print()
+
+
+if __name__ == "__main__":
+    main()

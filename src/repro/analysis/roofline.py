@@ -1,0 +1,240 @@
+"""Roofline analysis from the compiled dry-run artifact.
+
+TPU v5e target constants (per chip):
+    peak bf16 compute : 197 TFLOP/s
+    HBM bandwidth     : 819 GB/s
+    ICI link bandwidth: ~50 GB/s   (intra-pod; DCI cross-pod is ~10x slower)
+
+The three terms (seconds, per device, per step):
+    compute    = HLO_FLOPs / peak
+    memory     = HLO_bytes_accessed / hbm_bw
+    collective = wire_bytes / ici_bw
+
+cost_analysis() of the SPMD-partitioned module reports per-device FLOPs and
+bytes. collective bytes are NOT in cost_analysis — ``collective_bytes``
+parses the compiled HLO and sums result-shape bytes of every collective op
+(all-reduce counts 2x for the ring's reduce+broadcast halves; cross-pod
+groups are reported separately because they traverse DCI).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s per chip (conservative single-link)
+DCI_BW = 5e9              # bytes/s cross-pod (assumed 10x slower than ICI)
+COLL_LAT = 1e-6           # per-collective launch+hop latency (the term the
+                          # paper's LP attacks at decode: 2 ARs/layer -> 1)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<ty>\w+)\[(?P<dims>[\d,]*)\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+
+_TUPLE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(ty: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(ty, 4)
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group (ring length) for a collective op."""
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota format [n_groups,group_size]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip() != ""]), 1)
+    return 2  # unknown: conservative
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind, parsed from (SPMD-
+    partitioned, hence per-device-shaped) HLO.
+
+    Ring-algorithm wire model per device, with n = replica-group size and
+    R = RESULT bytes (per-device local shape):
+      all-gather          R is the gathered (full) tensor: (n-1)/n * R
+      reduce-scatter      R is the scattered shard:        (n-1) * R
+      all-reduce          R is the full tensor:          2*(n-1)/n * R
+      all-to-all          (n-1)/n * R
+      collective-permute  R (one neighbour hop)
+    """
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        if m.group("ty"):
+            b = _shape_bytes(m.group("ty"), m.group("dims"))
+        else:  # tuple result: sum elements
+            head = line.split(op)[0]
+            b = sum(_shape_bytes(t, d) for t, d in _TUPLE_ELEM_RE.findall(head))
+        n = _group_size(line)
+        if op == "all-reduce":
+            wire = 2.0 * b * (n - 1) / n
+        elif op == "reduce-scatter":
+            wire = float(b) * (n - 1)
+        elif op == "collective-permute":
+            wire = float(b)
+        else:  # all-gather, all-to-all
+            wire = float(b) * (n - 1) / n
+        out[op] = out.get(op, 0.0) + wire
+        out["total"] = out.get("total", 0.0) + wire
+        out[f"count:{op}"] = out.get(f"count:{op}", 0) + 1
+        out["n_ops"] = out.get("n_ops", 0) + 1
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll: Dict[str, float]
+    model_flops: float = 0.0
+    chips: int = 256
+    useful_bytes: float = 0.0  # per-device payload bytes (weights + cache)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def n_coll(self) -> float:
+        return self.coll.get("n_ops", 0.0)
+
+    @property
+    def t_collective(self) -> float:
+        """Wire time + per-op latency. At decode (tiny payloads) the latency
+        term dominates — exactly the cost LP halves."""
+        return self.coll.get("total", 0.0) / ICI_BW + COLL_LAT * self.n_coll
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_fraction(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs (per device)."""
+        per_dev = self.model_flops / self.chips
+        return per_dev / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the binding roofline achieved: time the step would
+        take if it only did USEFUL work at the respective peak, over the
+        bound time. For compute-bound steps this is MFU; for bandwidth-bound
+        steps (decode) it is the fraction of HBM bandwidth spent on payload
+        (weights + cache)."""
+        per_dev = self.model_flops / self.chips
+        t_useful = max(per_dev / PEAK_FLOPS, self.useful_bytes / HBM_BW)
+        if self.t_bound == 0:
+            return 0.0
+        return t_useful / self.t_bound
+
+    def row(self) -> Dict[str, object]:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_gflops": self.flops / 1e9,
+            "hlo_gbytes": self.bytes_accessed / 1e9,
+            "coll_gbytes": self.coll.get("total", 0.0) / 1e9,
+            "coll_ops": self.n_coll,
+            "t_coll_latency_s": COLL_LAT * self.n_coll,
+            "model_gflops_total": self.model_flops / 1e9,
+            "useful_fraction": self.useful_fraction,
+            "useful_gbytes": self.useful_bytes / 1e9,
+            "bw_utilization": (self.useful_bytes / self.bytes_accessed
+                               if self.bytes_accessed else 0.0),
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def attention_flops(cfg, shape, *, tp: int = 16) -> float:
+    """GLOBAL attention-core FLOPs for one step (additive
+    correction: the tiled XLA core hides its kv-scan trip count from
+    cost_analysis, so the dry-run adds the true core FLOPs analytically).
+
+    qk^T + pv = 4 * S_kv_visible * hd flops per (query, head).
+    """
+    specs = cfg.layer_specs()
+    S = shape.seq_len
+    hd = cfg.head_dim
+    hq = -(-max(cfg.n_heads, 1) // tp) * tp  # padded global head count
+    total = 0.0
+    for spec in specs:
+        m = spec.mixer
+        if not m.startswith("attn"):
+            continue
+        if shape.step == "decode":
+            if m == "attn_local" and cfg.window:
+                kv = min(cfg.window, S)
+            elif m == "attn_chunked" and cfg.chunk:
+                kv = min(cfg.chunk, S)
+            else:
+                kv = S
+            per_seq = 4.0 * kv * hd * hq
+            total += per_seq * shape.global_batch
+            if spec.cross_attn:
+                total += 4.0 * cfg.enc_seq * hd * hq * shape.global_batch
+        else:
+            if m == "attn_local" and cfg.window:
+                vis = S * min(cfg.window, S)  # ~window per query
+            elif m == "attn_chunked" and cfg.chunk:
+                c = min(cfg.chunk, S)
+                vis = (S // max(c, 1)) * (c * (c + 1) / 2)
+            elif m == "attn_bidir":
+                vis = S * S
+            else:
+                vis = S * (S + 1) / 2  # causal
+            per_seq = 4.0 * vis * hd * hq
+            total += per_seq * shape.global_batch
+            if spec.cross_attn:
+                total += 4.0 * S * cfg.enc_seq * hd * hq * shape.global_batch
+    if cfg.enc_layers and shape.step != "decode":
+        total += cfg.enc_layers * 4.0 * cfg.enc_seq ** 2 * hd * hq * shape.global_batch
+    # train: forward + backward (2x fwd for the two grad matmuls each)
+    if shape.step == "train":
+        total *= 3.0
+    return total  # GLOBAL; caller divides by chip count
+
+
+def model_flops(cfg, shape, *, lp_plan=None) -> float:
+    """MODEL_FLOPS per step: 6·N·D train, 2·N·D prefill, 2·N·B decode
+    (N = active params excl. embeddings — the standard MFU convention)."""
+    n_active = cfg.param_count(active_only=True)
+    n_embed = cfg.vocab_size * cfg.d_model
+    n = n_active - n_embed  # lm-head matmul is counted, lookup is not
+    if shape.step == "train":
+        return 6.0 * n * shape.tokens
+    if shape.step == "prefill":
+        return 2.0 * n * shape.tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

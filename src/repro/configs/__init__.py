@@ -1,0 +1,44 @@
+"""Architecture & shape registry. Importing this package registers all
+assigned architectures."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    LayerSpec,
+    get_config,
+    list_archs,
+    reduced_config,
+    register,
+)
+from repro.configs.shapes import (  # noqa: F401
+    ALL_SHAPES,
+    SHAPES,
+    ShapeConfig,
+    applicable,
+    cells,
+)
+
+# Registration side effects — one module per assigned architecture.
+from repro.configs import (  # noqa: F401
+    dbrx_132b,
+    falcon_mamba_7b,
+    granite_34b,
+    llama4_scout,
+    minicpm_2b,
+    paligemma_3b,
+    recurrentgemma_9b,
+    tinyllama_1b,
+    whisper_medium,
+    yi_6b,
+)
+
+ASSIGNED_ARCHS = (
+    "yi-6b",
+    "minicpm-2b",
+    "granite-34b",
+    "tinyllama-1.1b",
+    "whisper-medium",
+    "recurrentgemma-9b",
+    "falcon-mamba-7b",
+    "llama4-scout-17b-a16e",
+    "dbrx-132b",
+    "paligemma-3b",
+)

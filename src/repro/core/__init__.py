@@ -1,0 +1,17 @@
+"""The paper's contribution: Layer Parallelism (retraining-free layer-pair
+parallelization) + the effective-depth intervention toolkit."""
+from repro.core.lp import (  # noqa: F401
+    EMPTY_PLAN,
+    LPPlan,
+    default_plan,
+    extract_layers,
+    finetune_mask,
+    lp_convert,
+    merge_groups,
+    pairable,
+    plan_for_depth,
+    plan_range,
+    replan,
+    segment_params,
+)
+from repro.core import interventions  # noqa: F401

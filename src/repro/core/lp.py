@@ -1,0 +1,234 @@
+"""Layer Parallelism (LP) — the paper's contribution.
+
+LP rewrites the computational graph of a *pretrained* model so that pairs of
+consecutive transformer layers execute as ONE wide layer under tensor
+parallelism (paper Fig. 2b / Fig. 5):
+
+    a = x + A_k(LN1_k x) + A_{k+1}(LN1_{k+1} x)     # ONE all-reduce
+    y = a + F_k(LN2_k a) + F_{k+1}(LN2_{k+1} a)     # ONE all-reduce
+
+halving the number of TP sync points over the paired range. The merge is
+*retraining-free*: the pair's weights are the two layers' weights stacked on
+a leading pair axis (the "stacked QKV projection" / "concatenated
+up-projection" of the paper are exactly this stacking — see
+repro.model.attention._proj_pair and repro.model.mlp.mlp_forward).
+
+This module owns:
+  * ``LPPlan`` — which layers pair (the paper's Δ / effective-depth knob),
+  * plan constructors (contiguous range, target effective depth),
+  * the retraining-free weight merge  per-layer params -> grouped/segmented
+    params (and its inverse, for checkpoint interop),
+  * the fine-tune mask for Table-2 style LP-only fine-tuning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.model import blocks as B
+from repro.model import stack as ST
+from repro.model.params import stack_trees
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Plans
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LPPlan:
+    """An LP pairing plan: which consecutive layer pairs run in parallel."""
+
+    pairs: Tuple[Tuple[int, int], ...] = ()
+
+    @property
+    def delta(self) -> int:
+        """The paper's Δ — number of layers merged (2 per pair)."""
+        return 2 * len(self.pairs)
+
+    def effective_depth(self, n_layers: int) -> int:
+        """Minimum sequential operations input->output (paper Table 1)."""
+        return n_layers - len(self.pairs)
+
+    def paired_layers(self) -> set:
+        s = set()
+        for i, j in self.pairs:
+            s.update((i, j))
+        return s
+
+    def __post_init__(self):
+        seen = set()
+        for i, j in self.pairs:
+            assert j == i + 1, f"LP pairs must be consecutive, got {(i, j)}"
+            assert i not in seen and j not in seen, f"overlapping pair {(i, j)}"
+            seen.update((i, j))
+
+
+EMPTY_PLAN = LPPlan(())
+
+
+def pairable(cfg: ArchConfig, i: int,
+             specs: Optional[Sequence[LayerSpec]] = None) -> bool:
+    """Can layers (i, i+1) LP-pair? Requires structurally equal templates
+    (recurrentgemma's lone attention layer cannot pair with an RG-LRU layer;
+    llama4's chunked/global attention CAN pair — heterogeneous attention
+    kinds share a template)."""
+    specs = list(specs if specs is not None else cfg.layer_specs())
+    if i < 0 or i + 1 >= len(specs):
+        return False
+    return ST.template_compatible(cfg, specs[i], specs[i + 1])
+
+
+def plan_range(cfg: ArchConfig, start: int, end: int) -> LPPlan:
+    """Greedily pair consecutive compatible layers within [start, end).
+
+    Layers whose successor is template-incompatible stay sequential and the
+    scan resumes at the next index — e.g. recurrentgemma's (rec, rec, attn)
+    period yields the (rec, rec) pair per period with the attention layer
+    untouched.
+    """
+    specs = cfg.layer_specs()
+    end = min(end, cfg.n_layers)
+    pairs: List[Tuple[int, int]] = []
+    i = max(start, 0)
+    while i + 1 < end:
+        if pairable(cfg, i, specs):
+            pairs.append((i, i + 1))
+            i += 2
+        else:
+            i += 1
+    return LPPlan(tuple(pairs))
+
+
+def plan_for_depth(cfg: ArchConfig, eff_depth: int, *,
+                   end: Optional[int] = None) -> LPPlan:
+    """Pick the pairing whose effective depth == ``eff_depth``, ending the
+    paired range at ``end`` (paper protocol: the PPL-optimal end index, or
+    the 4th-to-last layer Qwen-style by default) and growing it backwards.
+    """
+    n = cfg.n_layers
+    want = n - eff_depth  # number of pairs
+    if want <= 0:
+        return EMPTY_PLAN
+    if end is None:
+        end = n - 4 if n >= 12 else n  # tiny (smoke) models: use the full stack
+    end = min(end, n)
+    # Grow the range backwards until it contains `want` pairs (compatibility
+    # holes make the range longer than 2*want for hybrid archs).
+    for start in range(end - 2 * want, -1, -1):
+        plan = plan_range(cfg, start, end)
+        if len(plan.pairs) >= want:
+            return LPPlan(plan.pairs[-want:])
+    plan = plan_range(cfg, 0, end)
+    assert len(plan.pairs) >= want, (
+        f"{cfg.name}: cannot reach effective depth {eff_depth} "
+        f"(max pairs before layer {end} = {len(plan.pairs)})")
+    return LPPlan(plan.pairs[-want:])
+
+
+def default_plan(cfg: ArchConfig, lp_fraction: float = 0.5) -> LPPlan:
+    """A sensible production default: pair the middle ``lp_fraction`` of the
+    stack (the paper finds early layers and the last ~2-4 layers fragile —
+    Fig. 3e / Fig. 6)."""
+    n = cfg.n_layers
+    span = int(n * lp_fraction)
+    start = max(2, (n - span) // 2)
+    end = min(n - 2, start + span)
+    return plan_range(cfg, start, end)
+
+
+# ---------------------------------------------------------------------------
+# Retraining-free weight merge
+# ---------------------------------------------------------------------------
+
+def merge_groups(layer_params: Sequence[PyTree], groups: Sequence[B.Group]) -> List[PyTree]:
+    """Per-layer trained params -> one tree per group.
+
+    THE retraining-free merge: a pair's params are the two layers' params
+    stacked on a new leading axis. Under the pair einsums this realises the
+    paper's merged projections — QKV stacked along the head axis, FFN up
+    projections concatenated along d_ff, per-path LayerNorms kept — without
+    touching a single weight value.
+    """
+    out = []
+    for g in groups:
+        if g.pair:
+            i, j = g.layer_ids
+            out.append(stack_trees([layer_params[i], layer_params[j]]))
+        else:
+            out.append(layer_params[g.layer_ids[0]])
+    return out
+
+
+def segment_params(group_params: Sequence[PyTree],
+                   segments: Sequence[ST.Segment]) -> List[PyTree]:
+    """Group trees -> per-segment stacked trees (leading scan axis)."""
+    out, k = [], 0
+    for seg in segments:
+        if seg.count == 1:
+            out.append(group_params[k])
+        else:
+            out.append(stack_trees(list(group_params[k:k + seg.count])))
+        k += seg.count
+    return out
+
+
+def lp_convert(cfg: ArchConfig, layer_params: Sequence[PyTree], plan: LPPlan
+               ) -> Tuple[List[ST.Segment], List[PyTree]]:
+    """End-to-end conversion of a trained layer stack to its LP form.
+
+    Returns (segments, seg_params) ready for repro.model.stack application.
+    ``plan.pairs == ()`` returns the vanilla sequential stack (bit-exact).
+    """
+    groups = ST.make_groups(cfg, plan.pairs)
+    segments = ST.make_segments(groups)
+    return segments, segment_params(merge_groups(layer_params, groups), segments)
+
+
+def extract_layers(seg_params: Sequence[PyTree],
+                   segments: Sequence[ST.Segment]) -> List[PyTree]:
+    """Inverse of ``lp_convert``'s packing: per-layer param trees in original
+    layer order (for checkpoint interop and plan changes between runs)."""
+    layers: List[Tuple[int, PyTree]] = []
+    for sp, seg in zip(seg_params, segments):
+        for c in range(seg.count):
+            gp = jax.tree.map(lambda v: v[c], sp) if seg.count > 1 else sp
+            if seg.group.pair:
+                base = seg.group.layer_ids[0] + 2 * c
+                layers.append((base, jax.tree.map(lambda v: v[0], gp)))
+                layers.append((base + 1, jax.tree.map(lambda v: v[1], gp)))
+            else:
+                base = seg.group.layer_ids[0] + c
+                layers.append((base, gp))
+    layers.sort(key=lambda t: t[0])
+    assert [i for i, _ in layers] == list(range(len(layers)))
+    return [p for _, p in layers]
+
+
+def replan(cfg: ArchConfig, seg_params: Sequence[PyTree],
+           segments: Sequence[ST.Segment], new_plan: LPPlan
+           ) -> Tuple[List[ST.Segment], List[PyTree]]:
+    """Re-pair an existing (possibly already LP'd) stack under a new plan —
+    the elastic-depth path: serve with different Δ without reloading."""
+    return lp_convert(cfg, extract_layers(seg_params, segments), new_plan)
+
+
+# ---------------------------------------------------------------------------
+# LP-only fine-tuning mask (paper Table 2)
+# ---------------------------------------------------------------------------
+
+def finetune_mask(seg_params: Sequence[PyTree],
+                  segments: Sequence[ST.Segment]) -> List[PyTree]:
+    """1.0 where a parameter belongs to an LP pair (trainable in the
+    recovery fine-tune), 0.0 elsewhere. Same structure as seg_params."""
+    out = []
+    for sp, seg in zip(seg_params, segments):
+        flag = 1.0 if seg.group.pair else 0.0
+        out.append(jax.tree.map(lambda v: jnp.full((), flag, jnp.float32), sp))
+    return out

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticSource, TokenFileSource, make_source  # noqa: F401
+from repro.data.synthetic import SynthConfig, eval_ppl_batch, icl_eval_batch, lm_batch  # noqa: F401

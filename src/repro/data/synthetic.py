@@ -1,0 +1,163 @@
+"""Structured synthetic corpus + ICL tasks.
+
+No pretrained weights or external datasets exist offline, so the paper's
+perplexity (RedPajama) and ICL (MMLU/ARC/...) measurements are reproduced
+QUALITATIVELY on models trained in-container on this corpus. It is designed
+so that (a) a ~100M model trains to far-below-uniform perplexity, and (b)
+there are measurable in-context tasks whose accuracy degrades gracefully
+under effective-depth interventions — the two properties the paper's
+experiments need.
+
+Mixture (per sequence, deterministic in the PRNG key):
+  * trigram language — a fixed random trigram chain with Zipfian marginals
+    (general "language competence"; perplexity metric)
+  * copy spans — [COPY] pattern [SEP] pattern (induction circuitry)
+  * k-shot ICL classification — k (x -> y) demonstrations of a per-sequence
+    random class map followed by a query; answer-token accuracy is the
+    Table-1 proxy metric
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class SynthConfig:
+    vocab_size: int = 512
+    # reserved control tokens at the top of the vocab
+    n_special: int = 8
+    # trigram LM
+    branch: int = 4          # candidate continuations per (a, b) context
+    zipf: float = 1.2
+    # ICL classification
+    n_classes: int = 8
+    n_features: int = 32
+
+    @property
+    def copy_tok(self) -> int:
+        return self.vocab_size - 1
+
+    @property
+    def sep_tok(self) -> int:
+        return self.vocab_size - 2
+
+    @property
+    def icl_tok(self) -> int:
+        return self.vocab_size - 3
+
+    @property
+    def arrow_tok(self) -> int:
+        return self.vocab_size - 4
+
+    @property
+    def base_vocab(self) -> int:
+        return self.vocab_size - self.n_special
+
+
+def _zipf_probs(n: int, alpha: float):
+    r = jnp.arange(1, n + 1, dtype=jnp.float32)
+    p = r ** (-alpha)
+    return p / p.sum()
+
+
+def _trigram_tables(key, sc: SynthConfig):
+    """Deterministic trigram structure: for every (a%m, b%m) context, a set
+    of ``branch`` allowed continuations with Zipfian weights. m keeps the
+    table small (structure, not memorisation)."""
+    m = min(sc.base_vocab, 64)
+    k1, k2 = jax.random.split(key)
+    nexts = jax.random.randint(k1, (m, m, sc.branch), 0, sc.base_vocab)
+    w = _zipf_probs(sc.branch, sc.zipf)
+    return m, nexts, w
+
+
+def trigram_sequence(key, sc: SynthConfig, seq_len: int):
+    """One trigram-language sequence [seq_len] (int32)."""
+    m, nexts, w = _trigram_tables(jax.random.PRNGKey(17), sc)  # fixed language
+    k0, k1 = jax.random.split(key)
+    init = jax.random.randint(k0, (2,), 0, sc.base_vocab)
+
+    def step(carry, k):
+        a, b = carry
+        cand = nexts[a % m, b % m]
+        c = cand[jax.random.choice(k, sc.branch, p=w)]
+        return (b, c), c
+
+    keys = jax.random.split(k1, seq_len)
+    (_, _), toks = lax.scan(step, (init[0], init[1]), keys)
+    return toks.astype(jnp.int32)
+
+
+def copy_sequence(key, sc: SynthConfig, seq_len: int):
+    """[COPY] p_1..p_L [SEP] p_1..p_L ... tiled to seq_len."""
+    L = (seq_len - 2) // 2
+    pat = jax.random.randint(key, (L,), 0, sc.base_vocab)
+    s = jnp.concatenate([jnp.array([sc.copy_tok]), pat,
+                         jnp.array([sc.sep_tok]), pat])
+    return jnp.pad(s, (0, seq_len - s.shape[0]),
+                   constant_values=sc.sep_tok)[:seq_len].astype(jnp.int32)
+
+
+def icl_sequence(key, sc: SynthConfig, seq_len: int, *, return_meta=False):
+    """[ICL] x1 -> y1 . x2 -> y2 . ... xq -> yq, with a per-sequence random
+    map features -> classes. Answer positions are where y tokens sit."""
+    k_map, k_x = jax.random.split(key)
+    fmap = jax.random.randint(k_map, (sc.n_features,), 0, sc.n_classes)
+    n_pairs = (seq_len - 1) // 3
+    xs = jax.random.randint(k_x, (n_pairs,), 0, sc.n_features)
+    ys = fmap[xs]
+    x_toks = xs.astype(jnp.int32)                      # features: low ids
+    y_toks = (sc.base_vocab - sc.n_classes + ys).astype(jnp.int32)
+    arrow = jnp.full((n_pairs,), sc.arrow_tok, jnp.int32)
+    trip = jnp.stack([x_toks, arrow, y_toks], axis=1).reshape(-1)
+    s = jnp.concatenate([jnp.array([sc.icl_tok], jnp.int32), trip])
+    s = jnp.pad(s, (0, max(0, seq_len - s.shape[0])),
+                constant_values=sc.sep_tok)[:seq_len]
+    if not return_meta:
+        return s
+    # positions of the answer tokens (predict y given "x ->")
+    ans_pos = 1 + 3 * jnp.arange(n_pairs) + 2
+    return s, ans_pos, y_toks
+
+
+@partial(jax.jit, static_argnames=("sc", "seq_len", "batch"))
+def lm_batch(key, sc: SynthConfig, seq_len: int, batch: int) -> Dict[str, jax.Array]:
+    """Mixture batch {"tokens","labels"} for LM training (labels shifted)."""
+    keys = jax.random.split(key, batch)
+
+    def one(k):
+        kk, ks = jax.random.split(k)
+        kind = jax.random.randint(ks, (), 0, 4)  # 0,1: trigram 2: copy 3: icl
+        return lax.switch(
+            jnp.clip(kind - 1, 0, 2),
+            [lambda: trigram_sequence(kk, sc, seq_len + 1),
+             lambda: copy_sequence(kk, sc, seq_len + 1),
+             lambda: icl_sequence(kk, sc, seq_len + 1)],
+        )
+
+    toks = jax.vmap(one)(keys)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@partial(jax.jit, static_argnames=("sc", "seq_len", "batch"))
+def eval_ppl_batch(key, sc: SynthConfig, seq_len: int, batch: int):
+    """Pure trigram-language batch — the perplexity eval set (the analogue
+    of the paper's RedPajama test split)."""
+    keys = jax.random.split(key, batch)
+    toks = jax.vmap(lambda k: trigram_sequence(k, sc, seq_len + 1))(keys)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+@partial(jax.jit, static_argnames=("sc", "seq_len", "batch"))
+def icl_eval_batch(key, sc: SynthConfig, seq_len: int, batch: int):
+    """ICL accuracy batch: tokens + answer positions + answer ids."""
+    keys = jax.random.split(key, batch)
+    toks, pos, ys = jax.vmap(
+        lambda k: icl_sequence(k, sc, seq_len, return_meta=True))(keys)
+    return {"tokens": toks, "ans_pos": pos, "ans_tok": ys}

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the perf-critical compute layers (validated in
+interpret mode on CPU; compiled on TPU). ops.py holds the jit'd wrappers,
+ref.py the pure-jnp oracles the tests allclose against."""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Decode attention Pallas kernel — one query token against a long KV cache.
+
+Decode (the paper's 1-token generation task) is HBM-bandwidth-bound: the
+whole KV cache is read once per token while the MXU does O(L*hd) work. The
+kernel streams kv tiles through VMEM with online-softmax statistics in
+scratch, emitting the GQA group of q heads that share a kv head together
+(one cache read serves g query heads — the GQA arithmetic-intensity win).
+
+Grid: (B * Hkv, nL), L innermost/sequential. The valid horizon ``t`` is a
+scalar-prefetch operand (SMEM) so cache positions beyond the current decode
+step are masked without recompiling per step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+            bl, nl, scale):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q = q_ref[0].astype(jnp.float32)                 # [g, hd]
+    k = k_ref[0].astype(jnp.float32)                 # [bl, hd]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    pos = j * bl + jax.lax.broadcasted_iota(jnp.int32, (bl,), 0)
+    s = jnp.where((pos <= t_ref[0])[None, :], s, NEG_INF)
+
+    m_prev = m_sc[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_sc[...] = l_sc[...] * corr + p.sum(axis=-1)
+    acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_sc[...] = m_new
+
+    @pl.when(j == nl - 1)
+    def _out():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, t_valid, *, block_l=256, interpret=True):
+    """q: [B, Hkv, g, hd]; k, v: [B, L, Hkv, hd]; t_valid: scalar int32.
+    Returns [B, Hkv, g, hd]."""
+    B, Hkv, g, hd = q.shape
+    L = k.shape[1]
+    bl = min(block_l, L)
+    pad = (-L) % bl
+    if pad:  # padded rows have pos > t_valid -> masked
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = L + pad
+    nl = Lp // bl
+    qr = q.reshape(B * Hkv, g, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Lp, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Lp, hd)
+    t_arr = jnp.asarray(t_valid, jnp.int32).reshape(1)
+
+    kern = functools.partial(_kernel, bl=bl, nl=nl, scale=hd ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, g, hd), q.dtype),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(B * Hkv, nl),
+            in_specs=[pl.BlockSpec((1, g, hd), lambda b, j, t: (b, 0, 0)),
+                      pl.BlockSpec((1, bl, hd), lambda b, j, t: (b, j, 0)),
+                      pl.BlockSpec((1, bl, hd), lambda b, j, t: (b, j, 0))],
+            out_specs=pl.BlockSpec((1, g, hd), lambda b, j, t: (b, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
+                            pltpu.VMEM((g,), jnp.float32),
+                            pltpu.VMEM((g, hd), jnp.float32)],
+        ),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(t_arr, qr, kr, vr)
+    return out.reshape(B, Hkv, g, hd)

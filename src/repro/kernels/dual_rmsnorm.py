@@ -1,0 +1,56 @@
+"""LP dual RMSNorm — the paper-specific fusion kernel.
+
+An LP pair needs BOTH layers' norms of the SAME residual tensor at each
+phase entry. Fusing them reads x from HBM once and writes two outputs —
+on TPU v5e this halves the HBM traffic of the norm step (the decode phases
+of LP blocks are bandwidth-bound, so the dual norm is pure win; this is the
+TPU analogue of the paper's kernel-fusion remark in Appendix C).
+
+Tiling: grid over row-tiles of the flattened [M, D] view; the full feature
+dim stays resident (D <= 8192 fp32 = 32 KB/row-tile of VMEM at bm=128 —
+well inside the ~16 MB/core budget). fp32 statistics regardless of x dtype.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, sa_ref, sb_ref, ya_ref, yb_ref, *, eps, plus_one):
+    x = x_ref[...].astype(jnp.float32)                      # [bm, D]
+    inv = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    xn = x * inv
+    sa = sa_ref[...].astype(jnp.float32)
+    sb = sb_ref[...].astype(jnp.float32)
+    if plus_one:
+        sa = sa + 1.0
+        sb = sb + 1.0
+    ya_ref[...] = (xn * sa[None, :]).astype(ya_ref.dtype)
+    yb_ref[...] = (xn * sb[None, :]).astype(yb_ref.dtype)
+
+
+def dual_rmsnorm(x, sa, sb, *, eps=1e-6, plus_one=False, block_m=128,
+                 interpret=True):
+    """x: [M, D]; sa, sb: [D] -> (ya, yb). Pads M up to a block multiple."""
+    M, D = x.shape
+    bm = min(block_m, M)
+    pad = (-M) % bm
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    Mp = M + pad
+    grid = (Mp // bm,)
+    ya, yb = pl.pallas_call(
+        partial(_kernel, eps=eps, plus_one=plus_one),
+        out_shape=(jax.ShapeDtypeStruct((Mp, D), x.dtype),
+                   jax.ShapeDtypeStruct((Mp, D), x.dtype)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, D), lambda i: (i, 0)),
+                  pl.BlockSpec((D,), lambda i: (0,)),
+                  pl.BlockSpec((D,), lambda i: (0,))],
+        out_specs=(pl.BlockSpec((bm, D), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, D), lambda i: (i, 0))),
+        interpret=interpret,
+    )(xp, sa, sb)
+    return (ya[:M], yb[:M]) if pad else (ya, yb)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dual_rmsnorm_ref(x, sa, sb, *, eps=1e-6, plus_one=False):
+    """x: [M, D]; sa, sb: [D] -> (ya, yb) both [M, D]."""
+    x32 = x.astype(jnp.float32)
+    inv = jnp.reciprocal(jnp.sqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps))
+    xn = x32 * inv
+    a = (1.0 + sa.astype(jnp.float32)) if plus_one else sa.astype(jnp.float32)
+    b = (1.0 + sb.astype(jnp.float32)) if plus_one else sb.astype(jnp.float32)
+    return (xn * a).astype(x.dtype), (xn * b).astype(x.dtype)
+
+
+def _mask(kind, qpos, kpos, *, window=0, chunk=0, prefix_len=0):
+    q = qpos[:, None]
+    k = kpos[None, :]
+    if kind == "bidir":
+        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    m = k <= q
+    if kind == "causal":
+        if prefix_len:
+            m = m | (k < prefix_len)
+        return m
+    if kind == "window":
+        return m & (q - k < window)
+    if kind == "chunk":
+        return m & (q // chunk == k // chunk)
+    raise ValueError(kind)
+
+
+def flash_attention_ref(q, k, v, *, kind="causal", window=0, chunk=0,
+                        prefix_len=0, q0=0, k0=0):
+    """q: [BH, S, hd]; k, v: [BH, T, hd] -> [BH, S, hd] (fp32 math)."""
+    S, T = q.shape[1], k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    m = _mask(kind, q0 + jnp.arange(S), k0 + jnp.arange(T),
+              window=window, chunk=chunk, prefix_len=prefix_len)
+    s = jnp.where(m[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,bth->bsh", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, t_valid):
+    """q: [B, Hkv, g, hd]; k, v: [B, L, Hkv, hd]; entries with index > t_valid
+    masked. Returns [B, Hkv, g, hd]."""
+    L = k.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bngh,btnh->bngt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    valid = jnp.arange(L)[None, None, None, :] <= t_valid
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bngt,btnh->bngh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssm_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t. a, b: [B, S, C, N]; h0: [B, C, N].
+    Returns (h_1..S [B,S,C,N], h_S)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    aT = jnp.moveaxis(a, 1, 0)
+    bT = jnp.moveaxis(b, 1, 0)
+    hT, ys = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.moveaxis(ys, 0, 1), hT

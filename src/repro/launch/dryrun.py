@@ -1,0 +1,319 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+cell over the production mesh, prove the memory/sharding story, and emit
+the roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--no-lp]
+
+Cost-accounting notes (XLA cost_analysis hides lax.scan trip counts):
+  * segment scans are UNROLLED for the dry-run (set_scan_unroll) — exact;
+  * train cells lower the accumulation MICRO-step (accum=1, batch/accum)
+    and scale the forward/backward terms by ``accum`` analytically; the
+    once-per-step optimizer/grad-reduction collectives are separated with
+    an exact byte model of the ZeRO schedule;
+  * the tiled attention core hides its kv loop -> the true core FLOPs are
+    added analytically (repro.analysis.roofline.attention_flops).
+
+Results append to benchmarks/results/dryrun*.json incrementally so a
+partial sweep survives interruption.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.roofline import (Roofline, attention_flops,
+                                     collective_bytes, model_flops)
+from repro.configs import ASSIGNED_ARCHS, SHAPES, applicable, get_config
+from repro.configs.shapes import ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_specs, build_cell_structure, cell_policy,
+                                decode_specs)
+from repro.model import stack as STK
+from repro.model import transformer as T
+from repro.serve.engine import ServeConfig, make_sharded_prefill, make_sharded_serve_step
+from repro.train import OptConfig, TrainConfig
+from repro.train.trainer import _leaf_meta, abstract_state, make_sharded_train_step
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "benchmarks", "results")
+
+
+def _attach(mesh, abs_tree, spec_tree):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(
+            a.shape, a.dtype, sharding=NamedSharding(mesh, s)),
+        abs_tree, spec_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _grad_reduction_bytes(ms, pc, tc) -> float:
+    """Exact per-device wire bytes of the once-per-step ZeRO schedule:
+    psum_scatter(fp32 grads) + all_gather(bf16 params) for regular leaves,
+    cross-pod psum for FSDP leaves, tp-psum for replicated leaves."""
+    _, _, infos = _leaf_meta(ms)
+    pdt = jnp.dtype(tc.param_dtype).itemsize
+    pod = pc.pod_size if "pod" in pc.dp_axes else 1
+    total = 0.0
+    for li in infos:
+        n_loc = 1
+        for d in li.pd.shape:
+            n_loc *= d
+        if li.fsdp:
+            # stored local size = count*chunk (per (data, tp) rank)
+            n_rank = li.pd.shape[0] * li.pd.shape[3]
+            if pod > 1:
+                total += 2 * 4 * n_rank  # cross-pod fp32 psum (ring 2x)
+            if not li.tp_sharded:
+                total += 2 * 4 * n_rank
+        else:
+            from repro.train.trainer import _chunk, _local_shape
+            loc = _local_shape(li.pd.shape, li.pspec, pc.tp_size)
+            n_rank = 1
+            for d in loc:
+                n_rank *= d
+            total += 4 * n_rank          # psum_scatter fp32 grads
+            total += pdt * n_rank        # all_gather fresh params
+            if not li.tp_sharded:
+                total += 2 * 4 * n_rank  # tp psum of replicated grads
+    return total
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               lp: bool = True, tp: int = 16,
+               policy_override=None) -> Dict[str, Any]:
+    """Lower + compile one cell; return the dry-run record."""
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    data = mesh.shape["data"]
+    dp = data * (mesh.shape["pod"] if "pod" in mesh.axis_names else 1)
+    dp_ax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+    pol = cell_policy(cfg, shape, tp=tp, dp=dp, lp=lp)
+    if policy_override:
+        pol = policy_override(pol)
+    ms = build_cell_structure(cfg, shape, pol, tp=tp, data=data)
+    row = dp_ax if pol.shard_batch else None
+
+    def build_lowered():
+        accum = 1
+        extra_mem_gb = 0.0
+        if shape.step == "train":
+            accum = pol.accum
+            micro_shape = dataclasses.replace(
+                shape, global_batch=max(shape.global_batch // accum, 1))
+            tc = TrainConfig(opt=OptConfig(), accum=1, remat=True,
+                             param_dtype=jnp.bfloat16)
+            babs = batch_specs(cfg, micro_shape, pol)
+            fn, s_specs, b_specs, pc = make_sharded_train_step(
+                ms, mesh, tc, babs, sp=pol.sp, donate=False)
+            st_abs = _attach(mesh, abstract_state(ms, pc, tc), s_specs)
+            b_abs = batch_specs(cfg, micro_shape, pol, mesh=mesh, dp_ax=row)
+            lowered = fn.lower(st_abs, b_abs)
+            # fp32 grad-accumulation carry lives across micros in the real
+            # accum'd program; account for it on top of the micro peak.
+            if accum > 1:
+                _, _, infos = _leaf_meta(ms)
+                n_loc = 0
+                from repro.train.trainer import _local_shape
+                for li in infos:
+                    if li.fsdp:
+                        n_loc += li.pd.shape[0] * li.pd.shape[3]
+                    else:
+                        loc = _local_shape(li.pd.shape, li.pspec, pc.tp_size)
+                        k = 1
+                        for d in loc:
+                            k *= d
+                        n_loc += k
+                extra_mem_gb = 4 * n_loc / 2**30
+            return lowered, pc, tc, accum, extra_mem_gb
+        elif shape.step == "prefill":
+            sv = ServeConfig(max_len=shape.seq_len, kv_mode=pol.kv_mode)
+            fn, _, pc = make_sharded_prefill(ms, mesh, sv,
+                                             batch=shape.global_batch,
+                                             prompt_len=shape.seq_len,
+                                             sp=pol.sp)
+            p_abs = _attach(mesh, T.abstract_params(ms), T.param_pspecs(ms))
+            b = batch_specs(cfg, shape, pol, mesh=mesh, dp_ax=row)
+            args = [p_abs, b["tokens"]]
+            if cfg.prefix_len:
+                args.append(b["prefix"])
+            if cfg.enc_layers:
+                args.append(b["frames"])
+            lowered = fn.lower(*args)
+            return lowered, pc, None, accum, extra_mem_gb
+        else:  # decode
+            sv = ServeConfig(max_len=shape.seq_len, kv_mode=pol.kv_mode)
+            fn, c_abs, c_specs, pc = make_sharded_serve_step(
+                ms, mesh, sv, batch=shape.global_batch,
+                shard_batch=pol.shard_batch)
+            p_abs = _attach(mesh, T.abstract_params(ms), T.param_pspecs(ms))
+            tok, caches, t, key = decode_specs(cfg, shape, pol, ms,
+                                               mesh=mesh, dp_ax=row)
+            lowered = fn.lower(p_abs, tok, caches, t, key)
+            return lowered, pc, None, accum, extra_mem_gb
+
+    # Phase 1 (cost): segment scans UNROLLED so cost_analysis sees every
+    # layer; memory of this form is NOT representative (no buffer reuse).
+    # The multi-pod pass proves the pod axis shards and the program still
+    # fits — its roofline terms come from the single-pod table, so it
+    # compiles the (faster) scan form only.
+    if multi_pod:
+        lowered, pc, tc, accum, extra_mem_gb = build_lowered()
+        compiled = compiled_scan = lowered.compile()
+    else:
+        STK.set_scan_unroll(True)
+        try:
+            lowered, pc, tc, accum, extra_mem_gb = build_lowered()
+            compiled = lowered.compile()
+        finally:
+            STK.set_scan_unroll(False)
+
+        # Phase 2 (memory): the production scan form — the fits-proof.
+        lowered_scan, _, _, _, _ = build_lowered()
+        compiled_scan = lowered_scan.compile()
+
+    try:
+        mem = compiled_scan.memory_analysis()
+        mem_row = {
+            "argument_gb": getattr(mem, "argument_size_in_bytes", 0) / 2**30,
+            "output_gb": getattr(mem, "output_size_in_bytes", 0) / 2**30,
+            "temp_gb": getattr(mem, "temp_size_in_bytes", 0) / 2**30,
+            "accum_buffer_gb": extra_mem_gb,
+            "peak_gb": (getattr(mem, "argument_size_in_bytes", 0)
+                        + getattr(mem, "temp_size_in_bytes", 0)) / 2**30
+                       + extra_mem_gb,
+        }
+    except Exception as e:  # pragma: no cover
+        mem_row = {"error": str(e)[:200]}
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+
+    chips = dp * tp
+    f_parsed = float(cost.get("flops", 0.0))
+    b_parsed = float(cost.get("bytes accessed", 0.0))
+    c_parsed = coll.get("total", 0.0)
+    f_attn = attention_flops(cfg, shape, tp=tp) / chips
+    if shape.step == "train":
+        c_grad = _grad_reduction_bytes(ms, pc, tc)
+        b_opt = 32.0 * (extra_mem_gb / 4 * 2**30 if accum > 1 else 0.0)
+        f_step = accum * f_parsed + f_attn
+        b_step = accum * max(b_parsed - b_opt, 0.0) + b_opt
+        c_step = accum * max(c_parsed - c_grad, 0.0) + c_grad
+        coll = dict(coll)
+        coll["total"] = c_step
+        coll["grad_reduction"] = c_grad
+        coll["n_ops"] = accum * coll.get("n_ops", 0)  # fwd colls per micro
+    else:
+        f_step = f_parsed + f_attn
+        b_step = b_parsed
+        c_step = c_parsed
+
+    # Per-device payload bytes: weights touched once per step (+cache for
+    # serving shapes). Train touches weights fwd+bwd+optimizer.
+    p_loc = sum(
+        int(jnp.prod(jnp.array(l.shape)))
+        for l in jax.tree.leaves(T.abstract_params(ms))) // (
+            1 if ms.fsdp else 1)
+    p_dev = p_loc / (tp if not ms.fsdp else tp * data)
+    if shape.step == "train":
+        useful = 38.0 * p_dev  # bf16 fwd+bwd + fp32 m/v/master r+w + grads
+    elif shape.step == "prefill":
+        useful = 2.0 * p_dev
+    else:
+        cache_n = sum(int(jnp.prod(jnp.array(l.shape)))
+                      for l in jax.tree.leaves(
+                          T.cache_meta(ms, batch=shape.global_batch,
+                                       max_len=shape.seq_len,
+                                       kv_mode=pol.kv_mode)[0]))
+        useful = 2.0 * p_dev + 2.0 * cache_n / chips  # bf16 read (+write)
+    rl = Roofline(flops=f_step, bytes_accessed=b_step, coll=coll,
+                  model_flops=model_flops(cfg, shape), chips=chips,
+                  useful_bytes=useful)
+    rec = {
+        "arch": arch, "shape": shape_name, "lp": lp,
+        "multi_pod": multi_pod, "chips": chips,
+        "eff_depth": ms.effective_depth, "n_layers": cfg.n_layers,
+        "n_pairs": len(ms.plan.pairs),
+        "fsdp": pol.fsdp, "kv_mode": pol.kv_mode, "accum": accum,
+        "memory": mem_row,
+        "coll": {k: v for k, v in coll.items()},
+        "cost_raw": {"flops": f_parsed, "bytes": b_parsed,
+                     "attn_correction_flops": f_attn},
+        "roofline": rl.row(),
+        "compile_s": round(time.time() - t0, 1),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-lp", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(RESULTS, exist_ok=True)
+    suffix = "_mp" if args.multi_pod else ""
+    suffix += "_nolp" if args.no_lp else ""
+    out_path = args.out or os.path.join(RESULTS, f"dryrun{suffix}.json")
+    done: Dict[str, Any] = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            done = json.load(f)
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    for arch in archs:
+        for shape in shapes:
+            k = f"{arch}/{shape}"
+            if k in done and "error" not in done[k] and not args.force:
+                print(f"[skip cached] {k}")
+                continue
+            print(f"[lower] {k} multi_pod={args.multi_pod} lp={not args.no_lp}",
+                  flush=True)
+            try:
+                rec = lower_cell(arch, shape, multi_pod=args.multi_pod,
+                                 lp=not args.no_lp)
+            except Exception as e:
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape, "error": str(e)[:500]}
+            done[k] = rec
+            with open(out_path, "w") as f:
+                json.dump(done, f, indent=1)
+            if "roofline" in rec:
+                r = rec["roofline"]
+                print(f"  ok: bottleneck={r['bottleneck']} "
+                      f"t=({r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+                      f"{r['t_collective_s']:.4f})s "
+                      f"roofline={r['roofline_fraction']:.3f} "
+                      f"peak={rec['memory'].get('peak_gb', -1):.2f}GB "
+                      f"compile={rec['compile_s']}s", flush=True)
+            elif "skipped" in rec:
+                print(f"  skipped: {rec['skipped']}")
+            else:
+                print(f"  ERROR: {rec.get('error', '?')[:200]}")
+
+
+if __name__ == "__main__":
+    main()

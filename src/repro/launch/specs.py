@@ -1,0 +1,114 @@
+"""Per-(architecture x shape) cell policy + abstract input specs.
+
+``cell_policy`` encodes the static decisions the launcher makes per cell:
+LP plan, FSDP on/off, KV-cache mode, gradient-accumulation factor, batch
+sharding. ``input_specs`` produces the ShapeDtypeStruct stand-ins that the
+dry-run lowers against (weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import ShapeConfig
+from repro.core.lp import LPPlan, default_plan
+from repro.model import transformer as T
+
+# Architectures whose bf16 weights per chip exceed the v5e HBM budget at
+# TP=16 and therefore train AND serve with FSDP (ZeRO-3) over the data axis.
+FSDP_ARCHS = frozenset({"dbrx-132b", "llama4-scout-17b-a16e"})
+# Architectures that fit for serving but whose train step (fp32 grads +
+# optimizer + activations) needs the weights sharded too.
+TRAIN_FSDP_ARCHS = FSDP_ARCHS | frozenset({"granite-34b"})
+
+
+@dataclass(frozen=True)
+class CellPolicy:
+    plan: LPPlan
+    fsdp: bool
+    kv_mode: str          # heads | seq
+    accum: int            # train-shape gradient accumulation
+    shard_batch: bool     # False -> replicate batch over dp (e.g. batch 1)
+    sp: bool              # sequence parallelism for full-seq programs
+    remat: bool = True
+    quant: bool = False   # int8 FSDP weight shards (serving only)
+
+
+def cell_policy(cfg: ArchConfig, shape: ShapeConfig, *, tp: int = 16,
+                dp: int = 16, lp: bool = True) -> CellPolicy:
+    plan = default_plan(cfg) if lp else LPPlan(())
+    fsdp = cfg.name in (FSDP_ARCHS if shape.step == "decode"
+                        else TRAIN_FSDP_ARCHS)
+    # Decode caches: sequence-shard over `model` when kv heads < tp
+    # (avoids tp-fold cache replication).
+    kv_mode = "seq" if (0 < cfg.n_kv_heads < tp) else "heads"
+    shard_batch = shape.global_batch % dp == 0
+    # Keep per-microbatch activations ~1 sequence per chip for train.
+    local_batch = shape.global_batch // dp if shard_batch else shape.global_batch
+    accum = max(1, local_batch) if shape.step == "train" else 1
+    # Cap accum so the scan stays shallow on small-activation archs.
+    if cfg.d_model * shape.seq_len <= 2048 * 4096:
+        accum = max(1, local_batch // 4)
+    return CellPolicy(plan=plan, fsdp=fsdp, kv_mode=kv_mode, accum=accum,
+                      shard_batch=shard_batch, sp=True)
+
+
+def build_cell_structure(cfg: ArchConfig, shape: ShapeConfig, pol: CellPolicy,
+                         *, tp: int = 16, data: int = 16) -> T.ModelStructure:
+    return T.build_structure(cfg, plan=pol.plan, tp=tp,
+                             fsdp=pol.fsdp, fsdp_data=data, quant=pol.quant)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=jax.sharding.NamedSharding(mesh, spec or P()))
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, pol: CellPolicy,
+                mesh=None, dp_ax=None) -> Dict[str, Any]:
+    """Abstract train/prefill batch for one cell (GLOBAL shapes)."""
+    B, S = shape.global_batch, shape.seq_len
+    row = dp_ax if pol.shard_batch else None
+    out = {"tokens": _sds((B, S), jnp.int32, mesh, P(row, None))}
+    if shape.step == "train":
+        out["labels"] = _sds((B, S), jnp.int32, mesh, P(row, None))
+    if cfg.prefix_len:
+        out["prefix"] = _sds((B, cfg.prefix_len, cfg.d_model), jnp.bfloat16,
+                             mesh, P(row, None, None))
+    if cfg.enc_layers:
+        out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16,
+                             mesh, P(row, None, None))
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig, pol: CellPolicy,
+                 ms: T.ModelStructure, mesh=None, dp_ax=None):
+    """(tok, caches, t, key) abstract inputs for serve_step."""
+    B = shape.global_batch
+    row = dp_ax if pol.shard_batch else None
+    cache_abs, cache_ps = T.cache_meta(ms, batch=B, max_len=shape.seq_len,
+                                       kv_mode=pol.kv_mode)
+    if mesh is not None:
+        def attach(a, ps):
+            parts = list(ps)
+            parts[1] = row  # batch axis
+            return jax.ShapeDtypeStruct(
+                a.shape, a.dtype,
+                sharding=jax.sharding.NamedSharding(mesh, P(*parts)))
+        cache_abs = jax.tree.map(attach, cache_abs, cache_ps,
+                                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tok = _sds((B,), jnp.int32, mesh, P(row))
+    t = _sds((), jnp.int32, mesh, P())
+    key = _sds((2,), jnp.uint32, mesh, P())
+    return tok, cache_abs, t, key

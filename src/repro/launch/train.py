@@ -1,0 +1,148 @@
+"""End-to-end training driver with the fault-tolerance loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --steps 200 --eff-depth 20 --ckpt-dir /tmp/run1
+
+Runs on whatever devices exist (CPU smoke -> 1 device; a real slice -> the
+production mesh). The loop is restart-safe: batches are a pure function of
+the step index, checkpoints commit atomically, and --resume picks up the
+latest manifest. ``repro.launch.elastic`` wraps this loop with the failure
+simulation used by tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced_config
+from repro.core.lp import EMPTY_PLAN, plan_for_depth
+from repro.data import DataConfig, SynthConfig, make_source
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext, make_context
+from repro.train import OptConfig, TrainConfig, checkpoint as CK
+from repro.train.trainer import (init_state, make_sharded_train_step,
+                                 make_train_step, state_pspecs)
+
+
+@dataclasses.dataclass
+class RunConfig:
+    arch: str = "tinyllama-1.1b"
+    reduced: bool = True          # CPU-sized config for in-container runs
+    n_layers: int = 0             # 0 -> family default (reduced only)
+    eff_depth: int = 0            # 0 -> no LP
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    lr: float = 3e-3
+    warmup: int = 20
+    accum: int = 1
+    remat: bool = False
+    finetune_lp_only: bool = False
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    eval_every: int = 25
+    seed: int = 0
+    log_every: int = 10
+
+
+class Watchdog:
+    """Detects a hung step (straggler / dead host) so the launcher can kill
+    and restart from the last checkpoint. On this CPU container it guards
+    against pathological compile/step times."""
+
+    def __init__(self, timeout_s: float = 600.0):
+        self.timeout_s = timeout_s
+        self._last = time.monotonic()
+
+    def tick(self):
+        now = time.monotonic()
+        dt = now - self._last
+        self._last = now
+        if dt > self.timeout_s:
+            raise TimeoutError(f"step exceeded watchdog budget ({dt:.0f}s)")
+
+
+def build(rc: RunConfig):
+    cfg = get_config(rc.arch)
+    if rc.reduced:
+        cfg = reduced_config(cfg, n_layers=rc.n_layers or None)
+    plan = (plan_for_depth(cfg, rc.eff_depth) if rc.eff_depth
+            else EMPTY_PLAN)
+    ms = T.build_structure(cfg, plan=plan, tp=1)
+    tc = TrainConfig(
+        opt=OptConfig(lr=rc.lr, warmup_steps=rc.warmup, total_steps=rc.steps,
+                      schedule="wsd"),
+        accum=rc.accum, remat=rc.remat,
+        finetune_lp_only=rc.finetune_lp_only)
+    sc = SynthConfig(vocab_size=cfg.vocab_size)
+    src = make_source(DataConfig(seq_len=rc.seq_len,
+                                 global_batch=rc.global_batch,
+                                 seed=rc.seed), sc)
+    return cfg, ms, tc, src
+
+
+def train_loop(rc: RunConfig, *, state=None, hook=None) -> Dict[str, Any]:
+    """Run (or resume) the training loop. Returns the final state + metrics
+    history. ``hook(step, metrics)`` is the failure-injection point for the
+    elastic tests."""
+    cfg, ms, tc, src = build(rc)
+    pc = ParallelContext()
+    step_fn = jax.jit(make_train_step(ms, pc, tc), donate_argnums=(0,))
+
+    ckpt = CK.AsyncCheckpointer(rc.ckpt_dir) if rc.ckpt_dir else None
+    start_step = 0
+    if state is None:
+        if rc.ckpt_dir and CK.latest_step(rc.ckpt_dir) is not None:
+            like = CK.state_to_logical(
+                init_state(ms, jax.random.PRNGKey(rc.seed), pc, tc), ms, pc)
+            logical = CK.restore(rc.ckpt_dir, like)
+            state = CK.logical_to_state(logical, ms, pc, tc)
+            start_step = int(state["step"])
+            print(f"[resume] from step {start_step}")
+        else:
+            state = init_state(ms, jax.random.PRNGKey(rc.seed), pc, tc)
+
+    wd = Watchdog()
+    history = []
+    for step in range(start_step, rc.steps):
+        batch = src.batch_at(step)
+        state, metrics = step_fn(state, batch)
+        wd.tick()
+        if hook is not None:
+            hook(step, metrics)
+        if step % rc.log_every == 0 or step == rc.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            print(f"[{step:5d}] loss={m['loss']:.4f} xent={m['xent']:.4f} "
+                  f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e}", flush=True)
+        if ckpt and (step + 1) % rc.ckpt_every == 0:
+            ckpt.save(CK.state_to_logical(state, ms, pc), step + 1)
+    if ckpt:
+        ckpt.save(CK.state_to_logical(state, ms, pc), rc.steps)
+        ckpt.wait()
+    return {"state": state, "history": history, "ms": ms, "cfg": cfg}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    for f in dataclasses.fields(RunConfig):
+        name = "--" + f.name.replace("_", "-")
+        if f.type == "bool" or isinstance(f.default, bool):
+            ap.add_argument(name, action="store_true", default=f.default)
+        else:
+            ap.add_argument(name, type=type(f.default) if f.default is not None
+                            else str, default=f.default)
+    args = ap.parse_args()
+    rc = RunConfig(**{f.name: getattr(args, f.name)
+                      for f in dataclasses.fields(RunConfig)})
+    train_loop(rc)
+
+
+if __name__ == "__main__":
+    main()

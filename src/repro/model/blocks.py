@@ -1,0 +1,429 @@
+"""Layer and LP-pair application.
+
+A ``Group`` is the unit the stack scans over: either one layer or an LP pair
+of two consecutive layers. The pair path implements the paper's Fig. 2b
+computational-graph rewrite:
+
+    a = x + A_k(LN1_k x) + A_{k+1}(LN1_{k+1} x)     # ONE phase_out
+    y = a + F_k(LN2_k a) + F_{k+1}(LN2_{k+1} a)     # ONE phase_out
+
+(for mamba/rec mixers the generalised residual-pair form). Pair params are
+the two layers' params stacked on a leading axis — the retraining-free merge
+of repro.core.lp is exactly that stacking.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.model import attention as A
+from repro.model import mlp as M
+from repro.model import moe as MOE
+from repro.model import rglru as RG
+from repro.model import ssm as SSM
+from repro.model.norms import apply_norm, dual_norm
+from repro.model.params import PD
+from repro.parallel.context import ParallelContext
+
+
+@dataclass(frozen=True)
+class Group:
+    pair: bool
+    specs: Tuple[LayerSpec, ...]      # 1 or 2 entries
+    layer_ids: Tuple[int, ...]
+
+    @property
+    def signature(self):
+        return (self.pair, self.specs)
+
+
+# ---------------------------------------------------------------------------
+# Templates
+# ---------------------------------------------------------------------------
+
+def _norm_tmpl(cfg):
+    t = {"scale": PD((cfg.d_model,), P(),
+                     init="zeros" if cfg.norm_plus_one else "ones")}
+    if cfg.norm_kind == "layernorm":
+        t["bias"] = PD((cfg.d_model,), P(), init="zeros")
+    return t
+
+
+def layer_template(cfg: ArchConfig, spec: LayerSpec, tp: int):
+    t: Dict[str, Any] = {}
+    if spec.mixer.startswith("attn"):
+        t["ln1"] = _norm_tmpl(cfg)
+        t["attn"] = A.attn_template(cfg, tp)
+    elif spec.mixer == "rec":
+        t["ln1"] = _norm_tmpl(cfg)
+        t["rec"] = RG.rglru_template(cfg, tp)
+    elif spec.mixer == "mamba":
+        t["ln1"] = _norm_tmpl(cfg)
+        t["mamba"] = SSM.ssm_template(cfg, tp)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.cross_attn:
+        t["lnx"] = _norm_tmpl(cfg)
+        t["xattn"] = A.attn_template(cfg, tp, cross=True)
+    if spec.ffn == "mlp":
+        t["ln2"] = _norm_tmpl(cfg)
+        t["mlp"] = M.mlp_template(cfg, tp)
+    elif spec.ffn == "moe":
+        t["ln2"] = _norm_tmpl(cfg)
+        t["moe"] = MOE.moe_template(cfg, tp)
+    return t
+
+
+# ---------------------------------------------------------------------------
+# Phase runners
+# ---------------------------------------------------------------------------
+
+def _norm_inputs(gp, key, x, cfg, group: Group):
+    """Per-path normalised inputs: [B,S,D] (single) or [2,B,S,D] (pair)."""
+    if group.pair:
+        a, b = dual_norm(x, jax.tree.map(lambda v: v[0], gp[key]),
+                         jax.tree.map(lambda v: v[1], gp[key]), cfg)
+        return jnp.stack([a, b])
+    return apply_norm(x, gp[key], cfg)
+
+
+def _mixer_kinds(group: Group):
+    return tuple(s.mixer for s in group.specs)
+
+
+def attention_phase_full(gp, xn, cfg, dims, pc, *, group: Group, positions,
+                         prefix_len=0, cross_kv=None, attn_impl="auto"):
+    """Full-sequence attention (train/prefill). Returns (partial_out, kv_list)
+    with one (k, v) in stored layout per layer in the group.
+
+    ``cross_kv`` (whisper decoder): precomputed encoder k/v in FOLDED layout
+    [B,T,P*hkv,hd]; q comes from xn, keys are never roped (attn_bidir).
+    """
+    kinds = _mixer_kinds(group)
+    cross = cross_kv is not None
+    p = gp["xattn"] if cross else gp["attn"]
+    homogeneous = len(set(kinds)) == 1 or cross
+    B = xn.shape[1] if group.pair else xn.shape[0]
+    S = xn.shape[2] if group.pair else xn.shape[1]
+    nP = 2 if group.pair else 1
+    Hk, g = A.core_layout(dims)
+
+    if homogeneous:
+        kind = "attn_bidir" if cross else kinds[0]
+        q = A.project_q(p, xn, cfg, dims, positions=positions, kind=kind,
+                        pair=group.pair)
+        if cross:
+            k, v = cross_kv
+        else:
+            k, v = A.project_kv(p, xn, cfg, dims, positions=positions,
+                                kind=kind, pair=group.pair)
+        ks, vs = _sel_pairwise(k, v, dims, pc, pair=group.pair)
+        qh = q.reshape(B, S, nP * Hk, g, dims.hd)
+        o = A.attention_core(qh, ks, vs, kind=kind, window=cfg.window,
+                             chunk=cfg.chunk, prefix_len=prefix_len, impl=attn_impl)
+        o = o.reshape(B, S, nP * dims.hq, dims.hd)
+        out = A.output_proj(p, o, dims, pair=group.pair)
+        return out, _split_kv(k, v, dims, pair=group.pair)
+
+    # Heterogeneous pair kinds (llama4 chunked+global): per-half cores, still
+    # merged output projection + ONE phase_out.
+    os, kvs = [], []
+    for i, kind in enumerate(kinds):
+        ph = jax.tree.map(lambda w: w[i], p)
+        qi, ki, vi = A.project_qkv(ph, xn[i], cfg, dims, pc,
+                                   positions=positions, kind=kind, pair=False)
+        ksi, vsi = _sel_pairwise(ki, vi, dims, pc, pair=False)
+        oi = A.attention_core(qi.reshape(B, S, Hk, g, dims.hd), ksi, vsi,
+                              kind=kind, window=cfg.window, chunk=cfg.chunk,
+                              prefix_len=prefix_len, impl=attn_impl)
+        os.append(oi.reshape(B, S, dims.hq, dims.hd))
+        kvs.append((ki, vi))
+    o = jnp.concatenate(os, axis=2)
+    out = A.output_proj(p, o, dims, pair=True)
+    return out, kvs
+
+
+def _sel_pairwise(k, v, dims, pc, *, pair: bool):
+    """Rank-local kv selection, preserving the pair-as-doubled-heads layout."""
+    if not pair:
+        return A.select_local_kv(k, dims, pc), A.select_local_kv(v, dims, pc)
+    B, S = k.shape[0], k.shape[1]
+    k2 = k.reshape(B, S, 2, dims.hkv, dims.hd)
+    v2 = v.reshape(B, S, 2, dims.hkv, dims.hd)
+    if not dims.kv_sharded and dims.tp > 1:
+        if dims.per_head:
+            idx = A.rank_head_kv_map(dims, pc)
+            k2 = jnp.take(k2, idx, axis=3)
+            v2 = jnp.take(v2, idx, axis=3)
+        else:
+            base = pc.tp_index() * dims.hq
+            kv_idx = jnp.clip(base // dims.group, 0, dims.hkv - 1)
+            k2 = lax.dynamic_slice_in_dim(k2, kv_idx, 1, axis=3)
+            v2 = lax.dynamic_slice_in_dim(v2, kv_idx, 1, axis=3)
+    ks = k2.reshape(B, S, 2 * k2.shape[3], dims.hd)
+    vs = v2.reshape(B, S, 2 * v2.shape[3], dims.hd)
+    return ks, vs
+
+
+def _split_kv(k, v, dims, *, pair: bool):
+    if not pair:
+        return [(k, v)]
+    B, S = k.shape[0], k.shape[1]
+    k2 = k.reshape(B, S, 2, dims.hkv, dims.hd)
+    v2 = v.reshape(B, S, 2, dims.hkv, dims.hd)
+    return [(k2[:, :, 0], v2[:, :, 0]), (k2[:, :, 1], v2[:, :, 1])]
+
+
+def ffn_phase(gp, xn, cfg, pc, *, group: Group):
+    """Returns (partial_out, aux)."""
+    ffn = group.specs[0].ffn
+    if ffn == "mlp":
+        return M.mlp_forward(gp["mlp"], xn, cfg, pc.tp_size, pair=group.pair), 0.0
+    return MOE.moe_forward(gp["moe"], xn, cfg, pc, pair=group.pair)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache construction
+# ---------------------------------------------------------------------------
+
+def ring_len(cfg, mixer: str, max_len: int) -> int:
+    if mixer == "attn_local" and cfg.window:
+        return min(cfg.window, max_len)
+    if mixer == "attn_chunked" and cfg.chunk:
+        return min(cfg.chunk, max_len)
+    return max_len
+
+
+def seq_sharded_kind(cfg, dims, mixer: str, kv_mode: str) -> bool:
+    """Sequence-shard the cache over the model axis? Only worthwhile for
+    full-length causal caches with replicated kv heads."""
+    return (kv_mode == "seq" and mixer in ("attn", "attn_global")
+            and not dims.kv_sharded and dims.tp > 1)
+
+
+def fill_cache(k, L: int, *, mixer, cfg, seq_shard: bool, pc, dims):
+    """Place prefill keys/values [B,S,hkv,hd] into a decode cache."""
+    B, S, H, hd = k.shape
+    if mixer == "attn_local" and cfg.window and S >= (W := ring_len(cfg, mixer, L)):
+        last = k[:, S - W:]
+        return jnp.roll(last, (S - W) % W, axis=1)
+    if mixer == "attn_chunked" and cfg.chunk:
+        C = ring_len(cfg, mixer, L)
+        cstart = (S // C) * C if S % C else S  # S%C==0 -> empty fresh chunk
+        ring = jnp.zeros((B, C, H, hd), k.dtype)
+        n = S - cstart
+        if n:
+            ring = lax.dynamic_update_slice_in_dim(ring, k[:, cstart:], 0, axis=1)
+        return ring
+    Ls = ring_len(cfg, mixer, L)
+    pad = jnp.zeros((B, Ls, H, hd), k.dtype)
+    kp = lax.dynamic_update_slice_in_dim(pad, k[:, :min(S, Ls)], 0, axis=1)
+    if seq_shard:
+        L_loc = Ls // dims.tp
+        return lax.dynamic_slice_in_dim(kp, pc.tp_index() * L_loc, L_loc, axis=1)
+    return kp
+
+
+def group_cache_meta(cfg, group: Group, dims, *, batch: int, max_len: int,
+                     kv_mode: str, enc_len: int = 0, dtype=jnp.bfloat16):
+    """(ShapeDtypeStruct tree, PartitionSpec tree) for one group's decode
+    cache. Batch axis sharding is added by the caller. Shapes are LOCAL in
+    the head/seq dims the model axis shards (shard_map local view) — the
+    caller converts to global via pspec rules; here we return GLOBAL shapes
+    with their pspecs."""
+    spec_tree, pspec_tree = {}, {}
+    for i, spec in enumerate(group.specs):
+        m = spec.mixer
+        if m.startswith("attn"):
+            L = ring_len(cfg, m, max_len)
+            if seq_sharded_kind(cfg, dims, m, kv_mode):
+                shp = (batch, L, dims.hkv_global, dims.hd)
+                ps = P(None, "model", None, None)
+            elif dims.kv_sharded:
+                shp = (batch, L, dims.hkv_global, dims.hd)
+                ps = P(None, None, "model", None)
+            else:
+                shp = (batch, L, dims.hkv_global, dims.hd)
+                ps = P(None, None, None, None)
+            spec_tree[f"k{i}"] = jax.ShapeDtypeStruct(shp, dtype)
+            spec_tree[f"v{i}"] = jax.ShapeDtypeStruct(shp, dtype)
+            pspec_tree[f"k{i}"] = ps
+            pspec_tree[f"v{i}"] = ps
+            if spec.cross_attn:
+                xshp = (batch, enc_len, dims.hkv_global, dims.hd)
+                xps = P(None, None, "model", None) if dims.kv_sharded else P()
+                spec_tree[f"xk{i}"] = jax.ShapeDtypeStruct(xshp, dtype)
+                spec_tree[f"xv{i}"] = jax.ShapeDtypeStruct(xshp, dtype)
+                pspec_tree[f"xk{i}"] = xps
+                pspec_tree[f"xv{i}"] = xps
+        elif m == "mamba":
+            di = cfg.d_inner
+            spec_tree[f"conv{i}"] = jax.ShapeDtypeStruct(
+                (batch, cfg.ssm_conv - 1, di), dtype)
+            pspec_tree[f"conv{i}"] = P(None, None, "model")
+            spec_tree[f"h{i}"] = jax.ShapeDtypeStruct(
+                (batch, di, cfg.ssm_state), jnp.float32)
+            pspec_tree[f"h{i}"] = P(None, "model", None)
+        elif m == "rec":
+            W = cfg.lru_width
+            spec_tree[f"conv{i}"] = jax.ShapeDtypeStruct(
+                (batch, cfg.rec_conv - 1, W), dtype)
+            pspec_tree[f"conv{i}"] = P(None, None, "model")
+            spec_tree[f"h{i}"] = jax.ShapeDtypeStruct(
+                (batch, W, 1), jnp.float32)
+            pspec_tree[f"h{i}"] = P(None, "model", None)
+    return spec_tree, pspec_tree
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence group application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
+                     positions, prefix_len=0, enc_out=None, attn_impl="auto",
+                     emit_cache=False, max_len=0, kv_mode="heads",
+                     scan_impl="chunked"):
+    """One group over the full sequence.
+
+    x: [B,S_local,D] (S_local = S/tp under SP). Returns (x, aux, cache_dict).
+    """
+    aux = jnp.float32(0.0)
+    cache: Dict[str, Any] = {}
+    mixer = group.specs[0].mixer
+    nP = 2 if group.pair else 1
+    gather_axis = 2 if group.pair else 1
+
+    # ---- phase 1: temporal mixing -------------------------------------
+    # Gather-first: under SP the residual is re-gathered BEFORE the norms,
+    # so an LP pair's two per-path norms read ONE gathered tensor — half
+    # the phase-entry wire bytes of gathering the stacked [2,...] inputs
+    # (EXPERIMENTS.md §Perf iteration 2).
+    xg = pc.phase_in(x)
+    xn = _norm_inputs(gp, "ln1", xg, cfg, group)
+    if mixer.startswith("attn"):
+        out, kvs = attention_phase_full(gp, xn, cfg, dims, pc, group=group,
+                                        positions=positions,
+                                        prefix_len=prefix_len,
+                                        attn_impl=attn_impl)
+        if emit_cache:
+            for i, (k, v) in enumerate(kvs):
+                m = group.specs[i].mixer
+                ss = seq_sharded_kind(cfg, dims, m, kv_mode)
+                cache[f"k{i}"] = fill_cache(k, max_len, mixer=m, cfg=cfg,
+                                            seq_shard=ss, pc=pc, dims=dims)
+                cache[f"v{i}"] = fill_cache(v, max_len, mixer=m, cfg=cfg,
+                                            seq_shard=ss, pc=pc, dims=dims)
+    else:
+        xn_p = xn if group.pair else xn[None]
+        key = "mamba" if mixer == "mamba" else "rec"
+        mp = gp[key] if group.pair else jax.tree.map(lambda w: w[None], gp[key])
+        if mixer == "mamba":
+            out, state = SSM.ssm_mix(mp, xn_p, cfg, pc, impl=scan_impl)
+        else:
+            out, state = RG.rglru_mix(mp, xn_p, cfg, pc, impl=scan_impl)
+        if emit_cache:
+            conv, h = state
+            for i in range(nP):
+                cache[f"conv{i}"] = conv[i]
+                cache[f"h{i}"] = h[i]
+    x = x + pc.phase_out(out).astype(x.dtype)
+
+    # ---- cross-attention phase (whisper decoder) ----------------------
+    if group.specs[0].cross_attn and enc_out is not None:
+        xnx = _norm_inputs(gp, "lnx", pc.phase_in(x), cfg, group)
+        enc_in = jnp.stack([enc_out] * 2) if group.pair else enc_out
+        xk, xv = A.project_kv(gp["xattn"], enc_in, cfg, dims,
+                              positions=None, kind="attn_bidir", pair=group.pair)
+        out, _ = attention_phase_full(gp, xnx, cfg, dims, pc, group=group,
+                                      positions=positions, cross_kv=(xk, xv),
+                                      attn_impl=attn_impl)
+        if emit_cache:
+            for i, (ki, vi) in enumerate(_split_kv(xk, xv, dims, pair=group.pair)):
+                cache[f"xk{i}"] = ki
+                cache[f"xv{i}"] = vi
+        x = x + pc.phase_out(out).astype(x.dtype)
+
+    # ---- phase 2: FFN ---------------------------------------------------
+    if group.specs[0].ffn is not None:
+        xn2 = _norm_inputs(gp, "ln2", pc.phase_in(x), cfg, group)
+        out, a = ffn_phase(gp, xn2, cfg, pc, group=group)
+        aux = aux + a
+        x = x + pc.phase_out(out).astype(x.dtype)
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode group application
+# ---------------------------------------------------------------------------
+
+def apply_group_decode(gp, x, cache, t, *, cfg, group: Group, dims,
+                       pc: ParallelContext, kv_mode="heads"):
+    """One group for one new token. x: [B,1,D] (replicated over model; no SP
+    at decode). Returns (x, new_cache)."""
+    new_cache: Dict[str, Any] = {}
+    mixer = group.specs[0].mixer
+    nP = 2 if group.pair else 1
+
+    xn = _norm_inputs(gp, "ln1", x, cfg, group)
+    if mixer.startswith("attn"):
+        outs = []
+        for i, spec in enumerate(group.specs):
+            ph = jax.tree.map(lambda w: w[i], gp["attn"]) if group.pair else gp["attn"]
+            xi = xn[i] if group.pair else xn
+            kd = spec.mixer
+            if seq_sharded_kind(cfg, dims, kd, kv_mode):
+                o, nk, nv = A.decode_attn_seq_sharded(
+                    ph, xi, cache[f"k{i}"], cache[f"v{i}"], t, cfg, dims, pc,
+                    kind=kd, pair=False, window=cfg.window, chunk=cfg.chunk)
+            else:
+                o, nk, nv = A.decode_attn_standard(
+                    ph, xi, cache[f"k{i}"], cache[f"v{i}"], t, cfg, dims, pc,
+                    kind=kd, pair=False, window=cfg.window, chunk=cfg.chunk)
+            outs.append(o)
+            new_cache[f"k{i}"], new_cache[f"v{i}"] = nk, nv
+        out = sum(outs)
+    else:
+        xn_p = xn if group.pair else xn[None]
+        key = "mamba" if mixer == "mamba" else "rec"
+        mp = gp[key] if group.pair else jax.tree.map(lambda w: w[None], gp[key])
+        conv = jnp.stack([cache[f"conv{i}"] for i in range(nP)], axis=0)
+        h = jnp.stack([cache[f"h{i}"] for i in range(nP)], axis=0)
+        if mixer == "mamba":
+            out, (nconv, nh) = SSM.ssm_mix(mp, xn_p, cfg, pc, state=(conv, h))
+        else:
+            out, (nconv, nh) = RG.rglru_mix(mp, xn_p, cfg, pc, state=(conv, h))
+        for i in range(nP):
+            new_cache[f"conv{i}"] = nconv[i]
+            new_cache[f"h{i}"] = nh[i]
+    x = x + pc.psum_tp(out).astype(x.dtype)
+
+    if group.specs[0].cross_attn and f"xk0" in cache:
+        xnx = _norm_inputs(gp, "lnx", x, cfg, group)
+        outs = []
+        for i in range(nP):
+            ph = jax.tree.map(lambda w: w[i], gp["xattn"]) if group.pair else gp["xattn"]
+            xi = xnx[i] if group.pair else xnx
+            q = A.project_q(ph, xi, cfg, dims, positions=None,
+                            kind="attn_bidir", pair=False)
+            ks = A.select_local_kv(cache[f"xk{i}"], dims, pc)
+            vs = A.select_local_kv(cache[f"xv{i}"], dims, pc)
+            Hk, g = A.core_layout(dims)
+            B = q.shape[0]
+            o = A.attention_core(q.reshape(B, 1, Hk, g, dims.hd), ks, vs,
+                                 kind="attn_bidir", impl="dense")
+            o = o.reshape(B, 1, dims.hq, dims.hd)
+            outs.append(A.output_proj(ph, o, dims, pair=False))
+            new_cache[f"xk{i}"], new_cache[f"xv{i}"] = cache[f"xk{i}"], cache[f"xv{i}"]
+        x = x + pc.psum_tp(sum(outs)).astype(x.dtype)
+
+    if group.specs[0].ffn is not None:
+        xn2 = _norm_inputs(gp, "ln2", x, cfg, group)
+        out, _ = ffn_phase(gp, xn2, cfg, pc, group=group)
+        x = x + pc.psum_tp(out).astype(x.dtype)
+    return x, new_cache

@@ -1,0 +1,101 @@
+"""Vocab-parallel embedding, LM head, cross-entropy and sampling.
+
+The vocabulary (up to 257k for paligemma) is sharded over the ``model``
+axis. Lookup produces a TP-partial embedding (combined by the caller's
+phase_out). The head computes LOCAL logits [B,S,V/tp] — never materialising
+full-vocab logits — and the loss/sampling run vocab-parallel with O(B*S)
+collectives (Megatron-style).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.model.params import PD
+from repro.parallel.context import ParallelContext
+
+
+def vocab_pad(V: int, tp: int) -> int:
+    return -(-V // tp) * tp
+
+
+def embed_template(cfg, tp: int):
+    Vp = vocab_pad(cfg.vocab_size, tp)
+    t = {"tok": PD((Vp, cfg.d_model), P("model", None), fan_in=cfg.d_model)}
+    if cfg.pos_embed == "learned":
+        t["pos"] = PD((cfg.max_position, cfg.d_model), P(), fan_in=cfg.d_model)
+    if not cfg.tie_embeddings:
+        t["head"] = PD((cfg.d_model, Vp), P(None, "model"))
+    return t
+
+
+def embed_lookup(p, ids, pc: ParallelContext):
+    """ids: [B,S] global token ids -> TP-partial [B,S,D]."""
+    tok = p["tok"]
+    v_local = tok.shape[0]
+    base = pc.tp_index() * v_local
+    lid = ids - base
+    ok = (lid >= 0) & (lid < v_local)
+    emb = tok[jnp.clip(lid, 0, v_local - 1)]
+    return jnp.where(ok[..., None], emb, 0).astype(jnp.bfloat16 if tok.dtype == jnp.bfloat16 else tok.dtype)
+
+
+def add_positions(p, x, positions):
+    if "pos" not in p:
+        return x
+    return x + p["pos"][positions].astype(x.dtype)
+
+
+def local_logits(p, x, cfg, pc: ParallelContext):
+    """x: [B,S,D] full -> local logits [B,S,V/tp] (fp32, pad masked)."""
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = (x @ w.astype(x.dtype)).astype(jnp.float32)
+    v_local = logits.shape[-1]
+    base = pc.tp_index() * v_local
+    col = base + jnp.arange(v_local)
+    logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def vocab_parallel_xent(logits, labels, pc: ParallelContext, *, mask=None):
+    """Mean token cross-entropy from LOCAL logits [B,S,Vl] + global labels."""
+    v_local = logits.shape[-1]
+    base = pc.tp_index() * v_local
+    # Max shift is for numerical stability only — the lse gradient is
+    # invariant to it, and pmax has no VJP, so detach it.
+    m = pc.pmax_tp(lax.stop_gradient(logits).max(-1))
+    lse = m + jnp.log(pc.psum_tp(jnp.exp(logits - m[..., None]).sum(-1)))
+    lid = labels - base
+    ok = (lid >= 0) & (lid < v_local)
+    tgt = jnp.take_along_axis(logits, jnp.clip(lid, 0, v_local - 1)[..., None], axis=-1)[..., 0]
+    tgt = pc.psum_tp(jnp.where(ok, tgt, 0.0))
+    nll = lse - tgt
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def vocab_parallel_argmax(logits, pc: ParallelContext):
+    """Greedy next token from LOCAL logits [B,Vl] (deterministic tie-break:
+    smallest global id among the maximisers)."""
+    v_local = logits.shape[-1]
+    base = pc.tp_index() * v_local
+    val = logits.max(-1)
+    idx = base + logits.argmax(-1).astype(jnp.int32)
+    gmax = pc.pmax_tp(val)
+    cand = jnp.where(val >= gmax, idx, jnp.int32(2**30))
+    return -pc.pmax_tp(-cand)  # global min over candidates
+
+
+def vocab_parallel_sample(logits, key, temperature, pc: ParallelContext):
+    """Gumbel-max sampling over the sharded vocabulary: each rank draws
+    independent gumbels for ITS columns (key folded with tp rank), then the
+    global argmax is exact sampling from softmax(logits/T)."""
+    rk = jax.random.fold_in(key, pc.tp_index())
+    g = jax.random.gumbel(rk, logits.shape, jnp.float32)
+    return vocab_parallel_argmax(logits / jnp.maximum(temperature, 1e-6) + g, pc)

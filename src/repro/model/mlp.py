@@ -1,0 +1,61 @@
+"""Tensor-parallel MLP (gated SwiGLU/GeGLU or plain 2-matrix GeLU).
+
+LP pairs: the paper concatenates both layers' up-projections along d_ff and
+keeps separate low-rank down projections whose partial sums merge in the ONE
+reduction. Here that is an einsum with a leading pair axis; the down
+projection contracts over the pair axis too, so the psum that follows is the
+single sync point for the FFN phase of two layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.model.params import PD
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+
+
+def mlp_template(cfg, tp: int):
+    D, F = cfg.d_model, cfg.d_ff
+    assert F % tp == 0, (cfg.name, F, tp)
+    t = {"w_up": PD((D, F), P(None, "model")), "w_down": PD((F, D), P("model", None))}
+    if cfg.mlp_gated:
+        t["w_gate"] = PD((D, F), P(None, "model"))
+    if getattr(cfg, "mlp_bias", False):
+        t["b_up"] = PD((F,), P("model"), init="zeros")
+        t["b_down"] = PD((D,), P(), init="zeros")
+    return t
+
+
+def mlp_forward(p, xn, cfg, tp: int, *, pair: bool):
+    """xn: [B,S,D] or [2,B,S,D] (pair, per-path normalised inputs).
+    Returns the PARTIAL output [B,S,D]; caller runs phase_out (psum)."""
+    act = _ACTS[cfg.mlp_act]
+    if pair:
+        up = jnp.einsum("pbsd,pdf->pbsf", xn, p["w_up"].astype(xn.dtype))
+        if p.get("b_up") is not None:
+            up = up + p["b_up"][:, None, None, :].astype(up.dtype)
+        if cfg.mlp_gated:
+            gate = jnp.einsum("pbsd,pdf->pbsf", xn, p["w_gate"].astype(xn.dtype))
+            h = act(gate.astype(jnp.float32)).astype(up.dtype) * up
+        else:
+            h = act(up.astype(jnp.float32)).astype(up.dtype)
+        y = jnp.einsum("pbsf,pfd->bsd", h, p["w_down"].astype(h.dtype))
+    else:
+        up = xn @ p["w_up"].astype(xn.dtype)
+        if p.get("b_up") is not None:
+            up = up + p["b_up"].astype(up.dtype)
+        if cfg.mlp_gated:
+            gate = xn @ p["w_gate"].astype(xn.dtype)
+            h = act(gate.astype(jnp.float32)).astype(up.dtype) * up
+        else:
+            h = act(up.astype(jnp.float32)).astype(up.dtype)
+        y = h @ p["w_down"].astype(h.dtype)
+    if p.get("b_down") is not None:
+        bd = p["b_down"].astype(jnp.float32)
+        if pair:
+            bd = bd.sum(axis=0)  # both paths' biases enter the one reduction
+        y = y + (bd / tp).astype(y.dtype)
+    return y

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Design (replicated-activation EP): inside a TP region the tokens are already
+replicated across the model axis, so expert dispatch needs NO all_to_all —
+each rank gathers the tokens routed to ITS experts (capacity-bounded,
+sort-free cumsum dispatch), runs them through its local experts, scatters the
+weighted results back, and the ordinary phase-exit psum both completes the
+combine and merges with the attention residual. For an LP pair the two
+layers' expert sets form one virtual 2E-expert dispatch and the pair still
+costs ONE reduction — the paper's sync-halving carries over to MoE.
+
+Aux outputs (load-balance loss) follow Switch/GShard: mean(frac_tokens *
+frac_router_prob) * E.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.model.params import PD
+from repro.parallel.context import ParallelContext
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu}
+
+
+def moe_template(cfg, tp: int):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    assert E % tp == 0, (cfg.name, E, tp)
+    t = {
+        "router": PD((D, E), P(), fan_in=D),
+        "w_up": PD((E, D, F), P("model", None, None)),
+        "w_down": PD((E, F, D), P("model", None, None)),
+    }
+    if cfg.mlp_gated:
+        t["w_gate"] = PD((E, D, F), P("model", None, None))
+    if cfg.moe_shared_expert:
+        t["shared"] = {
+            "w_up": PD((D, F), P(None, "model")),
+            "w_down": PD((F, D), P("model", None)),
+        }
+        if cfg.mlp_gated:
+            t["shared"]["w_gate"] = PD((D, F), P(None, "model"))
+    return t
+
+
+def capacity(n_tokens: int, cfg) -> int:
+    c = int(math.ceil(n_tokens * cfg.moe_top_k * cfg.moe_capacity_factor / cfg.moe_experts))
+    return max(8, -(-c // 8) * 8)  # pad to an MXU-friendly multiple
+
+
+def _route(router_logits, cfg):
+    """Top-k routing. Returns (expert_idx [T,k], weight [T,k], aux_loss)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)  # [T,E]
+    w, idx = lax.top_k(probs, cfg.moe_top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss.
+    E = cfg.moe_experts
+    hot = jax.nn.one_hot(idx[:, 0], E)  # primary assignment
+    frac_tokens = hot.mean(0)
+    frac_probs = probs.mean(0)
+    aux = (frac_tokens * frac_probs).sum() * E
+    return idx, w.astype(jnp.float32), aux
+
+
+def moe_forward(p, xn, cfg, pc: ParallelContext, *, pair: bool):
+    """xn: [B,S,D] or [2,B,S,D]. Returns (partial_out [B,S,D], aux_loss).
+
+    Partial: every rank contributes only its local experts' outputs (plus its
+    shard of the shared expert); phase_out completes the combine.
+    """
+    if pair:
+        out_a, aux_a = _moe_single(jax.tree.map(lambda x: x[0], p), xn[0], cfg, pc)
+        out_b, aux_b = _moe_single(jax.tree.map(lambda x: x[1], p), xn[1], cfg, pc)
+        return out_a + out_b, 0.5 * (aux_a + aux_b)
+    return _moe_single(p, xn, cfg, pc)
+
+
+def _moe_single(p, xn, cfg, pc: ParallelContext):
+    B, S, D = xn.shape
+    T = B * S
+    E = cfg.moe_experts
+    tp = pc.tp_size
+    e_local = E // tp
+    C = capacity(T, cfg)
+    x = xn.reshape(T, D)
+
+    idx, w, aux = _route(x @ p["router"].astype(x.dtype), cfg)  # [T,k]
+
+    k = cfg.moe_top_k
+    slot_expert = idx.reshape(-1)                     # [T*k]
+    slot_weight = w.reshape(-1)
+    slot_token = jnp.repeat(jnp.arange(T), k)
+
+    # Position of each slot inside its expert's buffer (cumsum dispatch).
+    onehot = jax.nn.one_hot(slot_expert, E, dtype=jnp.int32)        # [T*k,E]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)[jnp.arange(T * k), slot_expert]
+    keep = pos_in_expert < C
+
+    # This rank owns experts [lo, lo + e_local).
+    lo = pc.tp_index() * e_local
+    local_e = slot_expert - lo
+    mine = keep & (local_e >= 0) & (local_e < e_local)
+    # Dropped/foreign slots write to a trash row via clamped indices + drop mode.
+    le = jnp.where(mine, local_e, 0)
+    pe = jnp.where(mine, pos_in_expert, C)  # C == out of range -> dropped
+
+    # Chunked dispatch: the [T*k, D] gather is materialised CHUNK slots at a
+    # time (32k-token prefill would otherwise stage multi-GB temporaries —
+    # EXPERIMENTS.md §Perf iteration 3).
+    n_slots = T * k
+    CHUNK = 16384
+    buf = jnp.zeros((e_local, C + 1, D), x.dtype)
+    if n_slots <= CHUNK:
+        buf = buf.at[le, pe].add(jnp.where(mine[:, None], x[slot_token], 0))
+    else:
+        pad = (-n_slots) % CHUNK
+        le_c = jnp.pad(le, (0, pad)).reshape(-1, CHUNK)
+        pe_c = jnp.pad(pe, (0, pad), constant_values=C).reshape(-1, CHUNK)
+        st_c = jnp.pad(slot_token, (0, pad)).reshape(-1, CHUNK)
+        mi_c = jnp.pad(mine, (0, pad)).reshape(-1, CHUNK)
+
+        def disp(b, args):
+            lec, pec, stc, mic = args
+            return b.at[lec, pec].add(
+                jnp.where(mic[:, None], x[stc], 0)), None
+
+        buf, _ = lax.scan(disp, buf, (le_c, pe_c, st_c, mi_c))
+    buf = buf[:, :C]
+
+    act = _ACTS[cfg.mlp_act]
+    up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype))
+    if cfg.mlp_gated:
+        gate = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype))
+        h = act(gate.astype(jnp.float32)).astype(up.dtype) * up
+    else:
+        h = act(up.astype(jnp.float32)).astype(up.dtype)
+    eout = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(h.dtype))  # [e_local,C,D]
+
+    # Combine: weighted scatter back to tokens (partial across ranks),
+    # chunked like the dispatch.
+    out = jnp.zeros((T, D), x.dtype)
+    if n_slots <= CHUNK:
+        gathered = eout[le, jnp.where(mine, pe, 0)]                 # [T*k,D]
+        contrib = jnp.where(mine[:, None],
+                            gathered * slot_weight[:, None].astype(gathered.dtype), 0)
+        out = out.at[slot_token].add(contrib)
+    else:
+        pad = (-n_slots) % CHUNK
+        w_c = jnp.pad(slot_weight, (0, pad)).reshape(-1, CHUNK)
+
+        def comb(o, args):
+            lec, pec, stc, mic, wc = args
+            g = eout[lec, jnp.where(mic, pec, 0)]
+            c = jnp.where(mic[:, None], g * wc[:, None].astype(g.dtype), 0)
+            return o.at[stc].add(c), None
+
+        out, _ = lax.scan(comb, out, (le_c, pe_c, st_c, mi_c, w_c))
+
+    if cfg.moe_shared_expert:
+        sp = p["shared"]
+        sup = x @ sp["w_up"].astype(x.dtype)
+        if cfg.mlp_gated:
+            sg = x @ sp["w_gate"].astype(x.dtype)
+            sh = act(sg.astype(jnp.float32)).astype(sup.dtype) * sup
+        else:
+            sh = act(sup.astype(jnp.float32)).astype(sup.dtype)
+        out = out + sh @ sp["w_down"].astype(sh.dtype)  # TP-partial as usual
+
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,79 @@
+"""Normalisation layers (fp32 statistics, bf16-safe).
+
+``dual_norm`` is the LP-specific fused form: an LP pair needs BOTH layers'
+norms of the SAME input tensor; computing them together shares the variance
+reduction and (on TPU, via the Pallas kernel in repro.kernels.dual_rmsnorm)
+reads ``x`` from HBM once instead of twice.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _stats_rms(x32):
+    return jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6, plus_one: bool = False):
+    x32 = x.astype(jnp.float32)
+    inv = jnp.reciprocal(jnp.sqrt(_stats_rms(x32) + eps))
+    s = (1.0 + scale.astype(jnp.float32)) if plus_one else scale.astype(jnp.float32)
+    return (x32 * inv * s).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    xc = x32 - mu
+    inv = jnp.reciprocal(jnp.sqrt(jnp.mean(jnp.square(xc), axis=-1, keepdims=True) + eps))
+    return (xc * inv * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(x, p, cfg):
+    """Dispatch on the architecture's norm kind. ``p`` is {"scale"[, "bias"]}."""
+    if cfg.norm_kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"], plus_one=cfg.norm_plus_one)
+
+
+_DUAL_IMPL = "xla"
+
+
+def set_dual_impl(impl: str) -> None:
+    """'xla' (default) or 'pallas' (repro.kernels.dual_rmsnorm fusion)."""
+    global _DUAL_IMPL
+    assert impl in ("xla", "pallas"), impl
+    _DUAL_IMPL = impl
+
+
+def dual_norm(x, p_a, p_b, cfg):
+    """Both LP-pair norms of the same input; shares the fp32 statistics."""
+    if _DUAL_IMPL == "pallas" and cfg.norm_kind == "rmsnorm":
+        from repro.kernels import ops as KOPS
+        return KOPS.dual_rmsnorm(x, p_a["scale"], p_b["scale"],
+                                 plus_one=cfg.norm_plus_one)
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        xc = x32 - mu
+        inv = jnp.reciprocal(jnp.sqrt(jnp.mean(jnp.square(xc), axis=-1, keepdims=True) + 1e-5))
+        xn = xc * inv
+        ya = xn * p_a["scale"].astype(jnp.float32) + p_a["bias"].astype(jnp.float32)
+        yb = xn * p_b["scale"].astype(jnp.float32) + p_b["bias"].astype(jnp.float32)
+    else:
+        inv = jnp.reciprocal(jnp.sqrt(_stats_rms(x32) + 1e-6))
+        xn = x32 * inv
+        sa = p_a["scale"].astype(jnp.float32)
+        sb = p_b["scale"].astype(jnp.float32)
+        if cfg.norm_plus_one:
+            sa, sb = 1.0 + sa, 1.0 + sb
+        ya, yb = xn * sa, xn * sb
+    return ya.astype(x.dtype), yb.astype(x.dtype)
+
+
+def init_norm(cfg, d: int):
+    p = {"scale": jnp.zeros((d,), jnp.float32) if cfg.norm_plus_one else jnp.ones((d,), jnp.float32)}
+    if cfg.norm_kind == "layernorm":
+        p["scale"] = jnp.ones((d,), jnp.float32)
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p

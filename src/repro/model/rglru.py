@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) with tensor parallelism.
+
+Structure: gate branch (linear -> GeLU) * recurrent branch (linear -> causal
+conv -> RG-LRU), then a row-parallel output projection. The LRU width is
+sharded over ``model``; the per-channel recurrence is rank-local, so a block
+costs exactly ONE sync (the phase-exit psum) and an LP pair of two recurrent
+blocks still costs one.
+
+The input/recurrence gates use per-channel (diagonal) weights — a documented
+simplification of Griffin's block-diagonal heads (DESIGN.md §deviations).
+Shares the chunked/sequential scan machinery with the Mamba mixer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.model.params import PD
+from repro.model.ssm import _causal_conv, _scan_chunked, _scan_seq
+from repro.parallel.context import ParallelContext
+
+_C_RGLRU = 8.0
+
+
+def rglru_template(cfg, tp: int):
+    D, W, K = cfg.d_model, cfg.lru_width, cfg.rec_conv
+    assert W % tp == 0
+    return {
+        "w_gate": PD((D, W), P(None, "model")),
+        "w_rec": PD((D, W), P(None, "model")),
+        "conv_w": PD((K, W), P(None, "model"), fan_in=K),
+        "conv_b": PD((W,), P("model"), init="zeros"),
+        "lam": PD((W,), P("model"), init="ones"),    # softplus(lam) ~ decay rate
+        "wa": PD((W,), P("model"), init="zeros"),
+        "ba": PD((W,), P("model"), init="zeros"),
+        "wx": PD((W,), P("model"), init="zeros"),
+        "bx": PD((W,), P("model"), init="zeros"),
+        "w_out": PD((W, D), P("model", None)),
+    }
+
+
+def rglru_mix(p, xn, cfg, pc: ParallelContext, *, impl="chunked", chunk=256,
+              state=None):
+    """xn: [P,B,S,D]. Returns (partial [B,S,D], (conv_state, h))."""
+    Pp, B, S, D = xn.shape
+    K = cfg.rec_conv
+
+    gate = jax.nn.gelu(
+        jnp.einsum("pbsd,pdw->pbsw", xn, p["w_gate"].astype(xn.dtype)).astype(jnp.float32))
+    xr = jnp.einsum("pbsd,pdw->pbsw", xn, p["w_rec"].astype(xn.dtype))
+
+    if state is not None:
+        conv_prev, h_prev = state
+        xcat = jnp.concatenate([conv_prev.astype(xr.dtype), xr], axis=2)
+        new_conv = xcat[:, :, -(K - 1):, :]
+        xc = _causal_conv(xcat, p["conv_w"], p["conv_b"])[:, :, -S:, :]
+    else:
+        xc = _causal_conv(xr, p["conv_w"], p["conv_b"])
+        new_conv = xr[:, :, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            xr, ((0, 0), (0, 0), (K - 1 - S, 0), (0, 0)))
+        W = xr.shape[-1]
+        h_prev = jnp.zeros((Pp, B, W, 1), jnp.float32)
+
+    x32 = xc.astype(jnp.float32)
+    r = jax.nn.sigmoid(x32 * p["wa"][:, None, None, :] + p["ba"][:, None, None, :])
+    i = jax.nn.sigmoid(x32 * p["wx"][:, None, None, :] + p["bx"][:, None, None, :])
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lam"])[:, None, None, :] * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * x32)
+
+    # Per-channel recurrence == the N=1 case of the SSM scan.
+    a4, b4 = a[..., None], b[..., None]
+    if state is not None or impl == "seq":
+        y, hT = _scan_seq(a4, b4, h_prev)
+    elif impl == "pallas":
+        from repro.kernels import ops as KOPS
+        Pp_, B_, S_, C_ = a.shape
+        y2, h2 = KOPS.ssm_scan(a4.reshape(Pp_ * B_, S_, C_, 1),
+                               b4.reshape(Pp_ * B_, S_, C_, 1),
+                               h_prev.reshape(Pp_ * B_, C_, 1))
+        y = y2.reshape(Pp_, B_, S_, C_, 1)
+        hT = h2.reshape(Pp_, B_, C_, 1)
+    else:
+        y, hT = _scan_chunked(a4, b4, h_prev, chunk)
+    y = y[..., 0] * gate
+
+    out = jnp.einsum("pbsw,pwd->bsd", y.astype(xn.dtype), p["w_out"].astype(xn.dtype))
+    return out, (new_conv, hT)

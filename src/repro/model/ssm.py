@@ -1,0 +1,153 @@
+"""Mamba-1 selective SSM mixer (falcon-mamba) with tensor parallelism.
+
+TP: d_inner is sharded over ``model`` (in_proj column-split, depthwise conv
+and the per-channel selective scan are local, out_proj row-split). The only
+mid-block sync is the tiny x_proj psum ([B,S,dt_rank+2N]); for an LP pair
+both paths' x_proj partials are stacked and psum'd ONCE, and the pair's
+out_proj partials sum into the single phase-exit reduction — the paper's
+halving applies to attention-free layers too.
+
+Internally everything carries a leading path axis P (1 = single layer,
+2 = LP pair) so single and pair share one code path.
+
+Scan impls: "seq" (lax.scan oracle), "chunked" (intra-chunk associative scan,
+sequential across chunks — the XLA stand-in for the Pallas kernel in
+repro.kernels.ssm_scan).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.model.params import PD
+from repro.parallel.context import ParallelContext
+
+
+def ssm_template(cfg, tp: int):
+    D = cfg.d_model
+    di = cfg.d_inner
+    assert di % tp == 0
+    R, N, K = cfg.dt_rank, cfg.ssm_state, cfg.ssm_conv
+    return {
+        "w_in": PD((D, 2 * di), P(None, "model")),          # [x; z]
+        "conv_w": PD((K, di), P(None, "model"), init="normal", fan_in=K),
+        "conv_b": PD((di,), P("model"), init="zeros"),
+        "w_x": PD((di, R + 2 * N), P("model", None)),        # row-parallel
+        "w_dt": PD((R, di), P(None, "model")),
+        "dt_bias": PD((di,), P("model"), init="zeros"),
+        "A_log": PD((di, N), P("model", None), init="zeros"),
+        "D": PD((di,), P("model"), init="ones"),
+        "w_out": PD((di, D), P("model", None)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: [P,B,S,C]; w: [P,K,C]."""
+    K = w.shape[1]
+    out = b[:, None, None, :].astype(jnp.float32)
+    for j in range(K):
+        shift = K - 1 - j
+        xs = jnp.pad(x, ((0, 0), (0, 0), (shift, 0), (0, 0)))[:, :, : x.shape[2], :]
+        out = out + xs.astype(jnp.float32) * w[:, j][:, None, None, :].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _scan_seq(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t over axis 2. a,b: [P,B,S,C,N]."""
+
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    aT = jnp.moveaxis(a, 2, 0)
+    bT = jnp.moveaxis(b, 2, 0)
+    hT, ys = lax.scan(step, h0, (aT, bT))
+    return jnp.moveaxis(ys, 0, 2), hT
+
+
+def _scan_chunked(a, b, h0, chunk: int):
+    S = a.shape[2]
+    if S <= chunk:
+        cum = lax.associative_scan(_compose, (a, b), axis=2)
+        y = cum[1] + cum[0] * h0[:, :, None]
+        return y, y[:, :, -1]
+    assert S % chunk == 0
+    nc = S // chunk
+    ar = jnp.moveaxis(a.reshape(a.shape[0], a.shape[1], nc, chunk, *a.shape[3:]), 2, 0)
+    br = jnp.moveaxis(b.reshape(b.shape[0], b.shape[1], nc, chunk, *b.shape[3:]), 2, 0)
+
+    def step(h, ab):
+        ac, bc = ab  # [P,B,chunk,C,N]
+        cum = lax.associative_scan(_compose, (ac, bc), axis=2)
+        y = cum[1] + cum[0] * h[:, :, None]
+        return y[:, :, -1], y
+
+    hT, ys = lax.scan(step, h0, (ar, br))  # ys: [nc,P,B,chunk,C,N]
+    y = jnp.moveaxis(ys, 0, 2).reshape(a.shape)
+    return y, hT
+
+
+def _compose(e1, e2):
+    a1, b1 = e1
+    a2, b2 = e2
+    return a1 * a2, a2 * b1 + b2
+
+
+def ssm_mix(p, xn, cfg, pc: ParallelContext, *, impl="chunked", chunk=256,
+            state=None):
+    """xn: [P,B,S,D] per-path normalised inputs. Returns (partial [B,S,D],
+    new_state) where state = (conv_state [P,B,K-1,di], h [P,B,di,N]).
+    When ``state`` is given, runs in stateful (decode) mode."""
+    Pp, B, S, D = xn.shape
+    N, K = cfg.ssm_state, cfg.ssm_conv
+    w_in = p["w_in"]
+    di = w_in.shape[-1] // 2
+
+    xz = jnp.einsum("pbsd,pde->pbse", xn, w_in.astype(xn.dtype))
+    xin, z = xz[..., :di], xz[..., di:]
+
+    if state is not None:
+        conv_prev, h_prev = state
+        xcat = jnp.concatenate([conv_prev.astype(xin.dtype), xin], axis=2)
+        new_conv = xcat[:, :, -(K - 1):, :]
+        xc = _causal_conv(xcat, p["conv_w"], p["conv_b"])[:, :, -S:, :]
+    else:
+        xc = _causal_conv(xin, p["conv_w"], p["conv_b"])
+        new_conv = xin[:, :, -(K - 1):, :] if S >= K - 1 else jnp.pad(
+            xin, ((0, 0), (0, 0), (K - 1 - S, 0), (0, 0)))
+        h_prev = jnp.zeros((Pp, B, di, N), jnp.float32)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(xc.dtype)
+
+    # x_proj: row-parallel -> ONE stacked psum for all paths.
+    bcd_part = jnp.einsum("pbsc,pce->pbse", xc, p["w_x"].astype(xc.dtype))
+    bcd = pc.psum_tp(bcd_part.astype(jnp.float32))
+    R = cfg.dt_rank
+    dt_raw, Bt, Ct = bcd[..., :R], bcd[..., R:R + N], bcd[..., R + N:]
+
+    dt = jax.nn.softplus(
+        jnp.einsum("pbsr,prc->pbsc", dt_raw, p["w_dt"].astype(jnp.float32))
+        + p["dt_bias"][:, None, None, :].astype(jnp.float32))          # [P,B,S,di]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                        # [P,di,N]
+    a = jnp.exp(dt[..., None] * A[:, None, None])                       # [P,B,S,di,N]
+    b = (dt * xc.astype(jnp.float32))[..., None] * Bt[..., None, :]     # [P,B,S,di,N]
+
+    if state is not None or impl == "seq":
+        y, hT = _scan_seq(a, b, h_prev)
+    elif impl == "pallas":
+        from repro.kernels import ops as KOPS
+        Pp_, B_, S_, C_, N_ = a.shape
+        y2, h2 = KOPS.ssm_scan(a.reshape(Pp_ * B_, S_, C_, N_),
+                               b.reshape(Pp_ * B_, S_, C_, N_),
+                               h_prev.reshape(Pp_ * B_, C_, N_))
+        y = y2.reshape(Pp_, B_, S_, C_, N_)
+        hT = h2.reshape(Pp_, B_, C_, N_)
+    else:
+        y, hT = _scan_chunked(a, b, h_prev, chunk)
+
+    yout = (y * Ct[..., None, :]).sum(-1) + p["D"][:, None, None, :].astype(jnp.float32) * xc.astype(jnp.float32)
+    yout = yout * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("pbsc,pcd->bsd", yout.astype(xn.dtype), p["w_out"].astype(xn.dtype))
+    return out, (new_conv, hT)

@@ -1,0 +1,205 @@
+"""Stack assembly: layers -> LP groups -> scan segments.
+
+The layer list (with its LP pairing plan) is compressed into SEGMENTS of
+identical group signature; each segment's params are stacked on a leading
+axis and applied with ONE lax.scan, so HLO size (and compile time) is flat
+in depth — granite's 88 layers lower as 2-3 scans.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.model import blocks as B
+from repro.model.params import init_tree, pspec_tree, abstract_tree, stack_tmpl
+from repro.parallel.context import ParallelContext
+
+
+@dataclass(frozen=True)
+class Segment:
+    group: B.Group          # representative (layer_ids of the first group)
+    count: int
+
+
+# Dry-run knob: lax.scan hides its trip count from XLA cost analysis, so the
+# roofline lowering unrolls the segment scans (exact FLOP/byte/collective
+# accounting) while production keeps the compact scan form.
+_SCAN_UNROLL = False
+
+
+def set_scan_unroll(flag: bool) -> None:
+    global _SCAN_UNROLL
+    _SCAN_UNROLL = bool(flag)
+
+
+def template_compatible(cfg, a: LayerSpec, b: LayerSpec) -> bool:
+    """Two specs can LP-pair iff their param templates are structurally equal."""
+    ta = jax.tree.structure(B.layer_template(cfg, a, 1))
+    tb = jax.tree.structure(B.layer_template(cfg, b, 1))
+    return ta == tb and a.cross_attn == b.cross_attn and a.ffn == b.ffn
+
+
+def make_groups(cfg: ArchConfig, lp_pairs: Sequence[Tuple[int, int]],
+                specs: Optional[Sequence[LayerSpec]] = None) -> List[B.Group]:
+    """Build the group list from an LP pairing plan (validated)."""
+    specs = list(specs if specs is not None else cfg.layer_specs())
+    n = len(specs)
+    paired = {}
+    seen = set()
+    for (i, j) in lp_pairs:
+        assert j == i + 1, f"LP pairs must be consecutive layers, got {(i, j)}"
+        assert 0 <= i and j < n, (i, j, n)
+        assert i not in seen and j not in seen, f"overlapping LP pairs at {(i, j)}"
+        assert template_compatible(cfg, specs[i], specs[j]), (
+            f"layers {i},{j} of {cfg.name} have incompatible templates")
+        seen.update((i, j))
+        paired[i] = j
+    groups: List[B.Group] = []
+    i = 0
+    while i < n:
+        if i in paired:
+            groups.append(B.Group(True, (specs[i], specs[i + 1]), (i, i + 1)))
+            i += 2
+        else:
+            groups.append(B.Group(False, (specs[i],), (i,)))
+            i += 1
+    return groups
+
+
+def make_segments(groups: Sequence[B.Group]) -> List[Segment]:
+    segs: List[Segment] = []
+    for g in groups:
+        if segs and segs[-1].group.signature == g.signature:
+            segs[-1] = Segment(segs[-1].group, segs[-1].count + 1)
+        else:
+            segs.append(Segment(g, 1))
+    return segs
+
+
+def group_template(cfg, group: B.Group, tp: int):
+    t = B.layer_template(cfg, group.specs[0], tp)
+    return stack_tmpl(t, 2) if group.pair else t
+
+
+def segment_template(cfg, seg: Segment, tp: int):
+    gt = group_template(cfg, seg.group, tp)
+    return stack_tmpl(gt, seg.count) if seg.count > 1 else gt
+
+
+def stack_template(cfg, segments: Sequence[Segment], tp: int):
+    return [segment_template(cfg, s, tp) for s in segments]
+
+
+# ---------------------------------------------------------------------------
+# Application
+# ---------------------------------------------------------------------------
+
+def apply_stack_full(seg_params, x, segments, *, cfg, dims, pc, positions,
+                     prefix_len=0, enc_out=None, attn_impl="auto",
+                     emit_cache=False, max_len=0, kv_mode="heads",
+                     remat=False, scan_impl="chunked", gather_fns=None):
+    """Run all segments over the full sequence.
+
+    ``gather_fns`` (FSDP): one fn per segment mapping the scan-sliced flat
+    shard tree -> full tp-local group params (repro.parallel.fsdp); its AD
+    is the ZeRO-3 gradient reduce_scatter. Under remat the backward pass
+    re-gathers instead of saving the full weights.
+
+    Returns (x, aux, caches) where caches is a list (one stacked tree per
+    segment) when emit_cache else None.
+    """
+    caches = [] if emit_cache else None
+    aux = jnp.float32(0.0)
+    gather_fns = gather_fns or [None] * len(segments)
+    for sp, seg, gather in zip(seg_params, segments, gather_fns):
+        def body(x, gp, _seg=seg, _gather=gather):
+            if _gather is not None:
+                gp = _gather(gp)
+            return B.apply_group_full(
+                gp, x, cfg=cfg, group=_seg.group, dims=dims, pc=pc,
+                positions=positions, prefix_len=prefix_len, enc_out=enc_out,
+                attn_impl=attn_impl, emit_cache=emit_cache, max_len=max_len,
+                kv_mode=kv_mode, scan_impl=scan_impl)
+
+        if remat:
+            body = jax.checkpoint(body)
+        if seg.count == 1:
+            sp1 = jax.tree.map(lambda v: v[0], sp) if gather is not None else sp
+            x, a, c = body(x, sp1)
+            aux = aux + a
+            if emit_cache:
+                caches.append(jax.tree.map(lambda v: v[None], c))
+        else:
+            def scan_body(carry, gp):
+                x, aux = carry
+                x, a, c = body(x, gp)
+                return (x, aux + a), c
+
+            (x, aux), cs = lax.scan(scan_body, (x, aux), sp,
+                                    unroll=seg.count if _SCAN_UNROLL else 1)
+            if emit_cache:
+                caches.append(cs)
+    return x, aux, caches
+
+
+def apply_stack_decode(seg_params, x, caches, t, segments, *, cfg, dims, pc,
+                       kv_mode="heads", gather_fns=None):
+    """One decode step through all segments. caches: list of stacked trees."""
+    new_caches = []
+    gather_fns = gather_fns or [None] * len(segments)
+    for sp, cache, seg, gather in zip(seg_params, caches, segments, gather_fns):
+        def body(x, gp_and_cache, _seg=seg, _gather=gather):
+            gp, c = gp_and_cache
+            if _gather is not None:
+                gp = _gather(gp)
+            return B.apply_group_decode(gp, x, c, t, cfg=cfg, group=_seg.group,
+                                        dims=dims, pc=pc, kv_mode=kv_mode)
+
+        if seg.count == 1:
+            c0 = jax.tree.map(lambda v: v[0], cache)
+            sp1 = jax.tree.map(lambda v: v[0], sp) if gather is not None else sp
+            x, nc = body(x, (sp1, c0))
+            new_caches.append(jax.tree.map(lambda v: v[None], nc))
+        else:
+            # The stacked cache rides in the scan CARRY (updated in place by
+            # dynamic_update_index) rather than as xs->ys, so XLA aliases
+            # the buffers: decode holds ONE copy of the KV cache, not two.
+            def scan_body(carry, gp_i):
+                x, cache_all = carry
+                gp, i = gp_i
+                c = jax.tree.map(
+                    lambda v: lax.dynamic_index_in_dim(v, i, 0, keepdims=False),
+                    cache_all)
+                x, nc = body(x, (gp, c))
+                cache_all = jax.tree.map(
+                    lambda v, n: lax.dynamic_update_index_in_dim(
+                        v, n.astype(v.dtype), i, 0),
+                    cache_all, nc)
+                return (x, cache_all), None
+
+            (x, ncs), _ = lax.scan(scan_body, (x, cache),
+                                   (sp, jnp.arange(seg.count)),
+                                   unroll=seg.count if _SCAN_UNROLL else 1)
+            new_caches.append(ncs)
+    return x, new_caches
+
+
+def stack_cache_meta(cfg, segments, dims, *, batch, max_len, kv_mode,
+                     enc_len=0, dtype=jnp.bfloat16):
+    """(abstract, pspec) cache trees per segment, stacked to [count, ...]."""
+    abss, pss = [], []
+    for seg in segments:
+        a, p = B.group_cache_meta(cfg, seg.group, dims, batch=batch,
+                                  max_len=max_len, kv_mode=kv_mode,
+                                  enc_len=enc_len, dtype=dtype)
+        from jax.sharding import PartitionSpec as P
+        a = jax.tree.map(lambda s: jax.ShapeDtypeStruct((seg.count, *s.shape), s.dtype), a)
+        p = {k: P(None, *p[k]) for k in p}
+        abss.append(a)
+        pss.append(p)
+    return abss, pss

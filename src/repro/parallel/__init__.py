@@ -1,0 +1,2 @@
+from repro.parallel.context import ParallelContext, make_context  # noqa: F401
+from repro.parallel import zero, compress, pp  # noqa: F401

@@ -1,0 +1,151 @@
+"""Explicit-collective parallel context.
+
+All model code takes a ``ParallelContext`` and calls its collective helpers;
+when an axis is ``None`` (single-device tests / reference paths) every helper
+degrades to the identity, so the exact same model code runs inside
+``shard_map`` on a 512-way mesh and in a plain CPU unit test.
+
+Axis roles:
+  tp_axis  ("model") — Megatron tensor parallelism; LP halves syncs on it.
+  dp_axes  (("pod","data")) — pure data parallelism; grads synced across them.
+  pipe_axis ("pipe") — optional GPipe pipeline stage axis.
+
+Sequence parallelism (``sp=True``) replaces each TP all-reduce with a
+reduce-scatter along the sequence dimension at phase exit and an all-gather at
+phase entry (same wire bytes as one all-reduce, but the residual stream and
+the norms between phases run on 1/tp of the tokens).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class ParallelContext:
+    tp_axis: Optional[str] = None
+    tp_size: int = 1
+    dp_axes: Tuple[str, ...] = ()
+    dp_size: int = 1
+    pod_size: int = 1           # leading "pod" factor of the dp axes (DCI)
+    sp: bool = False            # sequence-parallel residual stream
+    seq_axis: int = 1           # which array dim is "sequence" in activations
+
+    # ------------------------------------------------------------------
+    @property
+    def tp(self) -> int:
+        return self.tp_size
+
+    def with_sp(self, sp: bool) -> "ParallelContext":
+        return replace(self, sp=sp)
+
+    def tp_index(self):
+        if self.tp_axis is None:
+            return jnp.int32(0)
+        return lax.axis_index(self.tp_axis)
+
+    # -- raw collectives over the TP axis ------------------------------
+    def psum_tp(self, x):
+        if self.tp_axis is None or self.tp_size == 1:
+            return x
+        return lax.psum(x, self.tp_axis)
+
+    def pmax_tp(self, x):
+        if self.tp_axis is None or self.tp_size == 1:
+            return x
+        return lax.pmax(x, self.tp_axis)
+
+    def all_gather_tp(self, x, axis: int, *, tiled: bool = True):
+        if self.tp_axis is None or self.tp_size == 1:
+            return x
+        return lax.all_gather(x, self.tp_axis, axis=axis, tiled=tiled)
+
+    def psum_scatter_tp(self, x, axis: int):
+        if self.tp_axis is None or self.tp_size == 1:
+            return x
+        return lax.psum_scatter(x, self.tp_axis, scatter_dimension=axis, tiled=True)
+
+    def all_to_all_tp(self, x, split_axis: int, concat_axis: int):
+        if self.tp_axis is None or self.tp_size == 1:
+            return x
+        return lax.all_to_all(
+            x, self.tp_axis, split_axis=split_axis, concat_axis=concat_axis, tiled=True
+        )
+
+    # -- phase boundaries (the paper's sync points) ---------------------
+    # A "phase" is one column-parallel -> local -> row-parallel TP region.
+    # Standard transformer layer: 2 phases (attention, FFN) = 2 syncs.
+    # LP pair: still 2 phases for TWO layers = the paper's halving.
+    def phase_in(self, x, axis: Optional[int] = None):
+        """Enter a TP phase: make the activation full-sequence."""
+        if self.sp:
+            return self.all_gather_tp(x, axis=self.seq_axis if axis is None else axis)
+        return x
+
+    def phase_out(self, x, axis: Optional[int] = None):
+        """Exit a TP phase: combine row-parallel partial sums."""
+        if self.sp:
+            return self.psum_scatter_tp(x, axis=self.seq_axis if axis is None else axis)
+        return self.psum_tp(x)
+
+    def shard_seq(self, x):
+        """Slice a replicated activation down to this rank's seq shard (used
+        when entering an SP region, e.g. right after the embedding psum)."""
+        if not self.sp or self.tp_axis is None or self.tp_size == 1:
+            return x
+        seq = x.shape[self.seq_axis]
+        assert seq % self.tp_size == 0, (seq, self.tp_size)
+        shard = seq // self.tp_size
+        idx = lax.axis_index(self.tp_axis)
+        return lax.dynamic_slice_in_dim(x, idx * shard, shard, axis=self.seq_axis)
+
+    # -- data-parallel helpers ------------------------------------------
+    def psum_dp(self, x):
+        if not self.dp_axes or self.dp_size == 1:
+            return x
+        return lax.psum(x, self.dp_axes)
+
+    def pmean_dp(self, x):
+        if not self.dp_axes or self.dp_size == 1:
+            return x
+        return lax.pmean(x, self.dp_axes)
+
+    def psum_scatter_dp(self, x, axis: int = 0):
+        if not self.dp_axes or self.dp_size == 1:
+            return x
+        return lax.psum_scatter(x, self.dp_axes, scatter_dimension=axis, tiled=True)
+
+    def all_gather_dp(self, x, axis: int = 0, *, tiled: bool = True):
+        if not self.dp_axes or self.dp_size == 1:
+            return x
+        return lax.all_gather(x, self.dp_axes, axis=axis, tiled=tiled)
+
+    def dp_index(self):
+        if not self.dp_axes:
+            return jnp.int32(0)
+        idx = jnp.int32(0)
+        for ax in self.dp_axes:
+            idx = idx * lax.psum(1, ax) + lax.axis_index(ax)
+        return idx
+
+
+def make_context(mesh: jax.sharding.Mesh | None, *, sp: bool = False) -> ParallelContext:
+    """Build a ParallelContext from a production mesh (see launch/mesh.py)."""
+    if mesh is None:
+        return ParallelContext()
+    names = mesh.axis_names
+    tp_axis = "model" if "model" in names else None
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    tp_size = mesh.shape["model"] if tp_axis else 1
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    pod_size = mesh.shape["pod"] if "pod" in names else 1
+    return ParallelContext(
+        tp_axis=tp_axis, tp_size=tp_size, dp_axes=dp_axes, dp_size=dp_size,
+        pod_size=pod_size, sp=sp
+    )

@@ -1,0 +1,245 @@
+"""FSDP / ZeRO-3 sharding of the layer-stack parameters.
+
+For the largest assigned architectures (dbrx-132b: 16.5 GB of bf16 weights
+per chip at TP=16) plain tensor parallelism cannot fit a v5e's 16 GB HBM.
+FSDP stores each SEGMENT's parameters as flat shards over the intra-pod
+``data`` axis and all-gathers ONE GROUP's weights inside the scan body, so
+the full tensors are alive only while that group computes:
+
+    peak = all flat shards (params/data) + one group's full tp-local tensors
+
+Backward comes for free: jax AD of the in-scan all_gather emits a
+reduce_scatter of the cotangent over the same axis — gradients arrive
+already summed over ``data`` and sharded exactly like the parameters, which
+is the ZeRO-3 gradient reduction with no extra trainer code.
+
+Layout per segment leaf (GLOBAL view):
+    (count, data, tp, chunk)   pspec P(None, "data", "model", None)
+with chunk = ceil(prod(tp-local group-leaf shape) / data). The gather runs
+over ``data`` only — never across the pod (DCI) axis; cross-pod the shards
+are replicated and their gradients psum'd (optionally int8-compressed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.model.params import PD, is_pd
+from repro.parallel.context import ParallelContext
+
+PyTree = Any
+
+
+def _local_shape(shape, pspec, tp: int):
+    out = []
+    for i, dim in enumerate(shape):
+        ax = pspec[i] if i < len(pspec) else None
+        names = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        f = tp if "model" in names else 1
+        assert dim % f == 0, (shape, pspec, tp)
+        out.append(dim // f)
+    return tuple(out)
+
+
+def _sharded_dim(pspec) -> Optional[int]:
+    for i, ax in enumerate(pspec):
+        names = ax if isinstance(ax, tuple) else ((ax,) if ax else ())
+        if "model" in names:
+            return i
+    return None
+
+
+@dataclass(frozen=True)
+class SegMeta:
+    """Static description of one FSDP segment's flat layout (one GROUP's
+    template — the count axis is handled outside)."""
+
+    treedef: Any
+    global_shapes: Tuple[Tuple[int, ...], ...]
+    local_shapes: Tuple[Tuple[int, ...], ...]   # tp-local, without count
+    chunks: Tuple[int, ...]
+    sharded_dims: Tuple[Optional[int], ...]     # which dim "model" splits
+    wd_flags: Tuple[float, ...]
+    count: int
+
+    @property
+    def tp_flags(self) -> Tuple[bool, ...]:
+        return tuple(d is not None for d in self.sharded_dims)
+
+
+def segment_meta(group_tmpl: PyTree, count: int, *, tp: int, data: int) -> SegMeta:
+    leaves, treedef = jax.tree.flatten(group_tmpl, is_leaf=is_pd)
+    gshapes, lshapes, chunks, sdims, wdf = [], [], [], [], []
+    for pd in leaves:
+        loc = _local_shape(pd.shape, pd.pspec, tp)
+        n = 1
+        for s in loc:
+            n *= s
+        gshapes.append(tuple(pd.shape))
+        lshapes.append(loc)
+        chunks.append(-(-n // data))
+        sdims.append(_sharded_dim(pd.pspec))
+        wdf.append(1.0 if len(pd.shape) >= 2 else 0.0)
+    return SegMeta(treedef, tuple(gshapes), tuple(lshapes), tuple(chunks),
+                   tuple(sdims), tuple(wdf), count)
+
+
+def flat_segment_pds(meta: SegMeta, *, data: int, tp: int) -> PyTree:
+    """PD tree describing the flat FSDP storage of one segment."""
+    pds = [PD((meta.count, data, tp, c), P(None, "data", "model", None),
+              init="zeros")
+           for c in meta.chunks]
+    return meta.treedef.unflatten(pds)
+
+
+# ---------------------------------------------------------------------------
+# Pack / unpack (GLOBAL arrays; init and mesh-agnostic checkpoints)
+# ---------------------------------------------------------------------------
+
+def _to_tp_rows(x, loc, sdim, tp):
+    """GLOBAL tensor -> (tp, local_size) rows."""
+    if sdim is None:
+        return jnp.broadcast_to(x.reshape(1, -1), (tp, x.size))
+    s = x.shape[sdim]
+    xt = x.reshape(*x.shape[:sdim], tp, s // tp, *x.shape[sdim + 1:])
+    return jnp.moveaxis(xt, sdim, 0).reshape(tp, -1)
+
+
+def _from_tp_rows(rows, gshape, loc, sdim, tp):
+    """(tp, local_size) rows -> GLOBAL tensor."""
+    if sdim is None:
+        return rows[0].reshape(loc)
+    parts = rows.reshape(tp, *loc)
+    out = jnp.moveaxis(parts, 0, sdim)
+    return out.reshape(gshape)
+
+
+def pack_segment(group_params: Sequence[PyTree], meta: SegMeta, *,
+                 data: int, tp: int, dtype=jnp.float32) -> PyTree:
+    """[count group trees of GLOBAL tensors] -> flat (count, data, tp, chunk)."""
+    per_group = []
+    for gp in group_params:
+        leaves = meta.treedef.flatten_up_to(gp)
+        flat = []
+        for x, loc, chunk, sdim in zip(leaves, meta.local_shapes,
+                                       meta.chunks, meta.sharded_dims):
+            rows = _to_tp_rows(jnp.asarray(x), loc, sdim, tp)
+            pad = data * chunk - rows.shape[1]
+            if pad:
+                rows = jnp.pad(rows, ((0, 0), (0, pad)))
+            flat.append(rows.reshape(tp, data, chunk)
+                        .transpose(1, 0, 2).astype(dtype))
+        per_group.append(meta.treedef.unflatten(flat))
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *per_group)
+
+
+def unpack_segment(flat: PyTree, meta: SegMeta, *, data: int, tp: int,
+                   dtype=jnp.float32) -> List[PyTree]:
+    """Inverse of ``pack_segment`` -> list of ``count`` GLOBAL group trees."""
+    leaves = meta.treedef.flatten_up_to(flat)
+    out = []
+    for c in range(meta.count):
+        gl = []
+        for x, gshape, loc, sdim in zip(leaves, meta.global_shapes,
+                                        meta.local_shapes, meta.sharded_dims):
+            rows = x[c].transpose(1, 0, 2).reshape(tp, -1)
+            n = 1
+            for s in loc:
+                n *= s
+            gl.append(_from_tp_rows(rows[:, :n], gshape, loc, sdim, tp)
+                      .astype(dtype))
+        out.append(meta.treedef.unflatten(gl))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The in-scan gather
+# ---------------------------------------------------------------------------
+
+def make_gather_fn(meta: SegMeta, pc: ParallelContext,
+                   dtype=None) -> Callable[[PyTree], PyTree]:
+    """Gather one group's flat shards (chunk,) -> full tp-local tensors.
+
+    Input tree leaves: the scan-sliced, squeezed local shard (chunk,).
+    AD of this all_gather is the ZeRO-3 reduce_scatter of the grads.
+    """
+    data_axis = "data" if "data" in pc.dp_axes else None
+
+    def gather(flat_tree: PyTree) -> PyTree:
+        leaves = meta.treedef.flatten_up_to(flat_tree)
+        out = []
+        for x, loc in zip(leaves, meta.local_shapes):
+            full = (lax.all_gather(x, data_axis, axis=0, tiled=True)
+                    if data_axis is not None else x)
+            n = 1
+            for s in loc:
+                n *= s
+            y = full[:n].reshape(loc)
+            out.append(y if dtype is None else y.astype(dtype))
+        return meta.treedef.unflatten(out)
+
+    return gather
+
+
+# ---------------------------------------------------------------------------
+# int8 weight quantisation for FSDP serving (beyond-paper optimisation: the
+# per-token weight gathers of FSDP decode halve their wire bytes, and the
+# resident shards halve their HBM. Block-128 symmetric scales.)
+# ---------------------------------------------------------------------------
+
+QBLOCK = 128
+
+
+def quantize_segment(flat: PyTree, *, block: int = QBLOCK):
+    """bf16/fp32 flat segment -> {"q": int8 tree, "scale": fp32 tree}."""
+
+    def blocks(x):
+        c = x.shape[-1]
+        pad = (-c) % block
+        xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+        xb = xp.reshape(*x.shape[:-1], -1, block).astype(jnp.float32)
+        scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1, keepdims=True)
+                            / 127.0, 1e-12)
+        return xb, scale, c
+
+    def q_of(x):
+        xb, scale, c = blocks(x)
+        q = jnp.clip(jnp.round(xb / scale), -127, 127).astype(jnp.int8)
+        return q.reshape(*x.shape[:-1], -1)[..., :c]
+
+    def s_of(x):
+        _, scale, _ = blocks(x)
+        return scale[..., 0]
+
+    return {"q": jax.tree.map(q_of, flat),
+            "scale": jax.tree.map(s_of, flat)}
+
+
+def make_gather_fn_q(meta: SegMeta, pc: ParallelContext, dtype=jnp.bfloat16,
+                     *, block: int = QBLOCK) -> Callable[[PyTree], PyTree]:
+    """Gather int8 shards + scales -> dequantised tp-local tensors."""
+    data_axis = "data" if "data" in pc.dp_axes else None
+
+    def gather(tree: PyTree) -> PyTree:
+        q_leaves = meta.treedef.flatten_up_to(tree["q"])
+        s_leaves = meta.treedef.flatten_up_to(tree["scale"])
+        out = []
+        for q, sc, loc in zip(q_leaves, s_leaves, meta.local_shapes):
+            if data_axis is not None:
+                q = lax.all_gather(q, data_axis, axis=0, tiled=True)
+                sc = lax.all_gather(sc, data_axis, axis=0, tiled=True)
+            n = 1
+            for s_ in loc:
+                n *= s_
+            pad = (-q.shape[0]) % block
+            qb = jnp.pad(q, (0, pad)).reshape(-1, block).astype(jnp.float32)
+            deq = (qb * sc[:qb.shape[0], None]).reshape(-1)[:n]
+            out.append(deq.reshape(loc).astype(dtype))
+        return meta.treedef.unflatten(out)
+
+    return gather

@@ -1,0 +1,82 @@
+"""GPipe-style pipeline parallelism over a ``pipe`` mesh axis.
+
+Each pipeline rank holds the parameters of its contiguous stage of layers
+(leading axis of the stacked layer params is sharded over ``pipe``).  The
+schedule runs ``n_micro + n_stages - 1`` ticks; at every tick each stage
+processes one microbatch-slot and the activations rotate one hop with a
+single ``ppermute`` (neighbour-only ICI traffic — exactly what a 1000-node
+TPU torus wants).
+
+This is a feature module for the large-scale story: validated by
+``tests/test_pipeline.py`` on an 8-device CPU sub-mesh; the default 40-cell
+dry-run matrix uses DP x TP only.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PyTree = Any
+
+
+def pipeline_apply(
+    stage_fn: Callable[[PyTree, jax.Array], jax.Array],
+    stage_params: PyTree,
+    x_micro: jax.Array,  # (n_micro, micro_batch, ...) microbatched input
+    *,
+    axis: str,
+    n_stages: int,
+) -> jax.Array:
+    """Run ``x_micro`` through ``n_stages`` pipeline stages.
+
+    ``stage_fn(params, x) -> y`` is this rank's stage (already closed over
+    the ParallelContext for any inner TP). Returns the final-stage outputs
+    gathered back in microbatch order, shape == x_micro.shape.
+    """
+    n_micro = x_micro.shape[0]
+    stage = lax.axis_index(axis)
+    n_ticks = n_micro + n_stages - 1
+    zero = jnp.zeros_like(x_micro[0])
+
+    def tick(carry, t):
+        buf, outs = carry  # buf: activation entering this stage at tick t
+        # Stage 0 injects microbatch t (when in range); others use the buffer.
+        inject = lax.dynamic_index_in_dim(
+            x_micro, jnp.clip(t, 0, n_micro - 1), axis=0, keepdims=False
+        )
+        x_in = jnp.where(stage == 0, inject, buf)
+        y = stage_fn(stage_params, x_in)
+        # Last stage records its result at slot t - (n_stages - 1).
+        out_slot = t - (n_stages - 1)
+        valid = jnp.logical_and(stage == n_stages - 1, out_slot >= 0)
+        outs = lax.cond(
+            valid,
+            lambda o: lax.dynamic_update_index_in_dim(
+                o, y.astype(o.dtype), jnp.maximum(out_slot, 0), axis=0
+            ),
+            lambda o: o,
+            outs,
+        )
+        # Rotate activations one hop downstream.
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        buf = lax.ppermute(y, axis, perm)
+        return (buf, outs), None
+
+    outs0 = jnp.zeros_like(x_micro)
+    (_, outs), _ = lax.scan(tick, (zero, outs0), jnp.arange(n_ticks))
+    # Only the last stage holds real outputs; broadcast them to all stages so
+    # the caller sees replicated results (one extra hop of traffic, but it
+    # keeps the API mesh-agnostic).
+    outs = lax.psum(jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)), axis)
+    return outs
+
+
+def stage_slice(n_layers: int, n_stages: int, stage: int) -> tuple[int, int]:
+    """Contiguous layer range [lo, hi) owned by ``stage`` (balanced split)."""
+    base, rem = divmod(n_layers, n_stages)
+    lo = stage * base + min(stage, rem)
+    hi = lo + base + (1 if stage < rem else 0)
+    return lo, hi

@@ -1,0 +1,9 @@
+from repro.serve.engine import (  # noqa: F401
+    ServeConfig,
+    cache_pspecs,
+    generate,
+    make_prefill,
+    make_serve_step,
+    make_sharded_prefill,
+    make_sharded_serve_step,
+)

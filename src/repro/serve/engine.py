@@ -1,0 +1,180 @@
+"""Serving engine: batched prefill + autoregressive decode with LP models.
+
+The engine exposes the three programs the assigned shapes lower:
+  prefill_step  — logits + cache from a full prompt batch   (prefill_32k)
+  serve_step    — ONE new token against the cache            (decode_32k /
+                  long_500k; this is where LP's sync halving shows up —
+                  seq=1 matmuls are tiny, so decode latency on a TP mesh is
+                  dominated by the per-layer all-reduces the paper removes)
+  generate      — host loop / scanned loop over serve_step
+
+Sampling is vocab-parallel (Gumbel-max over the sharded vocabulary), so full
+logits are never gathered.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.model import embedding as E
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext, make_context
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_len: int = 1024           # KV-cache length
+    temperature: float = 0.0      # 0 -> greedy
+    kv_mode: str = "heads"        # heads | seq  (seq-sharded KV cache)
+    cache_dtype: Any = jnp.bfloat16
+    attn_impl: str = "auto"
+
+
+# ---------------------------------------------------------------------------
+# Local step functions (run under shard_map or plain)
+# ---------------------------------------------------------------------------
+
+def make_prefill(ms: T.ModelStructure, pc: ParallelContext, sv: ServeConfig):
+    def prefill_fn(params, tokens, prefix=None, frames=None):
+        logits, caches = T.prefill(
+            params, tokens, ms=ms, pc=pc, max_len=sv.max_len,
+            prefix_embed=prefix, enc_frames=frames, kv_mode=sv.kv_mode,
+            attn_impl=sv.attn_impl, cache_dtype=sv.cache_dtype)
+        return logits, caches
+    return prefill_fn
+
+
+def make_serve_step(ms: T.ModelStructure, pc: ParallelContext, sv: ServeConfig):
+    """serve_step(params, tok [B], caches, t, key) -> (next_tok [B], caches).
+
+    One full decode iteration: embed -> stack (1 psum per LP group phase) ->
+    head -> vocab-parallel sample.
+    """
+    def serve_fn(params, tok, caches, t, key):
+        logits, caches = T.decode_step(params, tok, caches, t, ms=ms, pc=pc,
+                                       kv_mode=sv.kv_mode)
+        if sv.temperature > 0:
+            nxt = E.vocab_parallel_sample(logits, key, sv.temperature, pc)
+        else:
+            nxt = E.vocab_parallel_argmax(logits, pc)
+        return nxt.astype(jnp.int32), caches
+    return serve_fn
+
+
+def generate(params, prompts, n_new: int, *, ms: T.ModelStructure,
+             pc: ParallelContext, sv: ServeConfig, key=None,
+             prefix=None, frames=None):
+    """Greedy/temperature generation: returns [B, n_new] new tokens.
+
+    The decode loop is a lax.scan (one compiled program regardless of
+    n_new), carrying (tok, caches, t, key).
+    """
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prefill_fn = make_prefill(ms, pc, sv)
+    step_fn = make_serve_step(ms, pc, sv)
+    logits, caches = prefill_fn(params, prompts, prefix, frames)
+    if sv.temperature > 0:
+        tok0 = E.vocab_parallel_sample(logits, key, sv.temperature, pc)
+    else:
+        tok0 = E.vocab_parallel_argmax(logits, pc)
+    tok0 = tok0.astype(jnp.int32)
+    t0 = prompts.shape[1] + (ms.cfg.prefix_len if prefix is not None else 0)
+
+    def body(carry, i):
+        tok, caches, key = carry
+        key, sub = jax.random.split(key)
+        # ``tok`` sits at absolute position t0 + i; its logits predict i+1.
+        nxt, caches = step_fn(params, tok, caches, t0 + i, sub)
+        return (nxt, caches, key), tok
+
+    (last, _, _), toks = lax.scan(body, (tok0, caches, key),
+                                  jnp.arange(n_new - 1))
+    return jnp.concatenate([toks.T, last[:, None]], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Sharded wrappers (mesh execution + dry-run lowering)
+# ---------------------------------------------------------------------------
+
+def cache_pspecs(ms: T.ModelStructure, *, batch: int, sv: ServeConfig,
+                 pc: ParallelContext, shard_batch: bool = True):
+    """(abstract, pspec) for the global cache; batch sharded over dp when
+    ``shard_batch`` (batch==1 long-context cells replicate it)."""
+    abs_, ps_ = T.cache_meta(ms, batch=batch, max_len=sv.max_len,
+                             kv_mode=sv.kv_mode, dtype=sv.cache_dtype)
+    dp = tuple(pc.dp_axes) if pc.dp_axes else (None,)
+    dp_ax = (dp if len(dp) > 1 else dp[0]) if shard_batch else None
+
+    def add_dp(spec):
+        # leading axes: [count, batch, ...] -> shard batch (axis 1) over dp
+        parts = list(spec)
+        parts[1] = dp_ax
+        return P(*parts)
+
+    ps2 = jax.tree.map(add_dp, ps_, is_leaf=lambda x: isinstance(x, P))
+    return abs_, ps2
+
+
+def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
+                            *, batch: int, shard_batch: bool = True):
+    """jit(shard_map(serve_step)) + its in/out specs, for execution and the
+    decode-shape dry-run."""
+    pc = make_context(mesh, sp=False)
+    local = make_serve_step(ms, pc, sv)
+    p_specs = T.param_pspecs(ms)
+    c_abs, c_specs = cache_pspecs(ms, batch=batch, sv=sv, pc=pc,
+                                  shard_batch=shard_batch)
+    dp = tuple(pc.dp_axes) if pc.dp_axes else (None,)
+    dp_ax = (dp if len(dp) > 1 else dp[0]) if shard_batch else None
+    tok_spec = P(dp_ax)
+    wrapped = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(p_specs, tok_spec, c_specs, P(), P()),
+        out_specs=(tok_spec, c_specs),
+        check_vma=False)
+    return jax.jit(wrapped, donate_argnums=(2,)), c_abs, c_specs, pc
+
+
+def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
+                         *, batch: int, prompt_len: int, sp: bool = True):
+    pc = make_context(mesh, sp=sp)
+    local = make_prefill(ms, pc, sv)
+    p_specs = T.param_pspecs(ms)
+    _, c_specs = cache_pspecs(ms, batch=batch, sv=sv, pc=pc)
+    dp = tuple(pc.dp_axes) if pc.dp_axes else (None,)
+    dp_ax = dp if len(dp) > 1 else dp[0]
+    in_specs = [p_specs, P(dp_ax, None)]
+    n_extra = 0
+    if ms.cfg.prefix_len:
+        in_specs.append(P(dp_ax, None, None))
+        n_extra += 1
+    if ms.enc_segments:
+        if not ms.cfg.prefix_len:
+            in_specs.append(P(dp_ax, None, None))
+        else:
+            in_specs.append(P(dp_ax, None, None))
+        n_extra += 1
+
+    def local_n(params, tokens, *extras):
+        prefix = frames = None
+        i = 0
+        if ms.cfg.prefix_len:
+            prefix = extras[i]; i += 1
+        if ms.enc_segments:
+            frames = extras[i]; i += 1
+        return local(params, tokens, prefix, frames)
+
+    wrapped = jax.shard_map(
+        local_n, mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(P(dp_ax, "model"), c_specs),
+        check_vma=False)
+    return jax.jit(wrapped), c_specs, pc

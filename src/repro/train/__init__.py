@@ -1,0 +1,11 @@
+from repro.train.optimizer import OptConfig, schedule_lr  # noqa: F401
+from repro.train.trainer import (  # noqa: F401
+    TrainConfig,
+    abstract_state,
+    init_state,
+    make_eval_step,
+    make_sharded_train_step,
+    make_train_step,
+    state_pspecs,
+)
+from repro.train import checkpoint  # noqa: F401

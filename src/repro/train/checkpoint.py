@@ -1,0 +1,277 @@
+"""Fault-tolerant, mesh-agnostic checkpointing.
+
+Checkpoints store MESH-AGNOSTIC content: master weights and AdamW moments in
+their unflattened PARAM shapes (fp32) plus the step counter. Restoring onto a
+different mesh (elastic re-scale, node loss -> smaller slice) re-flattens the
+same logical arrays under the new (dp, tp) geometry — no resharding tool
+needed.
+
+Durability protocol (survives a kill at any point):
+  1. write every leaf to  <dir>/step_N.tmp/arr_<k>.npy
+  2. write manifest.json (tree structure, shapes, dtypes, sha256 per leaf)
+  3. fsync files, atomically rename step_N.tmp -> step_N
+  4. atomically update <dir>/LATEST to point at step_N
+
+``save_async`` runs steps 1-4 on a background thread (double-buffered:
+a save must finish before the next begins; the training loop never blocks
+on I/O unless it laps the writer).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.model import transformer as T
+from repro.model.params import is_pd
+from repro.parallel.context import ParallelContext
+from repro.train.trainer import TrainConfig, from_flat_global, to_flat_global
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Pack/unpack: train state <-> mesh-agnostic logical arrays
+# ---------------------------------------------------------------------------
+
+def _regular_structure(ms: T.ModelStructure) -> T.ModelStructure:
+    """The non-FSDP twin of ``ms`` — logical checkpoints always use the
+    regular (param-shaped) layout so they are mesh- AND mode-agnostic."""
+    if not ms.fsdp:
+        return ms
+    return T.build_structure(ms.cfg, plan=ms.plan, tp=ms.tp)
+
+
+def _seg_to_regular(flat_seg, seg, meta, ms: T.ModelStructure):
+    """FSDP flat segment -> regular stacked segment tree (count, ...)."""
+    from repro.parallel import fsdp as F
+    groups = F.unpack_segment(flat_seg, meta, data=ms.fsdp_data, tp=ms.tp)
+    if seg.count == 1:
+        return groups[0]
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *groups)
+
+
+def _seg_from_regular(reg_seg, seg, meta, ms: T.ModelStructure, dtype):
+    from repro.parallel import fsdp as F
+    groups = ([jax.tree.map(lambda v: v[i], reg_seg) for i in range(seg.count)]
+              if seg.count > 1 else [reg_seg])
+    return F.pack_segment(groups, meta, data=ms.fsdp_data, tp=ms.tp,
+                          dtype=dtype)
+
+
+def state_to_logical(state: Dict[str, Any], ms: T.ModelStructure,
+                     pc: ParallelContext) -> Dict[str, Any]:
+    """ZeRO train state -> {"master","m","v": param-shaped fp32, "step"}."""
+    reg = _regular_structure(ms)
+    tmpl = T.model_template(reg)
+    leaves, treedef = jax.tree.flatten(tmpl, is_leaf=is_pd)
+    pspecs = [pd.pspec for pd in leaves]
+    shapes = [pd.shape for pd in leaves]
+    metas = T.segment_metas(ms) if ms.fsdp else None
+
+    def unpack(flat_tree):
+        if ms.fsdp:
+            flat_tree = dict(flat_tree)
+            flat_tree["segments"] = [
+                _seg_to_regular(fs, seg, meta, ms)
+                for fs, seg, meta in zip(flat_tree["segments"], ms.segments,
+                                         metas)]
+        flats = treedef.flatten_up_to(flat_tree)
+        out = []
+        for f, s_, ps in zip(flats, shapes, pspecs):
+            if f.shape == s_:  # already param-shaped (FSDP-unpacked)
+                out.append(jnp.asarray(f, jnp.float32))
+            else:
+                out.append(from_flat_global(f, s_, ps, pc))
+        return treedef.unflatten(out)
+
+    return {
+        "master": unpack(state["master"]),
+        "m": unpack(state["m"]),
+        "v": unpack(state["v"]),
+        "step": state["step"],
+    }
+
+
+def logical_to_state(logical: Dict[str, Any], ms: T.ModelStructure,
+                     pc: ParallelContext, tc: TrainConfig) -> Dict[str, Any]:
+    """Inverse: re-flatten under the (possibly different) current mesh /
+    FSDP mode."""
+    reg = _regular_structure(ms)
+    tmpl = T.model_template(reg)
+    leaves, treedef = jax.tree.flatten(tmpl, is_leaf=is_pd)
+    pspecs = [pd.pspec for pd in leaves]
+    metas = T.segment_metas(ms) if ms.fsdp else None
+
+    def pack(tree, dtype=jnp.float32):
+        tree = dict(tree) if ms.fsdp else tree
+        seg_override = None
+        if ms.fsdp:
+            seg_override = [
+                _seg_from_regular(rs, seg, meta, ms, dtype)
+                for rs, seg, meta in zip(tree["segments"], ms.segments, metas)]
+        flats = treedef.flatten_up_to(tree)
+        keyed = treedef.unflatten(
+            [to_flat_global(x, ps, pc) for x, ps in zip(flats, pspecs)])
+        if seg_override is not None:
+            keyed["segments"] = seg_override
+        return keyed
+
+    master = pack(logical["master"])
+    if ms.fsdp:
+        params = dict(jax.tree.map(lambda x: x.astype(tc.param_dtype),
+                                   logical["master"]))
+        params["segments"] = [
+            s.astype(tc.param_dtype) if hasattr(s, "astype") else
+            jax.tree.map(lambda x: x.astype(tc.param_dtype), s)
+            for s in master["segments"]]
+    else:
+        params = jax.tree.map(lambda x: x.astype(tc.param_dtype),
+                              logical["master"])
+    state = {
+        "params": params,
+        "master": master,
+        "m": pack(logical["m"]),
+        "v": pack(logical["v"]),
+        "step": jnp.asarray(logical["step"], jnp.int32),
+    }
+    if tc.compress_pod:
+        from repro.train.trainer import _err_init
+        state["err"] = _err_init(ms, pc, tc)  # EF restarts at zero (lossless)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Disk format
+# ---------------------------------------------------------------------------
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str, logical: Dict[str, Any], step: int) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, name + ".tmp")
+    final = os.path.join(ckpt_dir, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": int(step), "leaves": {}}
+    for i, (key, leaf) in enumerate(_flatten_with_paths(logical)):
+        arr = np.asarray(jax.device_get(leaf))
+        fn = f"arr_{i:05d}.npy"
+        path = os.path.join(tmp, fn)
+        np.save(path, arr)
+        with open(path, "rb") as f:
+            digest = hashlib.sha256(f.read()).hexdigest()
+        manifest["leaves"][key] = {
+            "file": fn, "shape": list(arr.shape), "dtype": str(arr.dtype),
+            "sha256": digest,
+        }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(name)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+        return None
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str, like: Dict[str, Any], *,
+            step: Optional[int] = None, verify: bool = True) -> Dict[str, Any]:
+    """Load a logical checkpoint into the structure of ``like``."""
+    step = latest_step(ckpt_dir) if step is None else step
+    assert step is not None, f"no checkpoint in {ckpt_dir}"
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    keyed = _flatten_with_paths(like)
+    treedef = jax.tree.structure(like)
+    leaves = []
+    for key, ref in keyed:
+        meta = manifest["leaves"][key]
+        path = os.path.join(d, meta["file"])
+        if verify:
+            with open(path, "rb") as f:
+                digest = hashlib.sha256(f.read()).hexdigest()
+            assert digest == meta["sha256"], f"corrupt leaf {key} in {d}"
+        arr = np.load(path)
+        leaves.append(jnp.asarray(arr))
+    return treedef.unflatten(leaves)
+
+
+# ---------------------------------------------------------------------------
+# Async writer
+# ---------------------------------------------------------------------------
+
+class AsyncCheckpointer:
+    """Double-buffered background checkpoint writer with a bounded queue of
+    one: a new save waits for the previous one to commit (backpressure
+    instead of unbounded memory growth)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, logical: Dict[str, Any], step: int) -> None:
+        self.wait()
+        # device_get on the caller thread (arrays may be donated next step).
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), logical)
+
+        def work():
+            try:
+                save(self.ckpt_dir, host, step)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)

@@ -1,0 +1,83 @@
+"""AdamW + LR schedules (WSD per MiniCPM, cosine, constant).
+
+The update operates on flat fp32 ZeRO shards (repro.parallel.zero); the
+trainer owns flattening/gathering. Decoupled weight decay per Loshchilov &
+Hutter — the paper's fine-tuning recipe (Table 2) uses AdamW with a linear
+decay from 1e-4.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "wsd"  # wsd | cosine | linear | const
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    decay_frac: float = 0.1  # WSD: final fraction of steps spent decaying
+    min_lr_frac: float = 0.0
+
+
+def schedule_lr(opt: OptConfig, step) -> jax.Array:
+    """LR at ``step`` (0-based, fp32). All branches are traceable."""
+    s = jnp.asarray(step, jnp.float32)
+    # (s+1)/warmup so step 0 trains at lr/warmup, not 0; warmup=0 disables.
+    warm = jnp.minimum((s + 1.0) / max(opt.warmup_steps, 1), 1.0)
+    total = float(opt.total_steps)
+    lo = opt.min_lr_frac
+    if opt.schedule == "const":
+        frac = jnp.float32(1.0)
+    elif opt.schedule == "linear":
+        frac = jnp.maximum(lo, 1.0 - s / total)
+    elif opt.schedule == "cosine":
+        prog = jnp.clip(s / total, 0.0, 1.0)
+        frac = lo + (1 - lo) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    elif opt.schedule == "wsd":
+        # Warmup -> Stable -> Decay (MiniCPM): stable at lr, then linear
+        # decay over the last decay_frac of training.
+        decay_start = total * (1.0 - opt.decay_frac)
+        prog = jnp.clip((s - decay_start) / jnp.maximum(total - decay_start, 1), 0, 1)
+        frac = 1.0 - (1.0 - lo) * prog
+    else:
+        raise ValueError(opt.schedule)
+    return opt.lr * warm * frac
+
+
+def adamw_update(g, m, v, p, step, opt: OptConfig, *, lr, wd_mask=1.0):
+    """One AdamW step on flat fp32 tensors. Returns (new_p, new_m, new_v)."""
+    g = g.astype(jnp.float32)
+    m = opt.beta1 * m + (1 - opt.beta1) * g
+    v = opt.beta2 * v + (1 - opt.beta2) * jnp.square(g)
+    t = jnp.asarray(step, jnp.float32) + 1.0
+    mhat = m / (1 - opt.beta1 ** t)
+    vhat = v / (1 - opt.beta2 ** t)
+    upd = mhat / (jnp.sqrt(vhat) + opt.eps) + opt.weight_decay * wd_mask * p
+    return p - lr * upd, m, v
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float, *, pre_sum=None):
+    """Clip a grad tree by global L2 norm. ``pre_sum``: already-reduced
+    sum-of-squares (for cross-rank clipping, pass psum(local_sq))."""
+    if pre_sum is None:
+        pre_sum = global_sq_norm(grads)
+    norm = jnp.sqrt(pre_sum)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def global_sq_norm(grads: PyTree) -> jax.Array:
+    return sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+               for g in jax.tree.leaves(grads))

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# Tests see ONE device (the dry-run sets its own 512-device flag in a
+# separate process). Subprocess-based multi-device tests set XLA_FLAGS
+# explicitly in their child environment.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

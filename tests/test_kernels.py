@@ -1,0 +1,139 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (per the per-kernel allclose requirement)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# dual rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d", [(8, 64), (50, 96), (130, 256), (1, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("plus_one", [False, True])
+def test_dual_rmsnorm(m, d, dtype, plus_one):
+    x = jax.random.normal(KEY, (m, d), dtype)
+    sa = jax.random.normal(jax.random.fold_in(KEY, 1), (d,), jnp.float32)
+    sb = jax.random.normal(jax.random.fold_in(KEY, 2), (d,), jnp.float32)
+    ya, yb = ops.dual_rmsnorm(x, sa, sb, plus_one=plus_one, block_m=32)
+    ra, rb = ref.dual_rmsnorm_ref(x, sa, sb, plus_one=plus_one)
+    assert jnp.allclose(ya, ra, **_tol(dtype))
+    assert jnp.allclose(yb, rb, **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [
+    ("causal", {}),
+    ("causal", {"prefix_len": 5}),
+    ("window", {"window": 7}),
+    ("chunk", {"chunk": 16}),
+    ("bidir", {}),
+])
+@pytest.mark.parametrize("s,t,hd", [(37, 37, 32), (64, 64, 64), (16, 48, 16)])
+def test_flash_attention(kind, kw, s, t, hd):
+    if kind != "bidir" and s != t:
+        pytest.skip("causal kinds assume aligned self-attention here")
+    sh = (3, s, hd)
+    q = jax.random.normal(KEY, sh, jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (3, t, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (3, t, hd), jnp.float32)
+    o = ops.flash_attention(q, k, v, kind=kind, block_q=16, block_k=16, **kw)
+    r = ref.flash_attention_ref(q, k, v, kind=kind, **kw)
+    assert jnp.allclose(o, r, atol=2e-5, rtol=2e-5), \
+        float(jnp.abs(o - r).max())
+
+
+def test_flash_attention_gqa_fold():
+    """q_group folding: rows [pos, head] share the position mask."""
+    g, s, hd = 4, 32, 16
+    q = jax.random.normal(KEY, (2, s * g, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (2, s, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (2, s, hd), jnp.float32)
+    o = ops.flash_attention(q, k, v, kind="causal", q_group=g,
+                            block_q=16, block_k=16)
+    # oracle: per-head slices with plain causal mask
+    for h in range(g):
+        qh = q[:, h::g]
+        rh = ref.flash_attention_ref(qh, k, v, kind="causal")
+        assert jnp.allclose(o[:, h::g], rh, atol=2e-5), h
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEY, (2, 40, 32), dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (2, 40, 32), dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (2, 40, 32), dtype)
+    o = ops.flash_attention(q, k, v, block_q=16, block_k=16)
+    r = ref.flash_attention_ref(q, k, v)
+    assert jnp.allclose(o.astype(jnp.float32), r.astype(jnp.float32),
+                        **_tol(dtype))
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hkv,g,l,hd", [
+    (2, 3, 4, 100, 32), (1, 1, 8, 257, 64), (4, 2, 1, 64, 16)])
+@pytest.mark.parametrize("t_frac", [0.3, 1.0])
+def test_decode_attention(b, hkv, g, l, hd, t_frac):
+    q = jax.random.normal(KEY, (b, hkv, g, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, l, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, l, hkv, hd))
+    t = max(int(l * t_frac) - 1, 0)
+    o = ops.decode_attention(q, k, v, t, block_l=32)
+    r = ref.decode_attention_ref(q, k, v, t)
+    assert jnp.allclose(o, r, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_traced_t():
+    """t is a scalar-prefetch operand: no recompilation across steps."""
+    q = jax.random.normal(KEY, (1, 2, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 64, 2, 16))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (1, 64, 2, 16))
+
+    f = jax.jit(lambda t: ops.decode_attention(q, k, v, t, block_l=32))
+    for t in (0, 13, 63):
+        assert jnp.allclose(f(jnp.int32(t)),
+                            ref.decode_attention_ref(q, k, v, t), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,c,n", [(2, 100, 48, 8), (1, 33, 16, 1),
+                                     (3, 256, 128, 16)])
+def test_ssm_scan(b, s, c, n):
+    a = jax.random.uniform(KEY, (b, s, c, n), jnp.float32, 0.5, 1.0)
+    bb = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, c, n))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 2), (b, c, n))
+    y, hT = ops.ssm_scan(a, bb, h0, block_s=32, block_c=32)
+    ry, rhT = ref.ssm_scan_ref(a, bb, h0)
+    assert jnp.allclose(y, ry, atol=2e-4, rtol=2e-4)
+    assert jnp.allclose(hT, rhT, atol=2e-4, rtol=2e-4)
+
+
+def test_ssm_scan_carry_chains():
+    """Splitting a sequence across two calls == one call (state handoff)."""
+    a = jax.random.uniform(KEY, (1, 64, 16, 4), jnp.float32, 0.5, 1.0)
+    b = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 64, 16, 4))
+    h0 = jnp.zeros((1, 16, 4))
+    y_full, h_full = ops.ssm_scan(a, b, h0, block_s=16, block_c=16)
+    y1, h1 = ops.ssm_scan(a[:, :32], b[:, :32], h0, block_s=16, block_c=16)
+    y2, h2 = ops.ssm_scan(a[:, 32:], b[:, 32:], h1, block_s=16, block_c=16)
+    assert jnp.allclose(jnp.concatenate([y1, y2], 1), y_full, atol=1e-5)
+    assert jnp.allclose(h2, h_full, atol=1e-5)

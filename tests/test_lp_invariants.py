@@ -1,0 +1,149 @@
+"""The paper's core invariants: the retraining-free LP merge is exactly the
+Fig. 2b computational-graph rewrite, and degrades to the vanilla model in
+every limiting case."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core import interventions as IV
+from repro.core import lp as LP
+from repro.model import attention as A
+from repro.model import blocks as B
+from repro.model import stack as ST
+from repro.model.params import init_tree
+from repro.parallel.context import ParallelContext
+
+from _helpers import tiny
+
+PC = ParallelContext()
+
+
+def _layer_params(cfg, key=0):
+    return [init_tree(B.layer_template(cfg, s, 1), jax.random.PRNGKey(i + key))
+            for i, s in enumerate(cfg.layer_specs())]
+
+
+def _run(cfg, layer_params, plan, x, pos):
+    segs, sp = LP.lp_convert(cfg, layer_params, plan)
+    dims = A.attn_dims(cfg, 1)
+    y, _, _ = ST.apply_stack_full(sp, x, segs, cfg=cfg, dims=dims, pc=PC,
+                                  positions=pos)
+    return y
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny(n_layers=6)
+    lp = _layer_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 16, cfg.d_model))
+    pos = jnp.arange(16)[None]
+    return cfg, lp, x, pos
+
+
+def test_empty_plan_is_vanilla(setup):
+    """lp_plan=[] == vanilla sequential model, bit-exact."""
+    cfg, lp, x, pos = setup
+    y = _run(cfg, lp, LP.EMPTY_PLAN, x, pos)
+    ref = IV.apply_intervened(lp, IV.sequential_plan(6), x, cfg=cfg,
+                              positions=pos)
+    assert jnp.allclose(y, ref, atol=1e-5)
+
+
+def test_pair_equals_tp_form(setup):
+    """The production pair path == the explicit two-path Fig. 2b formula
+    evaluated with the ORIGINAL per-layer weights."""
+    cfg, lp, x, pos = setup
+    y = _run(cfg, lp, LP.LPPlan(((2, 3), (4, 5))), x, pos)
+    plan = (IV.sequential_plan(2)
+            + [IV.LayerGroup((2, 3), "tp"), IV.LayerGroup((4, 5), "tp")])
+    ref = IV.apply_intervened(lp, plan, x, cfg=cfg, positions=pos)
+    assert jnp.allclose(y, ref, atol=1e-5)
+
+
+def test_zeroed_second_layer_is_single(setup):
+    """An LP pair whose second member is zeroed == the first layer alone
+    (the merge adds nothing but the second path's contribution)."""
+    cfg, lp, x, pos = setup
+    lp2 = list(lp)
+    zero = jax.tree.map(jnp.zeros_like, lp2[3])
+    # keep norms harmless: zero scale makes LN output 0 -> attn(0-scaled
+    # input)=0 only if projections are zero too, which they are.
+    lp2[3] = zero
+    y_pair = _run(cfg, lp2, LP.LPPlan(((2, 3),)), x, pos)
+
+    # reference: layers 0,1,2,4,5 sequential with layer 3 removed entirely
+    ref = IV.apply_intervened(lp, IV.prune_plan(6, 3, 3), x, cfg=cfg,
+                              positions=pos)
+    assert jnp.allclose(y_pair, ref, atol=1e-5)
+
+
+def test_extract_layers_roundtrip(setup):
+    cfg, lp, x, pos = setup
+    segs, sp = LP.lp_convert(cfg, lp, LP.LPPlan(((0, 1), (2, 3))))
+    back = LP.extract_layers(sp, segs)
+    for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(lp)):
+        assert jnp.allclose(a, b)
+
+
+def test_replan(setup):
+    """Elastic depth: re-pair an LP'd stack under a different plan without
+    changing the weights."""
+    cfg, lp, x, pos = setup
+    segs1, sp1 = LP.lp_convert(cfg, lp, LP.LPPlan(((0, 1),)))
+    segs2, sp2 = LP.replan(cfg, sp1, segs1, LP.LPPlan(((2, 3), (4, 5))))
+    y = ST.apply_stack_full(sp2, x, segs2, cfg=cfg,
+                            dims=A.attn_dims(cfg, 1), pc=PC, positions=pos)[0]
+    ref = _run(cfg, lp, LP.LPPlan(((2, 3), (4, 5))), x, pos)
+    assert jnp.allclose(y, ref, atol=1e-5)
+
+
+def test_par_and_tp_forms_close_but_distinct(setup):
+    """Fig. 2b's merged-residual form is NOT numerically the paper's (PAR)
+    equation — but both stay close to the sequential output on a smooth
+    random model (the paper's 'surprisingly it works' observation)."""
+    cfg, lp, x, pos = setup
+    y_tp = IV.apply_intervened(lp, IV.parallel2_plan(6, 1, 4, form="tp"), x,
+                               cfg=cfg, positions=pos)
+    y_par = IV.apply_intervened(lp, IV.parallel2_plan(6, 1, 4, form="par"), x,
+                                cfg=cfg, positions=pos)
+    assert not jnp.allclose(y_tp, y_par, atol=1e-6)
+    seq = IV.apply_intervened(lp, IV.sequential_plan(6), x, cfg=cfg,
+                              positions=pos)
+    # Both approximations stay within a few rms of the sequential output.
+    rms = jnp.sqrt(jnp.mean(seq ** 2))
+    assert jnp.sqrt(jnp.mean((y_tp - seq) ** 2)) < 2 * rms
+    assert jnp.sqrt(jnp.mean((y_par - seq) ** 2)) < 2 * rms
+
+
+# ---------------------------------------------------------------------------
+# Plan machinery
+# ---------------------------------------------------------------------------
+
+def test_plan_range_respects_compatibility():
+    cfg = reduced_config(get_config("recurrentgemma-9b"), n_layers=6)
+    # pattern: rec, rec, attn, rec, rec, attn
+    plan = LP.plan_range(cfg, 0, 6)
+    assert plan.pairs == ((0, 1), (3, 4))  # attn layers stay sequential
+
+
+def test_plan_for_depth_exact():
+    cfg = get_config("yi-6b")
+    for d in (31, 28, 25):
+        plan = LP.plan_for_depth(cfg, d)
+        assert plan.effective_depth(cfg.n_layers) == d
+
+
+def test_plan_validation():
+    with pytest.raises(AssertionError):
+        LP.LPPlan(((0, 2),))      # non-consecutive
+    with pytest.raises(AssertionError):
+        LP.LPPlan(((0, 1), (1, 2)))  # overlapping
+
+
+def test_llama4_heterogeneous_pair():
+    """Chunked + global attention layers share a template and may pair."""
+    cfg = reduced_config(get_config("llama4-scout-17b-a16e"), n_layers=4)
+    assert LP.pairable(cfg, 2)  # layers 2 (chunked) and 3 (global)
+    plan = LP.plan_range(cfg, 0, 4)
+    assert len(plan.pairs) == 2

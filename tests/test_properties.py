@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.analysis.roofline import collective_bytes
+from repro.core.lp import LPPlan, plan_for_depth, plan_range
+from repro.model.embedding import vocab_pad
+from repro.model.rope import apply_rope
+from repro.parallel.compress import compress_psum
+from repro.parallel.zero import flatten_leaf, unflatten_leaf
+from repro.configs import get_config, ASSIGNED_ARCHS
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(st.integers(1, 4).map(lambda n: 2 ** n),
+       st.lists(st.integers(1, 7), min_size=1, max_size=3))
+def test_zero_flatten_roundtrip(dp, dims):
+    """flatten_leaf -> unflatten_leaf is the identity for any shape/dp."""
+    shape = tuple(dims)
+    x = np.random.default_rng(0).normal(size=shape).astype(np.float32)
+    flat = flatten_leaf(jnp.asarray(x), dp)
+    assert flat.shape[0] == dp
+    back = unflatten_leaf(flat, shape, jnp.float32)
+    assert np.allclose(back, x)
+
+
+@SET
+@given(st.integers(2, 64), st.integers(1, 32))
+def test_vocab_pad_divisible(v, tp):
+    vp = vocab_pad(v, tp)
+    assert vp % tp == 0 and 0 <= vp - v < tp
+
+
+@SET
+@given(st.integers(0, 500), st.integers(2, 16).map(lambda x: 2 * x))
+def test_rope_preserves_norm(pos, hd):
+    """Rotation preserves the per-head L2 norm for any position."""
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(1, 1, 2, hd)),
+                    jnp.float32)
+    y = apply_rope(x, jnp.array([[pos]]), 10_000.0)
+    assert jnp.allclose(jnp.linalg.norm(y, axis=-1),
+                        jnp.linalg.norm(x, axis=-1), rtol=1e-4)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_rope_relative(seed):
+    """<q_m, k_n> depends only on m - n (the defining RoPE property)."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 16)), jnp.float32)
+    m, n, d = rng.integers(0, 100, 3)
+
+    def score(a, b, pa, pb):
+        qa = apply_rope(a, jnp.array([[int(pa)]]), 1e4)
+        kb = apply_rope(b, jnp.array([[int(pb)]]), 1e4)
+        return float(jnp.sum(qa * kb))
+
+    assert score(q, k, m, n) == pytest.approx(score(q, k, m + d, n + d),
+                                              rel=1e-3, abs=1e-3)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1), st.floats(0.1, 100.0))
+def test_compress_error_bound(seed, scale_mag):
+    """One int8 quantised reduction: |err| <= scale/2 elementwise and the
+    dequantised value + error reconstructs the input exactly."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)) * scale_mag, jnp.float32)
+    out, err = compress_psum(g, (), None)
+    scale = float(jnp.max(jnp.abs(g))) / 127.0
+    assert float(jnp.max(jnp.abs(err))) <= scale / 2 + 1e-6
+    assert jnp.allclose(out + err, g, atol=1e-5 * scale_mag)
+
+
+@SET
+@given(st.integers(0, 2**31 - 1))
+def test_compress_error_feedback_converges(seed):
+    """Repeatedly reducing the SAME gradient with error feedback: the
+    running average of outputs converges to the true value."""
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    err = None
+    acc = jnp.zeros_like(g)
+    n = 20
+    for _ in range(n):
+        out, err = compress_psum(g, (), err)
+        acc = acc + out
+    assert jnp.allclose(acc / n, g, atol=1e-2)
+
+
+@SET
+@given(st.sampled_from(ASSIGNED_ARCHS), st.integers(0, 12))
+def test_plan_for_depth_invariants(arch, reduction):
+    cfg = get_config(arch)
+    target = cfg.n_layers - reduction
+    try:
+        plan = plan_for_depth(cfg, target)
+    except AssertionError:
+        return  # more pairs requested than compatibility allows — rejected
+    assert plan.effective_depth(cfg.n_layers) == min(target, cfg.n_layers)
+    layers = plan.paired_layers()
+    assert len(layers) == 2 * len(plan.pairs)  # no overlaps
+
+
+@SET
+@given(st.integers(1, 30), st.integers(0, 29), st.integers(0, 29))
+def test_plan_range_no_overlap(n, a, b):
+    s, e = min(a, b), max(a, b) + 1
+    cfg = get_config("yi-6b")
+    plan = plan_range(cfg, min(s, cfg.n_layers), min(e, cfg.n_layers))
+    seen = set()
+    for i, j in plan.pairs:
+        assert j == i + 1
+        assert i not in seen and j not in seen
+        seen.update((i, j))
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256] %x), replica_groups={{0,1,2,3}}
+  %ag = bf16[64]{0} all-gather(bf16[16] %y), replica_groups=[2,8]<=[16]
+  %rs = f32[32]{0} reduce-scatter(f32[128] %z), replica_groups={{0,1,2,3}}
+"""
+    out = collective_bytes(hlo)
+    assert out["count:all-reduce"] == 1
+    assert out["all-reduce"] == pytest.approx(2 * 128 * 256 * 4 * 3 / 4)
+    assert out["all-gather"] == pytest.approx(64 * 2 * 7 / 8)
+    assert out["reduce-scatter"] == pytest.approx(32 * 4 * 3)

@@ -1,0 +1,132 @@
+"""Trainer semantics on CPU: overfit, schedules, masks, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lp import plan_range
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.train import (OptConfig, TrainConfig, init_state, make_eval_step,
+                         make_train_step)
+from repro.train.optimizer import schedule_lr
+
+from _helpers import tiny
+
+PC = ParallelContext()
+
+
+def _fixture(lp=True, **tc_kw):
+    cfg = tiny(n_layers=4)
+    plan = plan_range(cfg, 1, 3) if lp else None
+    ms = T.build_structure(cfg, plan=plan, tp=1)
+    tc = TrainConfig(**tc_kw)
+    state = init_state(ms, jax.random.PRNGKey(0), PC, tc)
+    return cfg, ms, tc, state
+
+
+def test_overfit_fixed_batch():
+    cfg, ms, tc, state = _fixture(
+        opt=OptConfig(lr=3e-3, warmup_steps=2, total_steps=40), accum=2)
+    step = jax.jit(make_train_step(ms, PC, tc))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    first = last = None
+    for _ in range(30):
+        state, m = step(state, batch)
+        first = first if first is not None else float(m["loss"])
+        last = float(m["loss"])
+    assert last < first - 2.0, (first, last)
+
+
+def test_accum_equals_large_batch():
+    """accum=4 over a batch == accum=1 on the same batch (same mean grads)."""
+    cfg, ms, _, _ = _fixture()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (8, 16), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    outs = []
+    for accum in (1, 4):
+        tc = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=1,
+                                       total_steps=10), accum=accum)
+        state = init_state(ms, jax.random.PRNGKey(0), PC, tc)
+        state, m = jax.jit(make_train_step(ms, PC, tc))(state, batch)
+        outs.append(state["params"]["embed"]["tok"])
+    assert jnp.allclose(outs[0], outs[1], atol=1e-5)
+
+
+def test_finetune_lp_only_freezes_rest():
+    cfg, ms, tc, state = _fixture(
+        opt=OptConfig(lr=1e-2, warmup_steps=0, total_steps=10,
+                      weight_decay=0.0),
+        finetune_lp_only=True)
+    p0 = jax.tree.map(lambda x: x.copy(), state["params"])
+    step = jax.jit(make_train_step(ms, PC, tc))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    state, _ = step(state, {"tokens": toks, "labels": jnp.roll(toks, -1, 1)})
+    pair_idx = [i for i, s in enumerate(ms.segments) if s.group.pair]
+    other_idx = [i for i, s in enumerate(ms.segments) if not s.group.pair]
+    assert float(jnp.abs(state["params"]["embed"]["tok"]
+                         - p0["embed"]["tok"]).max()) == 0.0
+    moved = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree.leaves(state["params"]["segments"][pair_idx[0]]),
+        jax.tree.leaves(p0["segments"][pair_idx[0]])))
+    frozen = max(float(jnp.abs(a - b).max()) for a, b in zip(
+        jax.tree.leaves(state["params"]["segments"][other_idx[0]]),
+        jax.tree.leaves(p0["segments"][other_idx[0]])))
+    assert moved > 0 and frozen == 0.0
+
+
+def test_wsd_schedule_shape():
+    opt = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, schedule="wsd",
+                    decay_frac=0.2)
+    lrs = [float(schedule_lr(opt, s)) for s in range(100)]
+    assert lrs[0] == pytest.approx(0.1)       # warmup start
+    assert lrs[9] == pytest.approx(1.0)       # warmup end
+    assert lrs[50] == pytest.approx(1.0)      # stable
+    assert lrs[99] <= 0.06                     # decayed (1 - 19/20 + eps)
+    # monotone decay in the final phase
+    assert all(a >= b for a, b in zip(lrs[80:], lrs[81:]))
+
+
+def test_grad_clip_activates():
+    cfg, ms, _, _ = _fixture()
+    tc = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0, total_steps=10,
+                                   grad_clip=1e-8))
+    state = init_state(ms, jax.random.PRNGKey(0), PC, tc)
+    p0 = state["params"]["embed"]["tok"].copy()
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    state, m = jax.jit(make_train_step(ms, PC, tc))(
+        state, {"tokens": toks, "labels": jnp.roll(toks, -1, 1)})
+    # grad contribution ~1e-8-scaled: master moves only by the wd-free Adam
+    # step on a clipped grad; update magnitude ~ lr regardless, but the
+    # DIRECTION is the clipped grad; just assert the norm was recorded > clip.
+    assert float(m["grad_norm"]) > 1e-6
+
+
+def test_eval_step():
+    cfg, ms, tc, state = _fixture(opt=OptConfig())
+    ev = jax.jit(make_eval_step(ms, PC, tc))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    m = ev(state["params"], {"tokens": toks, "labels": jnp.roll(toks, -1, 1)})
+    assert bool(jnp.isfinite(m["loss"]))
+
+
+def test_masked_labels_ignored():
+    """labels=-1 positions contribute nothing to the loss."""
+    cfg, ms, tc, state = _fixture(opt=OptConfig())
+    ev = jax.jit(make_eval_step(ms, PC, tc))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    labels = jnp.roll(toks, -1, 1)
+    m1 = ev(state["params"], {"tokens": toks, "labels": labels})
+    # mask half the positions; recompute expected mean over the kept half
+    mask = jnp.arange(16)[None, :] % 2 == 0
+    labels2 = jnp.where(mask, labels, -1)
+    m2 = ev(state["params"], {"tokens": toks, "labels": labels2})
+    assert not jnp.allclose(m1["xent"], m2["xent"])
+    assert bool(jnp.isfinite(m2["xent"]))
