@@ -238,3 +238,43 @@ def model_flops(cfg, shape, *, lp_plan=None) -> float:
     if shape.step == "prefill":
         return 2.0 * n * shape.tokens
     return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr structural counters (decode launch accounting)
+# ---------------------------------------------------------------------------
+
+def jaxpr_primitive_count(jaxpr, name: str) -> int:
+    """Occurrences of primitive ``name`` in one EXECUTION of ``jaxpr``:
+    scan bodies are weighted by their trip count, so the result is the true
+    per-step launch count (e.g. ``pallas_call`` launches in one decode
+    step) even when the stack is compiled as compact segment scans.
+
+    Control flow whose execution count is not static is approximated:
+    ``cond`` takes the MAX across branches (exactly one runs) and
+    ``while`` bodies count once (a lower bound — trip counts are dynamic).
+
+    ``jaxpr`` may be a ClosedJaxpr, a Jaxpr, or anything with a ``.jaxpr``.
+    """
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+
+    def subcount(v):
+        if hasattr(v, "eqns") or hasattr(v, "jaxpr"):
+            return jaxpr_primitive_count(v, name)
+        return 0
+
+    total = 0
+    for eqn in inner.eqns:
+        if eqn.primitive.name == name:
+            total += 1
+        if eqn.primitive.name == "cond":
+            branches = eqn.params.get("branches", ())
+            total += max((subcount(b) for b in branches), default=0)
+            continue
+        mult = eqn.params.get("length", 1) if eqn.primitive.name == "scan" else 1
+        for v in eqn.params.values():
+            if isinstance(v, (tuple, list)):
+                total += mult * sum(subcount(x) for x in v)
+            else:
+                total += mult * subcount(v)
+    return total

@@ -1,4 +1,4 @@
-"""Decode attention Pallas kernel — one query token against a long KV cache.
+"""Decode attention Pallas kernels — one query token against a long KV cache.
 
 Decode (the paper's 1-token generation task) is HBM-bandwidth-bound: the
 whole KV cache is read once per token while the MXU does O(L*hd) work. The
@@ -6,9 +6,22 @@ kernel streams kv tiles through VMEM with online-softmax statistics in
 scratch, emitting the GQA group of q heads that share a kv head together
 (one cache read serves g query heads — the GQA arithmetic-intensity win).
 
-Grid: (B * Hkv, nL), L innermost/sequential. The valid horizon ``t`` is a
+Two entry points share one kernel body:
+
+  decode_attention       — single layer. Grid (B*Hkv, nL).
+  decode_attention_pair  — an LP pair's two layers in ONE launch. The pair
+                           caches are stacked contiguously ([2, B, L, Hkv,
+                           hd], see repro.model.blocks.group_cache_meta) so
+                           the kernel simply grids over (2*B*Hkv, nL): both
+                           layers' caches stream through VMEM back-to-back
+                           under the same online-softmax machinery, turning
+                           the decode attention phase of two LP'd layers
+                           into one kernel launch instead of two.
+
+Grid: (rows, nL), L innermost/sequential. The valid horizon ``t`` is a
 scalar-prefetch operand (SMEM) so cache positions beyond the current decode
-step are masked without recompiling per step.
+step are masked without recompiling per step. ``interpret`` defaults to
+auto-detection (compiled on TPU, interpreter elsewhere — repro.compat).
 """
 from __future__ import annotations
 
@@ -18,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.compat import resolve_interpret, tpu_compiler_params
 
 NEG_INF = -1e30
 
@@ -56,30 +71,25 @@ def _kernel(t_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
         o_ref[0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
 
 
-def decode_attention(q, k, v, t_valid, *, block_l=256, interpret=True):
-    """q: [B, Hkv, g, hd]; k, v: [B, L, Hkv, hd]; t_valid: scalar int32.
-    Returns [B, Hkv, g, hd]."""
-    B, Hkv, g, hd = q.shape
-    L = k.shape[1]
+def _launch(qr, kr, vr, t_valid, *, block_l, interpret):
+    """One pallas_call over flattened rows: qr [R, g, hd]; kr, vr [R, L, hd]."""
+    R, g, hd = qr.shape
+    L = kr.shape[1]
     bl = min(block_l, L)
     pad = (-L) % bl
     if pad:  # padded rows have pos > t_valid -> masked
-        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    Lp = L + pad
-    nl = Lp // bl
-    qr = q.reshape(B * Hkv, g, hd)
-    kr = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, Lp, hd)
-    vr = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, Lp, hd)
+        kr = jnp.pad(kr, ((0, 0), (0, pad), (0, 0)))
+        vr = jnp.pad(vr, ((0, 0), (0, pad), (0, 0)))
+    nl = (L + pad) // bl
     t_arr = jnp.asarray(t_valid, jnp.int32).reshape(1)
 
     kern = functools.partial(_kernel, bl=bl, nl=nl, scale=hd ** -0.5)
-    out = pl.pallas_call(
+    return pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((B * Hkv, g, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, g, hd), qr.dtype),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
-            grid=(B * Hkv, nl),
+            grid=(R, nl),
             in_specs=[pl.BlockSpec((1, g, hd), lambda b, j, t: (b, 0, 0)),
                       pl.BlockSpec((1, bl, hd), lambda b, j, t: (b, j, 0)),
                       pl.BlockSpec((1, bl, hd), lambda b, j, t: (b, j, 0))],
@@ -88,8 +98,37 @@ def decode_attention(q, k, v, t_valid, *, block_l=256, interpret=True):
                             pltpu.VMEM((g,), jnp.float32),
                             pltpu.VMEM((g, hd), jnp.float32)],
         ),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(t_arr, qr, kr, vr)
+
+
+def decode_attention(q, k, v, t_valid, *, block_l=256, interpret=None):
+    """q: [B, Hkv, g, hd]; k, v: [B, L, Hkv, hd]; t_valid: scalar int32.
+    Returns [B, Hkv, g, hd]."""
+    B, Hkv, g, hd = q.shape
+    L = k.shape[1]
+    qr = q.reshape(B * Hkv, g, hd)
+    kr = jnp.moveaxis(k, 2, 1).reshape(B * Hkv, L, hd)
+    vr = jnp.moveaxis(v, 2, 1).reshape(B * Hkv, L, hd)
+    out = _launch(qr, kr, vr, t_valid, block_l=block_l, interpret=interpret)
     return out.reshape(B, Hkv, g, hd)
+
+
+def decode_attention_pair(q, k, v, t_valid, *, block_l=256, interpret=None):
+    """Fused LP-pair decode attention: ONE launch for both layers.
+
+    q: [2, B, Hkv, g, hd]; k, v: [2, B, L, Hkv, hd] (the stacked pair
+    cache); t_valid: scalar int32 shared by both halves (an LP pair is two
+    layers at the SAME stream position, so their valid horizons coincide).
+    Returns [2, B, Hkv, g, hd].
+    """
+    P2, B, Hkv, g, hd = q.shape
+    assert P2 == 2 and k.shape[0] == 2, (q.shape, k.shape)
+    L = k.shape[2]
+    qr = q.reshape(2 * B * Hkv, g, hd)
+    kr = jnp.moveaxis(k, 3, 2).reshape(2 * B * Hkv, L, hd)
+    vr = jnp.moveaxis(v, 3, 2).reshape(2 * B * Hkv, L, hd)
+    out = _launch(qr, kr, vr, t_valid, block_l=block_l, interpret=interpret)
+    return out.reshape(2, B, Hkv, g, hd)

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.compat import resolve_interpret
+
 
 def _kernel(x_ref, sa_ref, sb_ref, ya_ref, yb_ref, *, eps, plus_one):
     x = x_ref[...].astype(jnp.float32)                      # [bm, D]
@@ -33,7 +35,7 @@ def _kernel(x_ref, sa_ref, sb_ref, ya_ref, yb_ref, *, eps, plus_one):
 
 
 def dual_rmsnorm(x, sa, sb, *, eps=1e-6, plus_one=False, block_m=128,
-                 interpret=True):
+                 interpret=None):
     """x: [M, D]; sa, sb: [D] -> (ya, yb). Pads M up to a block multiple."""
     M, D = x.shape
     bm = min(block_m, M)
@@ -51,6 +53,6 @@ def dual_rmsnorm(x, sa, sb, *, eps=1e-6, plus_one=False, block_m=128,
                   pl.BlockSpec((D,), lambda i: (0,))],
         out_specs=(pl.BlockSpec((bm, D), lambda i: (i, 0)),
                    pl.BlockSpec((bm, D), lambda i: (i, 0))),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xp, sa, sb)
     return (ya[:M], yb[:M]) if pad else (ya, yb)

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import resolve_interpret, tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -89,7 +91,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
 
 def flash_attention(q, k, v, *, kind="causal", window=0, chunk=0,
                     prefix_len=0, q0=0, k0=0, q_group=1, block_q=128,
-                    block_k=128, interpret=True):
+                    block_k=128, interpret=None):
     """q: [BH, S, hd]; k, v: [BH, T, hd] -> [BH, S, hd].
 
     ``q_group`` > 1 means q rows are GQA-folded (row = position*g + head);
@@ -122,8 +124,8 @@ def flash_attention(q, k, v, *, kind="causal", window=0, chunk=0,
         scratch_shapes=[pltpu.VMEM((bq,), jnp.float32),
                         pltpu.VMEM((bq,), jnp.float32),
                         pltpu.VMEM((bq, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qp, kp, vp)
     return out[:, :S] if pad_q else out

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import resolve_interpret, tpu_compiler_params
+
 
 def _combine(e1, e2):
     a1, b1 = e1
@@ -45,7 +47,7 @@ def _kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_sc, *, ns):
         hT_ref[0] = h_sc[...].astype(hT_ref.dtype)
 
 
-def ssm_scan(a, b, h0, *, block_s=256, block_c=128, interpret=True):
+def ssm_scan(a, b, h0, *, block_s=256, block_c=128, interpret=None):
     """a, b: [B, S, C, N]; h0: [B, C, N] -> (y [B,S,C,N], hT [B,C,N]).
 
     S padded to a block multiple with identity elements (a=1, b=0) so the
@@ -81,9 +83,9 @@ def ssm_scan(a, b, h0, *, block_s=256, block_c=128, interpret=True):
         out_specs=(pl.BlockSpec((1, bs, bc, N), lambda bt, c, s: (bt, s, c, 0)),
                    pl.BlockSpec((1, bc, N), lambda bt, c, s: (bt, c, 0))),
         scratch_shapes=[pltpu.VMEM((bc, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(a, b, h0)
     y = y[:, :S, :C] if (pad_s or pad_c) else y
     hT = hT[:, :C] if pad_c else hT

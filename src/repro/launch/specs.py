@@ -100,14 +100,15 @@ def decode_specs(cfg: ArchConfig, shape: ShapeConfig, pol: CellPolicy,
     cache_abs, cache_ps = T.cache_meta(ms, batch=B, max_len=shape.seq_len,
                                        kv_mode=pol.kv_mode)
     if mesh is not None:
-        def attach(a, ps):
+        def attach(path, a, ps):
             parts = list(ps)
-            parts[1] = row  # batch axis
+            parts[T.cache_batch_axis(path[-1].key)] = row
             return jax.ShapeDtypeStruct(
                 a.shape, a.dtype,
                 sharding=jax.sharding.NamedSharding(mesh, P(*parts)))
-        cache_abs = jax.tree.map(attach, cache_abs, cache_ps,
-                                 is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        cache_abs = jax.tree_util.tree_map_with_path(
+            attach, cache_abs, cache_ps,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
     tok = _sds((B,), jnp.int32, mesh, P(row))
     t = _sds((), jnp.int32, mesh, P())
     key = _sds((2,), jnp.uint32, mesh, P())

@@ -14,6 +14,13 @@ einsum projects both layers' Q/K/V ("the stacked matmul" of the paper's
 Fig. 5), the head axis simply doubles, and the pair's output projection is a
 single contraction that also sums the two paths — the psum that follows is
 the paper's ONE sync point for the attention phase of two layers.
+
+On the decode path the pair's KV caches are stacked-contiguous
+([2, B, L, Hkv, hd] — repro.model.blocks.group_cache_meta), and
+``decode_attn_standard`` / ``decode_attn_seq_sharded`` with ``pair=True``
+run both layers as one wide unit: one stacked projection, one cache write,
+one attention core (or one ``decode_attention_pair`` Pallas launch when
+``set_decode_impl("pallas")``), one merged output projection.
 """
 from __future__ import annotations
 
@@ -265,17 +272,26 @@ def rank_head_kv_map(dims: AttnDims, pc: ParallelContext):
                     0, dims.hkv - 1)
 
 
-def select_local_kv(kv, dims: AttnDims, pc: ParallelContext):
-    """kv: [B,T,hkv,hd] as stored. Returns [B,T,Hk_eff,hd] for the grouped
-    core: hkv when sharded; 1 (this rank's kv head) when replicated and the
-    rank's q block lives in one GQA group; hq per-head gathered otherwise."""
+def select_local_kv(kv, dims: AttnDims, pc: ParallelContext, *,
+                    head_axis: int = 2):
+    """kv as stored ([B,T,hkv,hd], head axis 2). Returns the rank-local
+    selection for the grouped core: hkv heads when sharded; 1 (this rank's
+    kv head) when replicated and the rank's q block lives in one GQA group;
+    hq per-head gathered otherwise."""
     if dims.kv_sharded or dims.tp == 1:
         return kv
     if dims.per_head:
-        return jnp.take(kv, rank_head_kv_map(dims, pc), axis=2)
+        return jnp.take(kv, rank_head_kv_map(dims, pc), axis=head_axis)
     base = pc.tp_index() * dims.hq
     kv_idx = jnp.clip(base // dims.group, 0, dims.hkv - 1)
-    return lax.dynamic_slice_in_dim(kv, kv_idx, 1, axis=2)
+    return lax.dynamic_slice_in_dim(kv, kv_idx, 1, axis=head_axis)
+
+
+def select_local_kv_pair(kv, dims: AttnDims, pc: ParallelContext):
+    """Stacked-pair variant: kv [2,B,T,hkv,hd] -> [2,B,T,Hk_eff,hd]. The
+    same selection on head axis 3 so the pair stays one contiguous tensor
+    for the fused decode kernel."""
+    return select_local_kv(kv, dims, pc, head_axis=3)
 
 
 def core_layout(dims: AttnDims) -> Tuple[int, int]:
@@ -349,52 +365,72 @@ def cache_slot(kind: str, t, *, window=0, chunk=0):
 
 def decode_attn_standard(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
                          *, kind, pair: bool, window=0, chunk=0):
-    """Decode with head-local caches: cache_[kv]: [B, L, P*hkv_stored, hd].
+    """Decode with head-local caches. Returns (partial_out, new_k, new_v).
 
-    hkv_stored == n_kv (replicated) or hkv (sharded). Updates the cache at
-    the ring slot for ``t`` and returns (partial_out, new_k, new_v).
+    pair=False: xn [B,1,D], cache_[kv] [B, L, hkv_stored, hd].
+    pair=True (fused LP pair): xn [2,B,1,D] (both per-path norms of the same
+    residual), cache_[kv] [2, B, L, hkv_stored, hd] STACKED-CONTIGUOUS.
+    Both layers run as one wide unit: ONE stacked QKV projection einsum,
+    ONE ring-slot write per cache tensor, ONE attention core / kernel
+    launch over the leading pair axis, ONE merged output projection — the
+    caller's psum after this is the pair's single attention-phase sync.
+
+    hkv_stored == n_kv (replicated) or hkv (sharded).
     """
-    B = xn.shape[-3] if not pair else xn.shape[1]
+    B = xn.shape[1] if pair else xn.shape[0]
     pos = jnp.asarray(t)[None] if jnp.ndim(t) == 0 else t
     q, k, v = project_qkv(p, xn, cfg, dims, pc, positions=pos, kind=kind, pair=pair)
     slot, t_local = cache_slot(kind, t, window=window, chunk=chunk)
+    Hk, g = core_layout(dims)
+    scale = dims.hd ** -0.5
+
+    if pair:
+        hkv_st = cache_k.shape[3]
+        L = cache_k.shape[2]
+        # New-token kv arrives pair-folded [B,1,2*hkv,hd]; unfold to the
+        # stacked layout and write BOTH layers' slots in one update.
+        k2 = k.reshape(B, 1, 2, hkv_st, dims.hd).transpose(2, 0, 1, 3, 4)
+        v2 = v.reshape(B, 1, 2, hkv_st, dims.hd).transpose(2, 0, 1, 3, 4)
+        cache_k = lax.dynamic_update_slice_in_dim(
+            cache_k, k2.astype(cache_k.dtype), slot, axis=2)
+        cache_v = lax.dynamic_update_slice_in_dim(
+            cache_v, v2.astype(cache_v.dtype), slot, axis=2)
+        ks = select_local_kv_pair(cache_k, dims, pc)   # [2,B,L,Hk,hd]
+        vs = select_local_kv_pair(cache_v, dims, pc)
+        qh = q.reshape(B, 2, Hk, g, dims.hd)           # pair-major heads, S=1
+        if _DECODE_IMPL == "pallas":
+            from repro.kernels import ops as KOPS
+            qp = qh.transpose(1, 0, 2, 3, 4)           # [2,B,Hk,g,hd]
+            o = KOPS.decode_attention_pair(qp, ks, vs, t_local).astype(xn.dtype)
+            o = o.transpose(1, 0, 2, 3, 4).reshape(B, 1, 2 * dims.hq, dims.hd)
+            return output_proj(p, o, dims, pair=True), cache_k, cache_v
+        s = jnp.einsum("bpngh,pbtnh->bpngt", qh.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        valid = (jnp.arange(L) <= t_local)[None, None, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        pweights = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bpngt,pbtnh->bpngh", pweights, vs.astype(jnp.float32))
+        o = o.astype(xn.dtype).reshape(B, 1, 2 * dims.hq, dims.hd)
+        return output_proj(p, o, dims, pair=True), cache_k, cache_v
+
     cache_k = lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
     cache_v = lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
-
-    nP = 2 if pair else 1
-    hkv_st = cache_k.shape[2] // nP
     L = cache_k.shape[1]
-    Hk, g = core_layout(dims)
-
-    ks = cache_k.reshape(B, L, nP, hkv_st, dims.hd)
-    vs = cache_v.reshape(B, L, nP, hkv_st, dims.hd)
-    if not dims.kv_sharded and dims.tp > 1:
-        if dims.per_head:
-            idx = rank_head_kv_map(dims, pc)
-            ks = jnp.take(ks, idx, axis=3)
-            vs = jnp.take(vs, idx, axis=3)
-        else:
-            base = pc.tp_index() * dims.hq
-            kv_idx = jnp.clip(base // dims.group, 0, dims.hkv - 1)
-            ks = lax.dynamic_slice_in_dim(ks, kv_idx, 1, axis=3)
-            vs = lax.dynamic_slice_in_dim(vs, kv_idx, 1, axis=3)
-    ks = ks.reshape(B, L, nP * ks.shape[3], dims.hd)
-    vs = vs.reshape(B, L, nP * vs.shape[3], dims.hd)
-
-    qh = q.reshape(B, 1, nP * Hk, g, dims.hd)
+    ks = select_local_kv(cache_k, dims, pc)
+    vs = select_local_kv(cache_v, dims, pc)
+    qh = q.reshape(B, 1, Hk, g, dims.hd)
     if _DECODE_IMPL == "pallas":
         from repro.kernels import ops as KOPS
         o = KOPS.decode_attention(qh[:, 0], ks, vs, t_local).astype(xn.dtype)
-        o = o.reshape(B, 1, nP * dims.hq, dims.hd)
-        return output_proj(p, o, dims, pair=pair), cache_k, cache_v
-    scale = dims.hd ** -0.5
+        o = o.reshape(B, 1, dims.hq, dims.hd)
+        return output_proj(p, o, dims, pair=False), cache_k, cache_v
     s = jnp.einsum("bsngh,btnh->bngst", qh.astype(jnp.float32), ks.astype(jnp.float32)) * scale
     valid = (jnp.arange(L) <= t_local)[None, None, None, None, :]
     s = jnp.where(valid, s, NEG_INF)
     pweights = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bngst,btnh->bsngh", pweights, vs.astype(jnp.float32))
-    o = o.astype(xn.dtype).reshape(B, 1, nP * dims.hq, dims.hd)
-    return output_proj(p, o, dims, pair=pair), cache_k, cache_v
+    o = o.astype(xn.dtype).reshape(B, 1, dims.hq, dims.hd)
+    return output_proj(p, o, dims, pair=False), cache_k, cache_v
 
 
 def decode_attn_seq_sharded(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
@@ -403,11 +439,13 @@ def decode_attn_seq_sharded(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
     (for kv_heads < tp: avoids tp-fold cache replication, multiplies the
     aggregate HBM bandwidth of the cache read by tp).
 
-    cache_[kv]: [B, L/tp, P*n_kv, hd] per rank. Combines partial softmax
-    stats across ranks with one pmax + two psums of [B, H, hd]-sized tensors.
+    cache_[kv]: [B, L/tp, n_kv, hd] per rank; pair=True uses the stacked
+    layout [2, B, L/tp, n_kv, hd] and runs BOTH layers through one gathered
+    attention evaluation. Combines partial softmax stats across ranks with
+    one pmax + ONE packed psum per phase regardless of pair width.
     """
     nP = 2 if pair else 1
-    B = xn.shape[-3] if not pair else xn.shape[1]
+    B = xn.shape[1] if pair else xn.shape[0]
     pos = jnp.asarray(t)[None] if jnp.ndim(t) == 0 else t
     q, k, v = project_qkv(p, xn, cfg, dims, pc, positions=pos, kind=kind, pair=pair)
     # q: [B,1,nP*hq,hd] local -> gather all q heads.
@@ -421,25 +459,34 @@ def decode_attn_seq_sharded(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
 
     # Cache update: only the owner rank of slot ``t`` writes.
     slot, t_local = cache_slot(kind, t, window=window, chunk=chunk)
-    L_loc = cache_k.shape[1]
+    seq_ax = 2 if pair else 1
+    L_loc = cache_k.shape[seq_ax]
+    n_kv = cache_k.shape[seq_ax + 1]
     rank = pc.tp_index()
     local_slot = slot - rank * L_loc
     in_range = (local_slot >= 0) & (local_slot < L_loc)
     idx = jnp.clip(local_slot, 0, L_loc - 1)
-    old_k = lax.dynamic_slice_in_dim(cache_k, idx, 1, axis=1)
-    old_v = lax.dynamic_slice_in_dim(cache_v, idx, 1, axis=1)
-    new_k = jnp.where(in_range, k.astype(cache_k.dtype), old_k)
-    new_v = jnp.where(in_range, v.astype(cache_v.dtype), old_v)
-    cache_k = lax.dynamic_update_slice_in_dim(cache_k, new_k, idx, axis=1)
-    cache_v = lax.dynamic_update_slice_in_dim(cache_v, new_v, idx, axis=1)
+    if pair:  # unfold the pair-folded new token to the stacked layout
+        kn = k.reshape(B, 1, 2, n_kv, dims.hd).transpose(2, 0, 1, 3, 4)
+        vn = v.reshape(B, 1, 2, n_kv, dims.hd).transpose(2, 0, 1, 3, 4)
+    else:
+        kn, vn = k, v
+    old_k = lax.dynamic_slice_in_dim(cache_k, idx, 1, axis=seq_ax)
+    old_v = lax.dynamic_slice_in_dim(cache_v, idx, 1, axis=seq_ax)
+    new_k = jnp.where(in_range, kn.astype(cache_k.dtype), old_k)
+    new_v = jnp.where(in_range, vn.astype(cache_v.dtype), old_v)
+    cache_k = lax.dynamic_update_slice_in_dim(cache_k, new_k, idx, axis=seq_ax)
+    cache_v = lax.dynamic_update_slice_in_dim(cache_v, new_v, idx, axis=seq_ax)
 
-    n_kv = cache_k.shape[2] // nP
     Hq_all = tp * dims.hq          # == padded global q heads
-    ks = cache_k.reshape(B, L_loc, nP, n_kv, dims.hd)
-    vs = cache_v.reshape(B, L_loc, nP, n_kv, dims.hd)
-    if dims.per_head:
+    ks = cache_k if pair else cache_k[None]   # [nP,B,L_loc,n_kv,hd]
+    vs = cache_v if pair else cache_v[None]
+    if dims.per_head or Hq_all != dims.group * n_kv:
         # Expand kv per q head with the TRUE head->kv map (padded q heads
-        # clip; their wo rows are zero).
+        # clip; their wo rows are zero). The uniform grouped reshape below
+        # is only valid when padding did not inflate the global head count
+        # (Hq_all == group * n_kv); otherwise head i's kv is i // group
+        # clipped, not i // (Hq_all // n_kv).
         hmap = jnp.clip(jnp.arange(Hq_all) // dims.group, 0, n_kv - 1)
         ks = jnp.take(ks, hmap, axis=3)
         vs = jnp.take(vs, hmap, axis=3)
@@ -449,7 +496,7 @@ def decode_attn_seq_sharded(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
     qh = qg.reshape(B, 1, nP, n_kv_eff, g, dims.hd)
 
     scale = dims.hd ** -0.5
-    s = jnp.einsum("bspngh,btpnh->bpngst", qh.astype(jnp.float32), ks.astype(jnp.float32)) * scale
+    s = jnp.einsum("bspngh,pbtnh->bpngst", qh.astype(jnp.float32), ks.astype(jnp.float32)) * scale
     s = s[..., 0, :]  # squeeze q-position -> [B,P,n,g,L_loc]
     gpos = rank * L_loc + jnp.arange(L_loc)
     valid = gpos <= t_local
@@ -458,7 +505,7 @@ def decode_attn_seq_sharded(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
     m_g = pc.pmax_tp(m)
     pexp = jnp.exp(s - m_g[..., None])
     l = pexp.sum(axis=-1)
-    acc = jnp.einsum("bpngt,btpnh->bpngh", pexp, vs.astype(jnp.float32))
+    acc = jnp.einsum("bpngt,pbtnh->bpngh", pexp, vs.astype(jnp.float32))
     # ONE stacked psum for (l, acc).
     packed = jnp.concatenate([acc, l[..., None]], axis=-1)
     packed = pc.psum_tp(packed)

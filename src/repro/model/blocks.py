@@ -10,6 +10,22 @@ computational-graph rewrite:
 (for mamba/rec mixers the generalised residual-pair form). Pair params are
 the two layers' params stacked on a leading axis — the retraining-free merge
 of repro.core.lp is exactly that stacking.
+
+Decode fast path
+----------------
+Decode (seq=1) is where the paper's speedup lives, and it is latency-bound:
+per-layer kernel launches and cache reads dominate, not FLOPs. A pair whose
+two halves share one mixer kind therefore stores its KV/state caches
+STACKED-CONTIGUOUS on a leading pair axis — ``k``/``v``: [2, B, L, Hkv, hd]
+(bare names; per-layer fallback entries keep indexed names ``k0``/``k1``) —
+and ``apply_group_decode`` runs the whole pair as ONE call into
+``attention.decode_attn_standard(pair=True)`` (or the seq-sharded variant):
+one stacked QKV projection, one cache write per tensor, one attention
+core / Pallas launch (repro.kernels.decode_attention.decode_attention_pair)
+and one merged output projection per phase. Heterogeneous pairs (llama4
+chunked+global: different ring lengths) keep the per-half loop. Cross
+-attention and mamba/rec pairs use the same stacked storage and a single
+stacked application.
 """
 from __future__ import annotations
 
@@ -95,6 +111,14 @@ def _norm_inputs(gp, key, x, cfg, group: Group):
 
 def _mixer_kinds(group: Group):
     return tuple(s.mixer for s in group.specs)
+
+
+def pair_cache_stacked(group: Group) -> bool:
+    """True when the group's decode caches use the stacked-contiguous pair
+    layout ([2, ...], bare key names) and the fused pair decode path. Pairs
+    with heterogeneous mixer kinds (llama4 chunked+global) fall back to
+    per-layer entries: their ring lengths/slots differ."""
+    return group.pair and len(set(_mixer_kinds(group))) == 1
 
 
 def attention_phase_full(gp, xn, cfg, dims, pc, *, group: Group, positions,
@@ -236,48 +260,56 @@ def group_cache_meta(cfg, group: Group, dims, *, batch: int, max_len: int,
     cache. Batch axis sharding is added by the caller. Shapes are LOCAL in
     the head/seq dims the model axis shards (shard_map local view) — the
     caller converts to global via pspec rules; here we return GLOBAL shapes
-    with their pspecs."""
+    with their pspecs.
+
+    Homogeneous pairs store STACKED-CONTIGUOUS caches: one entry per tensor
+    under a bare name ("k", "v", "xk", "xv", "conv", "h") with a leading
+    pair axis of 2, so the fused decode path reads/writes one tensor per
+    phase. Per-layer entries keep indexed names ("k0", "k1", ...) — the
+    trailing digit is what downstream pspec augmentation keys on."""
     spec_tree, pspec_tree = {}, {}
+    stacked = pair_cache_stacked(group)
+
+    def put(name, i, shp, ps, dt):
+        if stacked:
+            if name not in spec_tree:  # identical for both halves: emit once
+                spec_tree[name] = jax.ShapeDtypeStruct((2, *shp), dt)
+                pspec_tree[name] = P(None, *ps)
+        else:
+            spec_tree[f"{name}{i}"] = jax.ShapeDtypeStruct(shp, dt)
+            pspec_tree[f"{name}{i}"] = P(*ps)
+
     for i, spec in enumerate(group.specs):
         m = spec.mixer
         if m.startswith("attn"):
             L = ring_len(cfg, m, max_len)
+            shp = (batch, L, dims.hkv_global, dims.hd)
             if seq_sharded_kind(cfg, dims, m, kv_mode):
-                shp = (batch, L, dims.hkv_global, dims.hd)
-                ps = P(None, "model", None, None)
+                ps = (None, "model", None, None)
             elif dims.kv_sharded:
-                shp = (batch, L, dims.hkv_global, dims.hd)
-                ps = P(None, None, "model", None)
+                ps = (None, None, "model", None)
             else:
-                shp = (batch, L, dims.hkv_global, dims.hd)
-                ps = P(None, None, None, None)
-            spec_tree[f"k{i}"] = jax.ShapeDtypeStruct(shp, dtype)
-            spec_tree[f"v{i}"] = jax.ShapeDtypeStruct(shp, dtype)
-            pspec_tree[f"k{i}"] = ps
-            pspec_tree[f"v{i}"] = ps
+                ps = (None, None, None, None)
+            put("k", i, shp, ps, dtype)
+            put("v", i, shp, ps, dtype)
             if spec.cross_attn:
                 xshp = (batch, enc_len, dims.hkv_global, dims.hd)
-                xps = P(None, None, "model", None) if dims.kv_sharded else P()
-                spec_tree[f"xk{i}"] = jax.ShapeDtypeStruct(xshp, dtype)
-                spec_tree[f"xv{i}"] = jax.ShapeDtypeStruct(xshp, dtype)
-                pspec_tree[f"xk{i}"] = xps
-                pspec_tree[f"xv{i}"] = xps
+                xps = (None, None, "model", None) if dims.kv_sharded \
+                    else (None, None, None, None)
+                put("xk", i, xshp, xps, dtype)
+                put("xv", i, xshp, xps, dtype)
         elif m == "mamba":
             di = cfg.d_inner
-            spec_tree[f"conv{i}"] = jax.ShapeDtypeStruct(
-                (batch, cfg.ssm_conv - 1, di), dtype)
-            pspec_tree[f"conv{i}"] = P(None, None, "model")
-            spec_tree[f"h{i}"] = jax.ShapeDtypeStruct(
-                (batch, di, cfg.ssm_state), jnp.float32)
-            pspec_tree[f"h{i}"] = P(None, "model", None)
+            put("conv", i, (batch, cfg.ssm_conv - 1, di),
+                (None, None, "model"), dtype)
+            put("h", i, (batch, di, cfg.ssm_state),
+                (None, "model", None), jnp.float32)
         elif m == "rec":
             W = cfg.lru_width
-            spec_tree[f"conv{i}"] = jax.ShapeDtypeStruct(
-                (batch, cfg.rec_conv - 1, W), dtype)
-            pspec_tree[f"conv{i}"] = P(None, None, "model")
-            spec_tree[f"h{i}"] = jax.ShapeDtypeStruct(
-                (batch, W, 1), jnp.float32)
-            pspec_tree[f"h{i}"] = P(None, "model", None)
+            put("conv", i, (batch, cfg.rec_conv - 1, W),
+                (None, None, "model"), dtype)
+            put("h", i, (batch, W, 1),
+                (None, "model", None), jnp.float32)
     return spec_tree, pspec_tree
 
 
@@ -312,13 +344,22 @@ def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
                                         prefix_len=prefix_len,
                                         attn_impl=attn_impl)
         if emit_cache:
+            fks, fvs = [], []
             for i, (k, v) in enumerate(kvs):
                 m = group.specs[i].mixer
                 ss = seq_sharded_kind(cfg, dims, m, kv_mode)
-                cache[f"k{i}"] = fill_cache(k, max_len, mixer=m, cfg=cfg,
-                                            seq_shard=ss, pc=pc, dims=dims)
-                cache[f"v{i}"] = fill_cache(v, max_len, mixer=m, cfg=cfg,
-                                            seq_shard=ss, pc=pc, dims=dims)
+                fk = fill_cache(k, max_len, mixer=m, cfg=cfg,
+                                seq_shard=ss, pc=pc, dims=dims)
+                fv = fill_cache(v, max_len, mixer=m, cfg=cfg,
+                                seq_shard=ss, pc=pc, dims=dims)
+                if pair_cache_stacked(group):
+                    fks.append(fk)
+                    fvs.append(fv)
+                else:
+                    cache[f"k{i}"], cache[f"v{i}"] = fk, fv
+            if fks:  # stacked-contiguous pair layout for the fused decode
+                cache["k"] = jnp.stack(fks)
+                cache["v"] = jnp.stack(fvs)
     else:
         xn_p = xn if group.pair else xn[None]
         key = "mamba" if mixer == "mamba" else "rec"
@@ -329,9 +370,11 @@ def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
             out, state = RG.rglru_mix(mp, xn_p, cfg, pc, impl=scan_impl)
         if emit_cache:
             conv, h = state
-            for i in range(nP):
-                cache[f"conv{i}"] = conv[i]
-                cache[f"h{i}"] = h[i]
+            if pair_cache_stacked(group):  # already stacked [2, ...]
+                cache["conv"], cache["h"] = conv, h
+            else:
+                for i in range(nP):
+                    cache[f"conv{i}"], cache[f"h{i}"] = conv[i], h[i]
     x = x + pc.phase_out(out).astype(x.dtype)
 
     # ---- cross-attention phase (whisper decoder) ----------------------
@@ -344,9 +387,13 @@ def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
                                       positions=positions, cross_kv=(xk, xv),
                                       attn_impl=attn_impl)
         if emit_cache:
-            for i, (ki, vi) in enumerate(_split_kv(xk, xv, dims, pair=group.pair)):
-                cache[f"xk{i}"] = ki
-                cache[f"xv{i}"] = vi
+            halves = _split_kv(xk, xv, dims, pair=group.pair)
+            if pair_cache_stacked(group):
+                cache["xk"] = jnp.stack([ki for ki, _ in halves])
+                cache["xv"] = jnp.stack([vi for _, vi in halves])
+            else:
+                for i, (ki, vi) in enumerate(halves):
+                    cache[f"xk{i}"], cache[f"xv{i}"] = ki, vi
         x = x + pc.phase_out(out).astype(x.dtype)
 
     # ---- phase 2: FFN ---------------------------------------------------
@@ -365,62 +412,105 @@ def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
 def apply_group_decode(gp, x, cache, t, *, cfg, group: Group, dims,
                        pc: ParallelContext, kv_mode="heads"):
     """One group for one new token. x: [B,1,D] (replicated over model; no SP
-    at decode). Returns (x, new_cache)."""
+    at decode). Returns (x, new_cache).
+
+    Stacked pairs (pair_cache_stacked) take the FUSED fast path: the whole
+    pair is one decode_attn_*(pair=True) call over the stacked [2, ...]
+    cache — one QKV projection, one cache read/write, one attention kernel
+    launch and one psum per phase, instead of the per-half loop's two of
+    each. Heterogeneous pairs and single layers use the per-half loop.
+    """
     new_cache: Dict[str, Any] = {}
     mixer = group.specs[0].mixer
     nP = 2 if group.pair else 1
+    fused = pair_cache_stacked(group)
+    if fused:  # tolerate caches emitted under the per-layer layout
+        fused = ("k" if mixer.startswith("attn") else "conv") in cache
 
     xn = _norm_inputs(gp, "ln1", x, cfg, group)
     if mixer.startswith("attn"):
-        outs = []
-        for i, spec in enumerate(group.specs):
-            ph = jax.tree.map(lambda w: w[i], gp["attn"]) if group.pair else gp["attn"]
-            xi = xn[i] if group.pair else xn
-            kd = spec.mixer
-            if seq_sharded_kind(cfg, dims, kd, kv_mode):
-                o, nk, nv = A.decode_attn_seq_sharded(
-                    ph, xi, cache[f"k{i}"], cache[f"v{i}"], t, cfg, dims, pc,
-                    kind=kd, pair=False, window=cfg.window, chunk=cfg.chunk)
-            else:
-                o, nk, nv = A.decode_attn_standard(
-                    ph, xi, cache[f"k{i}"], cache[f"v{i}"], t, cfg, dims, pc,
-                    kind=kd, pair=False, window=cfg.window, chunk=cfg.chunk)
-            outs.append(o)
-            new_cache[f"k{i}"], new_cache[f"v{i}"] = nk, nv
-        out = sum(outs)
+        if fused:
+            decode_fn = (A.decode_attn_seq_sharded
+                         if seq_sharded_kind(cfg, dims, mixer, kv_mode)
+                         else A.decode_attn_standard)
+            out, nk, nv = decode_fn(
+                gp["attn"], xn, cache["k"], cache["v"], t, cfg, dims, pc,
+                kind=mixer, pair=True, window=cfg.window, chunk=cfg.chunk)
+            new_cache["k"], new_cache["v"] = nk, nv
+        else:
+            outs = []
+            for i, spec in enumerate(group.specs):
+                ph = jax.tree.map(lambda w: w[i], gp["attn"]) if group.pair else gp["attn"]
+                xi = xn[i] if group.pair else xn
+                kd = spec.mixer
+                if seq_sharded_kind(cfg, dims, kd, kv_mode):
+                    o, nk, nv = A.decode_attn_seq_sharded(
+                        ph, xi, cache[f"k{i}"], cache[f"v{i}"], t, cfg, dims, pc,
+                        kind=kd, pair=False, window=cfg.window, chunk=cfg.chunk)
+                else:
+                    o, nk, nv = A.decode_attn_standard(
+                        ph, xi, cache[f"k{i}"], cache[f"v{i}"], t, cfg, dims, pc,
+                        kind=kd, pair=False, window=cfg.window, chunk=cfg.chunk)
+                outs.append(o)
+                new_cache[f"k{i}"], new_cache[f"v{i}"] = nk, nv
+            out = sum(outs)
     else:
         xn_p = xn if group.pair else xn[None]
         key = "mamba" if mixer == "mamba" else "rec"
         mp = gp[key] if group.pair else jax.tree.map(lambda w: w[None], gp[key])
-        conv = jnp.stack([cache[f"conv{i}"] for i in range(nP)], axis=0)
-        h = jnp.stack([cache[f"h{i}"] for i in range(nP)], axis=0)
+        if fused:  # stacked state: no per-step gather/scatter of the halves
+            conv, h = cache["conv"], cache["h"]
+        else:
+            conv = jnp.stack([cache[f"conv{i}"] for i in range(nP)], axis=0)
+            h = jnp.stack([cache[f"h{i}"] for i in range(nP)], axis=0)
         if mixer == "mamba":
             out, (nconv, nh) = SSM.ssm_mix(mp, xn_p, cfg, pc, state=(conv, h))
         else:
             out, (nconv, nh) = RG.rglru_mix(mp, xn_p, cfg, pc, state=(conv, h))
-        for i in range(nP):
-            new_cache[f"conv{i}"] = nconv[i]
-            new_cache[f"h{i}"] = nh[i]
+        if fused:
+            new_cache["conv"], new_cache["h"] = nconv, nh
+        else:
+            for i in range(nP):
+                new_cache[f"conv{i}"], new_cache[f"h{i}"] = nconv[i], nh[i]
     x = x + pc.psum_tp(out).astype(x.dtype)
 
-    if group.specs[0].cross_attn and f"xk0" in cache:
+    if group.specs[0].cross_attn and ("xk" in cache or "xk0" in cache):
         xnx = _norm_inputs(gp, "lnx", x, cfg, group)
-        outs = []
-        for i in range(nP):
-            ph = jax.tree.map(lambda w: w[i], gp["xattn"]) if group.pair else gp["xattn"]
-            xi = xnx[i] if group.pair else xnx
-            q = A.project_q(ph, xi, cfg, dims, positions=None,
-                            kind="attn_bidir", pair=False)
-            ks = A.select_local_kv(cache[f"xk{i}"], dims, pc)
-            vs = A.select_local_kv(cache[f"xv{i}"], dims, pc)
-            Hk, g = A.core_layout(dims)
+        Hk, g = A.core_layout(dims)
+        if "xk" in cache:
+            # Fused pair cross-attention: one stacked q projection, one core
+            # call with the pair folded into the head axis, one merged
+            # output projection -> the psum below is the phase's ONE sync.
+            q = A.project_q(gp["xattn"], xnx, cfg, dims, positions=None,
+                            kind="attn_bidir", pair=True)   # [B,1,2*hq,hd]
             B = q.shape[0]
-            o = A.attention_core(q.reshape(B, 1, Hk, g, dims.hd), ks, vs,
-                                 kind="attn_bidir", impl="dense")
-            o = o.reshape(B, 1, dims.hq, dims.hd)
-            outs.append(A.output_proj(ph, o, dims, pair=False))
-            new_cache[f"xk{i}"], new_cache[f"xv{i}"] = cache[f"xk{i}"], cache[f"xv{i}"]
-        x = x + pc.psum_tp(sum(outs)).astype(x.dtype)
+            ks = A.select_local_kv_pair(cache["xk"], dims, pc)  # [2,B,T,Hk,hd]
+            vs = A.select_local_kv_pair(cache["xv"], dims, pc)
+            T = ks.shape[2]
+            ksf = jnp.moveaxis(ks, 0, 2).reshape(B, T, 2 * Hk, dims.hd)
+            vsf = jnp.moveaxis(vs, 0, 2).reshape(B, T, 2 * Hk, dims.hd)
+            o = A.attention_core(q.reshape(B, 1, 2 * Hk, g, dims.hd),
+                                 ksf, vsf, kind="attn_bidir", impl="dense")
+            o = o.reshape(B, 1, 2 * dims.hq, dims.hd)
+            out = A.output_proj(gp["xattn"], o, dims, pair=True)
+            new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+        else:
+            outs = []
+            for i in range(nP):
+                ph = jax.tree.map(lambda w: w[i], gp["xattn"]) if group.pair else gp["xattn"]
+                xi = xnx[i] if group.pair else xnx
+                q = A.project_q(ph, xi, cfg, dims, positions=None,
+                                kind="attn_bidir", pair=False)
+                ks = A.select_local_kv(cache[f"xk{i}"], dims, pc)
+                vs = A.select_local_kv(cache[f"xv{i}"], dims, pc)
+                B = q.shape[0]
+                o = A.attention_core(q.reshape(B, 1, Hk, g, dims.hd), ks, vs,
+                                     kind="attn_bidir", impl="dense")
+                o = o.reshape(B, 1, dims.hq, dims.hd)
+                outs.append(A.output_proj(ph, o, dims, pair=False))
+                new_cache[f"xk{i}"], new_cache[f"xv{i}"] = cache[f"xk{i}"], cache[f"xv{i}"]
+            out = sum(outs)
+        x = x + pc.psum_tp(out).astype(x.dtype)
 
     if group.specs[0].ffn is not None:
         xn2 = _norm_inputs(gp, "ln2", x, cfg, group)

@@ -279,6 +279,16 @@ def cache_meta(ms: ModelStructure, *, batch: int, max_len: int,
                                dtype=dtype)
 
 
+def cache_batch_axis(entry_name: str) -> int:
+    """Axis of the BATCH dim in a count-stacked cache entry [count, ...].
+
+    Stacked pair entries (bare names "k", "xv", "conv", ... — see
+    blocks.group_cache_meta) carry a leading pair axis of 2, so batch sits
+    at axis 2; per-layer entries ("k0", "conv1", ...) keep it at axis 1.
+    """
+    return 1 if entry_name[-1].isdigit() else 2
+
+
 def prefill(params, tokens, *, ms: ModelStructure, pc: ParallelContext,
             max_len: int, prefix_embed=None, enc_frames=None,
             kv_mode="heads", attn_impl="auto", cache_dtype=jnp.bfloat16):

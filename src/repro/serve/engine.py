@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.model import embedding as E
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext, make_context
@@ -113,13 +114,16 @@ def cache_pspecs(ms: T.ModelStructure, *, batch: int, sv: ServeConfig,
     dp = tuple(pc.dp_axes) if pc.dp_axes else (None,)
     dp_ax = (dp if len(dp) > 1 else dp[0]) if shard_batch else None
 
-    def add_dp(spec):
-        # leading axes: [count, batch, ...] -> shard batch (axis 1) over dp
+    def add_dp(path, spec):
+        # Shard the batch axis over dp: axis 1 for per-layer entries
+        # ([count, batch, ...]), axis 2 for stacked pair entries
+        # ([count, 2, batch, ...]) — see T.cache_batch_axis.
         parts = list(spec)
-        parts[1] = dp_ax
+        parts[T.cache_batch_axis(path[-1].key)] = dp_ax
         return P(*parts)
 
-    ps2 = jax.tree.map(add_dp, ps_, is_leaf=lambda x: isinstance(x, P))
+    ps2 = jax.tree_util.tree_map_with_path(
+        add_dp, ps_, is_leaf=lambda x: isinstance(x, P))
     return abs_, ps2
 
 
@@ -135,7 +139,7 @@ def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
     dp = tuple(pc.dp_axes) if pc.dp_axes else (None,)
     dp_ax = (dp if len(dp) > 1 else dp[0]) if shard_batch else None
     tok_spec = P(dp_ax)
-    wrapped = jax.shard_map(
+    wrapped = shard_map(
         local, mesh=mesh,
         in_specs=(p_specs, tok_spec, c_specs, P(), P()),
         out_specs=(tok_spec, c_specs),
@@ -172,7 +176,7 @@ def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
             frames = extras[i]; i += 1
         return local(params, tokens, prefix, frames)
 
-    wrapped = jax.shard_map(
+    wrapped = shard_map(
         local_n, mesh=mesh,
         in_specs=tuple(in_specs),
         out_specs=(P(dp_ax, "model"), c_specs),

@@ -1,0 +1,250 @@
+"""The fused LP-pair decode fast path.
+
+Covers the tentpole invariants:
+  * the stacked pair cache layout ([2, B, L, Hkv, hd], bare key names)
+  * exact numerical parity: fused pair=True call == per-half pair=False
+    loop == (at the model level) the per-half decode execution, and the
+    Pallas fused kernel == the XLA fused core
+  * launch accounting: ONE attention kernel launch per paired phase in a
+    traced decode step
+  * the seq-sharded fused pair path == the heads-mode path (subprocess,
+    slow)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis.roofline import jaxpr_primitive_count
+from repro.configs import get_config, reduced_config
+from repro.core.lp import LPPlan, plan_range
+from repro.model import attention as A
+from repro.model import blocks as B
+from repro.model import transformer as T
+from repro.model.params import init_tree, stack_tmpl
+from repro.parallel.context import ParallelContext
+from repro.serve import ServeConfig, generate
+
+from _helpers import tiny, run_multidevice
+
+PC = ParallelContext()
+KEY = jax.random.PRNGKey(0)
+
+
+def _pair_attn_params(cfg):
+    tmpl = stack_tmpl(A.attn_template(cfg, 1), 2)
+    return init_tree(tmpl, KEY)
+
+
+# ---------------------------------------------------------------------------
+# Unit parity: one fused call == the per-half loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,kw", [
+    ("attn", {}),
+    ("attn_local", {"window": 8}),
+])
+def test_fused_pair_matches_per_half(kind, kw):
+    cfg = tiny(n_layers=2)
+    dims = A.attn_dims(cfg, 1)
+    p = _pair_attn_params(cfg)
+    Bt, L, t = 2, 16, 5
+    xn = jax.random.normal(jax.random.fold_in(KEY, 1), (2, Bt, 1, cfg.d_model))
+    ck = jax.random.normal(jax.random.fold_in(KEY, 2),
+                           (2, Bt, kw.get("window", L), dims.hkv, dims.hd))
+    cv = jax.random.normal(jax.random.fold_in(KEY, 3), ck.shape)
+    window = kw.get("window", 0)
+    cfg2 = dataclasses.replace(cfg, window=window) if window else cfg
+
+    o_f, nk_f, nv_f = A.decode_attn_standard(
+        p, xn, ck, cv, t, cfg2, dims, PC, kind=kind, pair=True, window=window)
+
+    outs, nks, nvs = [], [], []
+    for i in range(2):
+        ph = jax.tree.map(lambda w: w[i], p)
+        o, nk, nv = A.decode_attn_standard(
+            ph, xn[i], ck[i], cv[i], t, cfg2, dims, PC, kind=kind,
+            pair=False, window=window)
+        outs.append(o)
+        nks.append(nk)
+        nvs.append(nv)
+
+    assert jnp.allclose(o_f, sum(outs), atol=1e-5), \
+        float(jnp.abs(o_f - sum(outs)).max())
+    assert jnp.allclose(nk_f, jnp.stack(nks), atol=1e-6)
+    assert jnp.allclose(nv_f, jnp.stack(nvs), atol=1e-6)
+
+
+def test_fused_pallas_matches_fused_xla():
+    """decode_attention_pair (one launch for both halves) == the XLA core."""
+    cfg = tiny(n_layers=2)
+    dims = A.attn_dims(cfg, 1)
+    p = _pair_attn_params(cfg)
+    Bt, L, t = 2, 24, 17
+    xn = jax.random.normal(jax.random.fold_in(KEY, 4), (2, Bt, 1, cfg.d_model))
+    ck = jax.random.normal(jax.random.fold_in(KEY, 5),
+                           (2, Bt, L, dims.hkv, dims.hd))
+    cv = jax.random.normal(jax.random.fold_in(KEY, 6), ck.shape)
+    o_x, nk_x, _ = A.decode_attn_standard(p, xn, ck, cv, t, cfg, dims, PC,
+                                          kind="attn", pair=True)
+    A.set_decode_impl("pallas")
+    try:
+        o_p, nk_p, _ = A.decode_attn_standard(p, xn, ck, cv, t, cfg, dims, PC,
+                                              kind="attn", pair=True)
+    finally:
+        A.set_decode_impl("xla")
+    assert jnp.allclose(o_p, o_x, atol=2e-5, rtol=2e-5), \
+        float(jnp.abs(o_p - o_x).max())
+    assert jnp.allclose(nk_p, nk_x)
+
+
+# ---------------------------------------------------------------------------
+# Cache layout
+# ---------------------------------------------------------------------------
+
+def test_pair_cache_is_stacked_contiguous():
+    cfg = tiny(n_layers=4)
+    plan = plan_range(cfg, 0, 4)
+    ms = T.build_structure(cfg, plan=plan, tp=1)
+    params = T.init_params(ms, KEY)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 7), (2, 8), 0,
+                              cfg.vocab_size)
+    _, caches = T.prefill(params, toks, ms=ms, pc=PC, max_len=16,
+                          cache_dtype=jnp.float32)
+    dims = ms.dims
+    for c in caches:
+        assert set(c.keys()) == {"k", "v"}
+        # [count, 2, B, L, Hkv, hd]: the pair axis rides INSIDE one tensor.
+        assert c["k"].shape[1:] == (2, 2, 16, dims.hkv_global, dims.hd)
+
+    ms0 = T.build_structure(cfg, plan=LPPlan(()), tp=1)
+    params0 = T.init_params(ms0, KEY)
+    _, caches0 = T.prefill(params0, toks, ms=ms0, pc=PC, max_len=16,
+                           cache_dtype=jnp.float32)
+    for c in caches0:
+        assert set(c.keys()) == {"k0", "v0"}
+
+
+# ---------------------------------------------------------------------------
+# Model-level parity: fused execution == per-half execution, same plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "falcon-mamba-7b",
+                                  "whisper-medium"])
+def test_fused_decode_matches_per_half_execution(arch, monkeypatch):
+    """Same plan, same params => identical greedy tokens whether the pair
+    decodes through the fused stacked path or the per-half loop."""
+    cfg = reduced_config(get_config(arch), n_layers=4)
+    plan = plan_range(cfg, 0, 4)
+    ms = T.build_structure(cfg, plan=plan, tp=1)
+    assert any(seg.group.pair for seg in ms.segments), "plan must pair"
+    params = T.init_params(ms, KEY)
+    sv = ServeConfig(max_len=32, temperature=0.0, cache_dtype=jnp.float32)
+    prompts = jax.random.randint(jax.random.fold_in(KEY, 8), (2, 8), 0,
+                                 cfg.vocab_size)
+    extras = {}
+    if cfg.enc_layers:
+        extras["frames"] = 0.02 * jax.random.normal(
+            jax.random.fold_in(KEY, 9), (2, cfg.enc_seq, cfg.d_model))
+
+    out_fused = generate(params, prompts, 6, ms=ms, pc=PC, sv=sv,
+                         frames=extras.get("frames"))
+    # Force the per-half fallback: no group advertises the stacked layout.
+    monkeypatch.setattr(B, "pair_cache_stacked", lambda g: False)
+    out_halves = generate(params, prompts, 6, ms=ms, pc=PC, sv=sv,
+                          frames=extras.get("frames"))
+    assert bool((out_fused == out_halves).all()), (out_fused, out_halves)
+
+
+def test_pallas_decode_step_with_dual_norm_matches_xla():
+    """A full decode step with BOTH pair fusions enabled — the stacked
+    Pallas decode kernel and the dual-RMSNorm kernel at each phase entry —
+    matches the XLA path."""
+    from repro.model import norms as N
+    cfg = tiny(n_layers=2)
+    plan = plan_range(cfg, 0, 2)
+    ms = T.build_structure(cfg, plan=plan, tp=1)
+    params = T.init_params(ms, KEY)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 10), (2, 8), 0,
+                              cfg.vocab_size)
+    _, caches = T.prefill(params, toks, ms=ms, pc=PC, max_len=16,
+                          cache_dtype=jnp.float32)
+    nxt = jnp.zeros((2,), jnp.int32)
+    lg_x, _ = T.decode_step(params, nxt, caches, jnp.int32(8), ms=ms, pc=PC)
+    A.set_decode_impl("pallas")
+    N.set_dual_impl("pallas")
+    try:
+        lg_p, _ = T.decode_step(params, nxt, caches, jnp.int32(8), ms=ms, pc=PC)
+    finally:
+        A.set_decode_impl("xla")
+        N.set_dual_impl("xla")
+    assert jnp.allclose(lg_p, lg_x, atol=2e-4, rtol=2e-4), \
+        float(jnp.abs(lg_p - lg_x).max())
+
+
+# ---------------------------------------------------------------------------
+# Launch accounting
+# ---------------------------------------------------------------------------
+
+def test_one_attention_launch_per_paired_phase():
+    """A traced decode step shows exactly one decode-attention kernel launch
+    per paired phase (and one per unpaired layer)."""
+    cfg = tiny(n_layers=6)
+    for n_pairs, want in [(0, 6), (1, 5), (3, 3)]:
+        plan = LPPlan(plan_range(cfg, 0, 6).pairs[:n_pairs])
+        ms = T.build_structure(cfg, plan=plan, tp=1)
+        params = jax.eval_shape(lambda ms=ms: T.init_params(ms, KEY))
+        c_abs, _ = T.cache_meta(ms, batch=1, max_len=16, dtype=jnp.float32)
+        A.set_decode_impl("pallas")
+        try:
+            jaxpr = jax.make_jaxpr(
+                lambda p, c, ms=ms: T.decode_step(
+                    p, jnp.zeros((1,), jnp.int32), c, jnp.int32(3),
+                    ms=ms, pc=PC))(params, c_abs)
+        finally:
+            A.set_decode_impl("xla")
+        n = jaxpr_primitive_count(jaxpr, "pallas_call")
+        assert n == want, (n_pairs, n, want)
+
+
+# ---------------------------------------------------------------------------
+# Seq-sharded fused pair path (multi-device, slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_seq_sharded_pair_decode_matches_heads_mode():
+    out = run_multidevice(r"""
+import jax, jax.numpy as jnp, json, dataclasses
+from repro.configs import get_config, reduced_config
+from repro.core.lp import plan_range
+from repro.model import transformer as T
+from repro.serve.engine import ServeConfig, make_sharded_serve_step, make_sharded_prefill
+
+# tinyllama reduced has 4 kv heads; tp=8 makes kv replicated so kv_mode="seq"
+# engages the seq-sharded fused pair path.
+cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=4)
+plan = plan_range(cfg, 0, 4)
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab_size)
+outs = {}
+for mode in ("heads", "seq"):
+    ms = T.build_structure(cfg, plan=plan, tp=8)
+    sv = ServeConfig(max_len=32, kv_mode=mode, cache_dtype=jnp.float32)
+    pre, c_specs, _ = make_sharded_prefill(ms, mesh, sv, batch=2, prompt_len=16)
+    fn, c_abs, _, _ = make_sharded_serve_step(ms, mesh, sv, batch=2)
+    params = T.init_params(ms, jax.random.PRNGKey(0))
+    logits, caches = pre(params, toks)  # last-position logits [B, V]
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    seq = [tok]
+    key = jax.random.PRNGKey(2)
+    for i in range(4):
+        tok, caches = fn(params, tok, caches, jnp.int32(16 + i), key)
+        seq.append(tok)
+    outs[mode] = jnp.stack(seq, 1).tolist()
+print("RESULT " + json.dumps(outs))
+""")
+    import json
+    res = json.loads([l for l in out.splitlines()
+                      if l.startswith("RESULT")][0][7:])
+    assert res["heads"] == res["seq"], res

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed "
+                    "(see requirements-dev.txt); skipping property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.analysis.roofline import collective_bytes
 from repro.core.lp import LPPlan, plan_for_depth, plan_range
