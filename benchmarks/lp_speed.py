@@ -1,12 +1,19 @@
 """Paper Fig. 7/8 + Table 3 + Appendix C — inference speed and the source
 of the acceleration.
 
-Two measurements, both on an 8-host-device mesh (subprocess):
+Three measurements, the first two on an 8-host-device mesh (subprocess):
   (a) STRUCTURAL (the dry-run analogue of the paper's flame graphs):
       all-reduce count + wire bytes of one decode step, prefill and train
       micro, vanilla vs LP — LP must remove exactly 2 ARs per pair.
   (b) WALL-CLOCK: decode-step latency on the CPU mesh (collectives are
       real inter-device copies here), vanilla vs LP across Δ.
+  (c) LAUNCH COUNTS: per-decode-step attention kernel launches and cache
+      ring-slot writes. The fused pair path (stacked caches +
+      decode_attention_pair) must show ONE attention launch per paired
+      phase — pairs collapse 2 launches and 4 cache writes into 1 and 2.
+
+``--structural`` (or run(structural_only=True)) skips the wall-clock half
+so CI can gate on (a) + (c) cheaply.
 """
 from __future__ import annotations
 
@@ -18,19 +25,22 @@ import sys
 from benchmarks import common as C
 
 _CHILD = r"""
-import json, time
+import json, os, time
 import jax, jax.numpy as jnp
 from repro.configs import get_config, reduced_config
 from repro.core.lp import LPPlan, plan_range
+from repro.model import attention as ATT
 from repro.model import transformer as T
 from repro.model import stack as STK
+from repro.parallel.context import ParallelContext
 from repro.serve.engine import ServeConfig, make_sharded_serve_step
-from repro.analysis.roofline import collective_bytes
+from repro.analysis.roofline import collective_bytes, jaxpr_primitive_count
 
 cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=12)
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 MAXLEN = 512
 BATCH = 8
+STRUCTURAL_ONLY = os.environ.get("LP_SPEED_STRUCTURAL", "0") == "1"
 
 def build(plan):
     ms = T.build_structure(cfg, plan=plan, tp=4)
@@ -42,11 +52,30 @@ def build(plan):
     key = jax.random.PRNGKey(1)
     return ms, fn, params, caches, tok, key
 
+def attn_launches(plan):
+    # Kernel launches per decode step: trace the SINGLE-DEVICE decode step
+    # with the Pallas decode impl and count pallas_call eqns per executed
+    # step (scan bodies weighted by trip count). The fused pair path makes
+    # this n_layers - n_pairs; the per-half loop would give n_layers.
+    ms1 = T.build_structure(cfg, plan=plan, tp=1)
+    params = jax.eval_shape(lambda: T.init_params(ms1, jax.random.PRNGKey(0)))
+    c_abs, _ = T.cache_meta(ms1, batch=1, max_len=64, dtype=jnp.float32)
+    ATT.set_decode_impl("pallas")
+    try:
+        jaxpr = jax.make_jaxpr(
+            lambda p, c: T.decode_step(p, jnp.zeros((1,), jnp.int32), c,
+                                       jnp.int32(3), ms=ms1,
+                                       pc=ParallelContext()))(params, c_abs)
+    finally:
+        ATT.set_decode_impl("xla")
+    return jaxpr_primitive_count(jaxpr, "pallas_call")
+
 rows = []
 for n_pairs in (0, 2, 4, 6):
     plan = LPPlan(plan_range(cfg, 0, 12).pairs[:n_pairs])
     ms, fn, params, caches, tok, key = build(plan)
-    # (a) structural: collective counts from compiled HLO (scans unrolled)
+    # (a) structural: collective + cache-write counts from compiled HLO
+    # (scans unrolled)
     STK.set_scan_unroll(True)
     try:
         low = fn.lower(params, tok, caches, jnp.int32(64), key)
@@ -54,53 +83,71 @@ for n_pairs in (0, 2, 4, 6):
     finally:
         STK.set_scan_unroll(False)
     coll = collective_bytes(txt)
-    # (b) wall clock: median of 30 steps after warmup
-    nxt, caches = fn(params, tok, caches, jnp.int32(64), key)  # compile+warm
-    jax.block_until_ready(nxt)
-    times = []
-    for i in range(30):
-        t0 = time.perf_counter()
-        nxt, caches = fn(params, nxt, caches, jnp.int32(65 + i), key)
-        jax.block_until_ready(nxt)
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    med = times[len(times) // 2]
-    rows.append({
+    row = {
         "delta": plan.delta,
         "eff_depth": ms.effective_depth,
         "ar_count": int(coll.get("count:all-reduce", 0)),
         "coll_bytes": coll.get("total", 0.0),
-        "decode_ms": round(med * 1e3, 3),
-    })
+        "cache_writes": txt.count("dynamic-update-slice("),
+        "attn_launches": attn_launches(plan),
+    }
+    # (b) wall clock: median of 30 steps after warmup
+    if not STRUCTURAL_ONLY:
+        nxt, caches = fn(params, tok, caches, jnp.int32(64), key)  # warm
+        jax.block_until_ready(nxt)
+        times = []
+        for i in range(30):
+            t0 = time.perf_counter()
+            nxt, caches = fn(params, nxt, caches, jnp.int32(65 + i), key)
+            jax.block_until_ready(nxt)
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        row["decode_ms"] = round(times[len(times) // 2] * 1e3, 3)
+    rows.append(row)
 print("RESULT " + json.dumps(rows))
 """
 
 
-def run():
+def run(structural_only: bool = False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["LP_SPEED_STRUCTURAL"] = "1" if structural_only else "0"
     r = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
                        text=True, env=env, timeout=1200)
     assert r.returncode == 0, r.stdout + r.stderr
     rows = json.loads([l for l in r.stdout.splitlines()
                        if l.startswith("RESULT")][0][7:])
     base = rows[0]
-    print(f"{'Δ':>3s} {'depth':>5s} {'ARs':>4s} {'collGB':>8s} "
-          f"{'decode ms':>10s} {'speedup':>8s}")
+    hdr = (f"{'Δ':>3s} {'depth':>5s} {'ARs':>4s} {'launch':>6s} "
+           f"{'writes':>6s} {'collGB':>8s}")
+    if not structural_only:
+        hdr += f" {'decode ms':>10s} {'speedup':>8s}"
+    print(hdr)
     for row in rows:
-        sp = base["decode_ms"] / row["decode_ms"]
-        row["speedup"] = round(sp, 3)
-        print(f"{row['delta']:3d} {row['eff_depth']:5d} {row['ar_count']:4d} "
-              f"{row['coll_bytes'] / 1e9:8.4f} {row['decode_ms']:10.3f} "
-              f"{sp:8.3f}x")
-    # The paper's structural claim: 2 fewer ARs per pair.
+        line = (f"{row['delta']:3d} {row['eff_depth']:5d} {row['ar_count']:4d} "
+                f"{row['attn_launches']:6d} {row['cache_writes']:6d} "
+                f"{row['coll_bytes'] / 1e9:8.4f}")
+        if not structural_only:
+            sp = base["decode_ms"] / row["decode_ms"]
+            row["speedup"] = round(sp, 3)
+            line += f" {row['decode_ms']:10.3f} {sp:8.3f}x"
+        print(line)
     for row in rows[1:]:
         pairs = row["delta"] // 2
+        # The paper's structural claim: 2 fewer ARs per pair.
         assert base["ar_count"] - row["ar_count"] == 2 * pairs, (base, row)
+        # The fused decode claim: ONE attention launch per paired phase —
+        # each pair removes one launch and two ring-slot writes per step.
+        assert base["attn_launches"] - row["attn_launches"] == pairs, (base, row)
     C.save_result("lp_speed", {"rows": rows})
     return {"rows": rows}
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser(description="LP decode speed benchmark")
+    ap.add_argument("--structural", action="store_true",
+                    help="skip wall-clock timing; assert only the AR-count "
+                         "and launch-count invariants (CI gate)")
+    run(structural_only=ap.parse_args().structural)
