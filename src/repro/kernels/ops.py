@@ -15,6 +15,10 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.decode_attention import decode_attention_pair as _decode_pair
+from repro.kernels.decode_attention import (
+    decode_attention_paged as _decode_paged,
+    decode_attention_pair_paged as _decode_pair_paged,
+)
 from repro.kernels.dual_rmsnorm import dual_rmsnorm as _dual
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.ssm_scan import ssm_scan as _scan
@@ -51,6 +55,21 @@ def decode_attention_pair(q, k, v, t_valid, *, block_l=256):
     """Fused LP-pair decode: q [2, B, Hkv, g, hd]; k, v [2, B, L, Hkv, hd]
     (stacked pair cache) -> [2, B, Hkv, g, hd] in ONE kernel launch."""
     return _decode_pair(q, k, v, t_valid, block_l=block_l)
+
+
+@jax.jit
+def decode_attention_paged(q, k_pages, v_pages, block_tables, t_valid):
+    """Paged decode: q [B, Hkv, g, hd]; k/v_pages [n_pages, ps, Hkv, hd];
+    block_tables [B, n_pg]; t_valid [B] -> [B, Hkv, g, hd]."""
+    return _decode_paged(q, k_pages, v_pages, block_tables, t_valid)
+
+
+@jax.jit
+def decode_attention_pair_paged(q, k_pages, v_pages, block_tables, t_valid):
+    """Fused paged LP-pair decode: q [2, B, Hkv, g, hd]; k/v_pages
+    [2, n_pages, ps, Hkv, hd]; one shared block table -> [2, B, Hkv, g, hd]
+    in ONE kernel launch."""
+    return _decode_pair_paged(q, k_pages, v_pages, block_tables, t_valid)
 
 
 @partial(jax.jit, static_argnames=("block_s", "block_c"))

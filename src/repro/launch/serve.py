@@ -1,7 +1,15 @@
 """Serving driver: batched prefill + decode with an LP model.
 
+One-shot fixed batch (the paper's measurement setup):
+
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --eff-depth 20 --batch 4 --prompt-len 64 --new-tokens 32
+
+Continuous batching over the paged pair-KV cache pool (deployment shape —
+requests arrive staggered, share pages, finish independently):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
+        --eff-depth 20 --continuous --requests 16 --new-tokens 32
 
 In-container this runs the reduced config on CPU; on a real slice the same
 code path runs under shard_map via serve.engine.make_sharded_serve_step
@@ -14,12 +22,13 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core.lp import EMPTY_PLAN, plan_for_depth
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
-from repro.serve import ServeConfig, generate
+from repro.serve import PagedEngine, PagedServeConfig, ServeConfig, generate
 
 
 def main() -> None:
@@ -31,6 +40,12 @@ def main() -> None:
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--full-config", action="store_true")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV cache pool")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="(--continuous) number of synthetic requests")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="(--continuous) tokens per cache page")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -41,6 +56,35 @@ def main() -> None:
     ms = T.build_structure(cfg, plan=plan, tp=1)
     params = T.init_params(ms, jax.random.PRNGKey(0))
     pc = ParallelContext()
+
+    if args.continuous:
+        ps = args.page_size
+        max_len = -(-(args.prompt_len + args.new_tokens + 8) // ps) * ps
+        psv = PagedServeConfig(
+            n_slots=args.batch, page_size=ps,
+            n_pages=1 + args.batch * (max_len // ps), max_len=max_len,
+            temperature=args.temperature)
+        eng = PagedEngine(params, ms, psv)
+        key = jax.random.PRNGKey(1)
+        lens = [max(4, args.prompt_len - 8 * (i % 3))
+                for i in range(args.requests)]
+        t0 = time.time()
+        for i, L in enumerate(lens):
+            eng.add_request(np.asarray(jax.random.randint(
+                jax.random.fold_in(key, i), (L,), 0, cfg.vocab_size)),
+                args.new_tokens)
+        res = eng.drain()
+        run = time.time() - t0
+        toks = sum(len(v) for v in res.values())
+        print(f"arch={cfg.name} eff_depth={ms.effective_depth}/{cfg.n_layers} "
+              f"continuous: {args.requests} reqs x {args.new_tokens} new, "
+              f"slots={psv.n_slots} pages={psv.n_pages - 1}x{ps}")
+        print(f"run={run:.3f}s throughput={toks / run:.1f} tok/s "
+              f"steps={eng.step_count} "
+              f"pages alloc/freed={eng.pool.allocated_total}"
+              f"/{eng.pool.freed_total}")
+        print("sample:", res[0][:16].tolist())
+        return
     sv = ServeConfig(max_len=args.prompt_len + args.new_tokens + 8,
                      temperature=args.temperature)
     prompts = jax.random.randint(jax.random.PRNGKey(1),

@@ -50,6 +50,11 @@ def set_decode_impl(impl: str) -> None:
     _DECODE_IMPL = impl
 
 
+def get_decode_impl() -> str:
+    """Current decode implementation (for save/restore around benchmarks)."""
+    return _DECODE_IMPL
+
+
 # ---------------------------------------------------------------------------
 # Static dimension bookkeeping
 # ---------------------------------------------------------------------------
@@ -431,6 +436,96 @@ def decode_attn_standard(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,
     o = jnp.einsum("bngst,btnh->bsngh", pweights, vs.astype(jnp.float32))
     o = o.astype(xn.dtype).reshape(B, 1, dims.hq, dims.hd)
     return output_proj(p, o, dims, pair=False), cache_k, cache_v
+
+
+def decode_attn_paged(p, xn, k_pages, v_pages, t, block_tables, cfg,
+                      dims: AttnDims, pc, *, kind, pair: bool):
+    """Decode against the PAGED cache pool (continuous batching).
+
+    pair=False: xn [B,1,D], k/v_pages [n_pages, ps, hkv_stored, hd].
+    pair=True (fused LP pair): xn [2,B,1,D], k/v_pages [2, n_pages, ps,
+    hkv_stored, hd] stacked-contiguous — both halves occupy the SAME page
+    indices of their own half, so one block table serves the pair and the
+    pair still costs ONE projection, ONE scatter per cache tensor, ONE
+    attention launch and ONE merged output projection.
+
+    t: [B] int32 per-slot absolute positions (every slot decodes at its own
+    stream position); block_tables: [B, n_pg] int32 page indirection, with
+    unused entries (and idle slots' whole rows) pointing at the reserved
+    garbage page 0 — their writes are harmless and their reads mask out.
+    Only plain causal kinds page (slot == t); window/chunk rings are
+    rejected upstream (serve.paged_cache.validate_paged_support).
+
+    Returns (partial_out, new_k_pages, new_v_pages).
+    """
+    B = xn.shape[1] if pair else xn.shape[0]
+    q, k, v = project_qkv(p, xn, cfg, dims, pc, positions=t[:, None],
+                          kind=kind, pair=pair)
+    page_ax = 1 if pair else 0
+    ps = k_pages.shape[page_ax + 1]
+    # Indirection: position t lives at (bt[b, t // ps], t % ps).
+    page_of = jnp.take_along_axis(block_tables, (t // ps)[:, None],
+                                  axis=1)[:, 0]
+    off = t % ps
+    Hk, g = core_layout(dims)
+    scale = dims.hd ** -0.5
+    kernel_ok = dims.tp == 1 or dims.kv_sharded  # no kv-head gather needed
+
+    if pair:
+        hkv_st = k_pages.shape[3]
+        # New-token kv arrives pair-folded [B,1,2*hkv,hd]; unfold and write
+        # both halves' (page, offset) in ONE scatter per cache tensor.
+        k2 = k.reshape(B, 2, hkv_st, dims.hd).transpose(1, 0, 2, 3)
+        v2 = v.reshape(B, 2, hkv_st, dims.hd).transpose(1, 0, 2, 3)
+        k_pages = k_pages.at[:, page_of, off].set(k2.astype(k_pages.dtype))
+        v_pages = v_pages.at[:, page_of, off].set(v2.astype(v_pages.dtype))
+        qh = q.reshape(B, 2, Hk, g, dims.hd)           # pair-major heads, S=1
+        if _DECODE_IMPL == "pallas" and kernel_ok:
+            from repro.kernels import ops as KOPS
+            qp = qh.transpose(1, 0, 2, 3, 4)           # [2,B,Hk,g,hd]
+            o = KOPS.decode_attention_pair_paged(
+                qp, k_pages, v_pages, block_tables, t).astype(xn.dtype)
+            o = o.transpose(1, 0, 2, 3, 4).reshape(B, 1, 2 * dims.hq, dims.hd)
+            return output_proj(p, o, dims, pair=True), k_pages, v_pages
+        # XLA path: gather the slots' pages back into per-request sequences
+        # ([2, B, L, hkv, hd], L = n_pg * ps) and run the ring core math.
+        kg = jnp.take(k_pages, block_tables, axis=1)
+        vg = jnp.take(v_pages, block_tables, axis=1)
+        L = kg.shape[2] * ps
+        ks = select_local_kv_pair(kg.reshape(2, B, L, hkv_st, dims.hd), dims, pc)
+        vs = select_local_kv_pair(vg.reshape(2, B, L, hkv_st, dims.hd), dims, pc)
+        s = jnp.einsum("bpngh,pbtnh->bpngt", qh.astype(jnp.float32),
+                       ks.astype(jnp.float32)) * scale
+        valid = jnp.arange(L)[None, :] <= t[:, None]   # per-slot horizon
+        s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        pweights = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bpngt,pbtnh->bpngh", pweights, vs.astype(jnp.float32))
+        o = o.astype(xn.dtype).reshape(B, 1, 2 * dims.hq, dims.hd)
+        return output_proj(p, o, dims, pair=True), k_pages, v_pages
+
+    hkv_st = k_pages.shape[2]
+    k_pages = k_pages.at[page_of, off].set(k[:, 0].astype(k_pages.dtype))
+    v_pages = v_pages.at[page_of, off].set(v[:, 0].astype(v_pages.dtype))
+    qh = q.reshape(B, 1, Hk, g, dims.hd)
+    if _DECODE_IMPL == "pallas" and kernel_ok:
+        from repro.kernels import ops as KOPS
+        o = KOPS.decode_attention_paged(
+            qh[:, 0], k_pages, v_pages, block_tables, t).astype(xn.dtype)
+        o = o.reshape(B, 1, dims.hq, dims.hd)
+        return output_proj(p, o, dims, pair=False), k_pages, v_pages
+    kg = jnp.take(k_pages, block_tables, axis=0)
+    vg = jnp.take(v_pages, block_tables, axis=0)
+    L = kg.shape[1] * ps
+    ks = select_local_kv(kg.reshape(B, L, hkv_st, dims.hd), dims, pc)
+    vs = select_local_kv(vg.reshape(B, L, hkv_st, dims.hd), dims, pc)
+    s = jnp.einsum("bsngh,btnh->bngst", qh.astype(jnp.float32),
+                   ks.astype(jnp.float32)) * scale
+    valid = jnp.arange(L)[None, :] <= t[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pweights = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bngst,btnh->bsngh", pweights, vs.astype(jnp.float32))
+    o = o.astype(xn.dtype).reshape(B, 1, dims.hq, dims.hd)
+    return output_proj(p, o, dims, pair=False), k_pages, v_pages
 
 
 def decode_attn_seq_sharded(p, xn, cache_k, cache_v, t, cfg, dims: AttnDims, pc,

@@ -410,7 +410,8 @@ def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
 # ---------------------------------------------------------------------------
 
 def apply_group_decode(gp, x, cache, t, *, cfg, group: Group, dims,
-                       pc: ParallelContext, kv_mode="heads"):
+                       pc: ParallelContext, kv_mode="heads",
+                       cache_layout="ring", block_tables=None):
     """One group for one new token. x: [B,1,D] (replicated over model; no SP
     at decode). Returns (x, new_cache).
 
@@ -419,17 +420,39 @@ def apply_group_decode(gp, x, cache, t, *, cfg, group: Group, dims,
     cache — one QKV projection, one cache read/write, one attention kernel
     launch and one psum per phase, instead of the per-half loop's two of
     each. Heterogeneous pairs and single layers use the per-half loop.
+
+    cache_layout="paged" (continuous batching): ``t`` is a [B] vector of
+    per-slot positions, attention k/v entries are page pools indirected
+    through ``block_tables`` [B, n_pg], and state entries stay slot-indexed
+    with B == n_slots. The fused pair path is preserved — one
+    decode_attn_paged(pair=True) call per stacked pair.
     """
     new_cache: Dict[str, Any] = {}
     mixer = group.specs[0].mixer
     nP = 2 if group.pair else 1
+    paged = cache_layout == "paged"
     fused = pair_cache_stacked(group)
     if fused:  # tolerate caches emitted under the per-layer layout
         fused = ("k" if mixer.startswith("attn") else "conv") in cache
+    if paged and group.pair and mixer.startswith("attn") and not fused:
+        raise NotImplementedError(
+            "paged decode requires the stacked pair cache layout "
+            "(heterogeneous attention pairs are not pageable)")
 
     xn = _norm_inputs(gp, "ln1", x, cfg, group)
     if mixer.startswith("attn"):
-        if fused:
+        if paged and fused:
+            out, nk, nv = A.decode_attn_paged(
+                gp["attn"], xn, cache["k"], cache["v"], t, block_tables,
+                cfg, dims, pc, kind=mixer, pair=True)
+            new_cache["k"], new_cache["v"] = nk, nv
+        elif paged:
+            o, nk, nv = A.decode_attn_paged(
+                gp["attn"], xn, cache["k0"], cache["v0"], t, block_tables,
+                cfg, dims, pc, kind=mixer, pair=False)
+            out = o
+            new_cache["k0"], new_cache["v0"] = nk, nv
+        elif fused:
             decode_fn = (A.decode_attn_seq_sharded
                          if seq_sharded_kind(cfg, dims, mixer, kv_mode)
                          else A.decode_attn_standard)

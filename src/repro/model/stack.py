@@ -148,8 +148,15 @@ def apply_stack_full(seg_params, x, segments, *, cfg, dims, pc, positions,
 
 
 def apply_stack_decode(seg_params, x, caches, t, segments, *, cfg, dims, pc,
-                       kv_mode="heads", gather_fns=None):
-    """One decode step through all segments. caches: list of stacked trees."""
+                       kv_mode="heads", gather_fns=None, cache_layout="ring",
+                       block_tables=None):
+    """One decode step through all segments. caches: list of stacked trees.
+
+    cache_layout="paged": attention cache entries are page pools indirected
+    through ``block_tables`` and ``t`` is the per-slot position vector; the
+    scan-over-count machinery is layout-agnostic (the pool rides in the
+    carry exactly like the ring cache, so XLA still aliases the buffers).
+    """
     new_caches = []
     gather_fns = gather_fns or [None] * len(segments)
     for sp, cache, seg, gather in zip(seg_params, caches, segments, gather_fns):
@@ -158,7 +165,9 @@ def apply_stack_decode(seg_params, x, caches, t, segments, *, cfg, dims, pc,
             if _gather is not None:
                 gp = _gather(gp)
             return B.apply_group_decode(gp, x, c, t, cfg=cfg, group=_seg.group,
-                                        dims=dims, pc=pc, kv_mode=kv_mode)
+                                        dims=dims, pc=pc, kv_mode=kv_mode,
+                                        cache_layout=cache_layout,
+                                        block_tables=block_tables)
 
         if seg.count == 1:
             c0 = jax.tree.map(lambda v: v[0], cache)

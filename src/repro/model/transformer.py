@@ -304,16 +304,29 @@ def prefill(params, tokens, *, ms: ModelStructure, pc: ParallelContext,
 
 
 def decode_step(params, tok, caches, t, *, ms: ModelStructure,
-                pc: ParallelContext, kv_mode="heads"):
+                pc: ParallelContext, kv_mode="heads", cache_layout="ring",
+                block_tables=None):
     """One decode step. tok: [B] int32 ids; t: scalar absolute position of
-    ``tok`` in the stream. Returns (local logits [B, V/tp], new caches)."""
+    ``tok`` in the stream. Returns (local logits [B, V/tp], new caches).
+
+    cache_layout="paged" (continuous batching — repro.serve): ``t`` is a
+    [B] int32 VECTOR of per-slot positions, ``caches`` is the paged pool
+    tree (serve.paged_cache) and ``block_tables`` [B, n_pg] carries the
+    slot -> page indirection. The ring path is untouched.
+    """
     cfg = ms.cfg
     dpc = pc.with_sp(False)  # decode never uses sequence parallelism
-    pos = jnp.full((tok.shape[0], 1), t, jnp.int32)
+    if cache_layout == "paged":
+        assert block_tables is not None
+        t = jnp.asarray(t, jnp.int32)
+        pos = t[:, None]          # per-slot positions for embed/rope
+    else:
+        pos = jnp.full((tok.shape[0], 1), t, jnp.int32)
     x = _embed(params, tok[:, None], cfg, dpc, positions=pos)
     seg_params, gather_fns = stack_params_and_gathers(params, ms, dpc)
     x, new_caches = ST.apply_stack_decode(
         seg_params, x, caches, t, ms.segments, cfg=cfg, dims=ms.dims,
-        pc=dpc, kv_mode=kv_mode, gather_fns=gather_fns)
+        pc=dpc, kv_mode=kv_mode, gather_fns=gather_fns,
+        cache_layout=cache_layout, block_tables=block_tables)
     logits = _head(params, x, cfg, dpc)
     return logits[:, 0], new_caches

@@ -1,4 +1,6 @@
 from repro.serve.engine import (  # noqa: F401
+    PagedEngine,
+    PagedServeConfig,
     ServeConfig,
     cache_pspecs,
     generate,
@@ -6,4 +8,9 @@ from repro.serve.engine import (  # noqa: F401
     make_serve_step,
     make_sharded_prefill,
     make_sharded_serve_step,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    PagePool,
+    Request,
+    Scheduler,
 )

@@ -10,15 +10,31 @@ The engine exposes the three programs the assigned shapes lower:
 
 Sampling is vocab-parallel (Gumbel-max over the sharded vocabulary), so full
 logits are never gathered.
+
+Continuous batching
+-------------------
+``PagedEngine`` is the deployment-shaped entry point: requests of different
+lengths arrive at different times, share ONE paged pair-KV cache pool
+(repro.serve.paged_cache), and finish independently — ``add_request`` /
+``step`` / ``drain``. The decode step stays ONE compiled program: the batch
+is a fixed set of ``n_slots`` decode slots (idle slots point at the garbage
+page and their outputs are ignored on the host), with per-slot positions
+and a block table as the only per-step inputs. Prefill compiles per
+distinct prompt length and runs the EXACT prompt (no right-padding), which
+is what makes engine outputs bit-identical to one-shot ``generate()`` —
+padding would change reduction shapes and perturb low bits. Admission is
+FCFS with a prefill token budget (repro.serve.scheduler) so prefill bursts
+interleave with, rather than starve, running decodes.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
@@ -26,6 +42,8 @@ from repro.compat import shard_map
 from repro.model import embedding as E
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext, make_context
+from repro.serve import paged_cache as PG
+from repro.serve.scheduler import PagePool, Request, Scheduler
 
 PyTree = Any
 
@@ -102,6 +120,213 @@ def generate(params, prompts, n_new: int, *, ms: T.ModelStructure,
 
 
 # ---------------------------------------------------------------------------
+# Continuous batching over the paged pair-KV cache pool
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PagedServeConfig:
+    """Static geometry of the continuous-batching engine.
+
+    max_len must be a page multiple: the decode step attends over exactly
+    ``pages_per_slot * page_size == max_len`` gathered positions, the same
+    horizon a ring cache of ``max_len`` gives one-shot ``generate()`` —
+    equal reduction shapes are part of the bit-identity contract.
+    ``n_pages`` INCLUDES the reserved garbage page 0, so the allocatable
+    capacity is ``n_pages - 1`` pages.
+    """
+    n_slots: int = 8              # concurrent decode slots (fixed batch)
+    page_size: int = 16           # tokens per cache page
+    n_pages: int = 129            # pool size incl. the reserved garbage page
+    max_len: int = 256            # per-request position cap (page multiple)
+    prefill_token_budget: int = 4096   # admission budget per step
+    temperature: float = 0.0      # 0 -> greedy (bit-identical to generate())
+    cache_dtype: Any = jnp.bfloat16
+    eos_token: int = -1           # -1: run every request to max_new
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.max_len // self.page_size
+
+
+class PagedEngine:
+    """Continuous-batching serving engine: ``add_request / step / drain``.
+
+    One ``step()`` is: FCFS admission (each admitted request prefills at its
+    exact length and claims its pages), then ONE fixed-shape decode program
+    over all ``n_slots`` slots. Finished requests (EOS / max_new) release
+    their slot and pages the same step, so the next admission reuses them.
+
+    Greedy outputs are bit-identical per request to one-shot
+    ``generate(params, prompt[None], max_new)`` with ``max_len`` equal to
+    this engine's: prefill runs the identical forward at the exact prompt
+    length, decode runs the identical per-row math (paged gather + same
+    cores), and every cross-request interaction is row-independent.
+    """
+
+    def __init__(self, params, ms: T.ModelStructure, psv: PagedServeConfig,
+                 *, pc: Optional[ParallelContext] = None, key=None):
+        assert psv.max_len % psv.page_size == 0, (psv.max_len, psv.page_size)
+        assert psv.n_slots >= 1
+        PG.validate_paged_support(ms, psv.max_len)
+        self.params = params
+        self.ms = ms
+        self.psv = psv
+        self.pc = pc if pc is not None else ParallelContext()
+        self.pool = PagePool(psv.n_pages)
+        self.sched = Scheduler(
+            n_slots=psv.n_slots, pool=self.pool, page_size=psv.page_size,
+            max_len=psv.max_len,
+            prefill_token_budget=psv.prefill_token_budget)
+        self.caches = PG.init_paged_caches(
+            ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
+            page_size=psv.page_size, dtype=psv.cache_dtype)
+        P_slot = psv.pages_per_slot
+        self.block_tables = np.full((psv.n_slots, P_slot), PG.GARBAGE_PAGE,
+                                    np.int32)
+        self.tok = np.zeros((psv.n_slots,), np.int32)
+        self.pos = np.zeros((psv.n_slots,), np.int32)
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self.step_count = 0
+        self.results: Dict[int, np.ndarray] = {}
+        self._requests: Dict[int, Request] = {}
+        self._decode = self._make_decode()
+        self._prefills: Dict[int, Any] = {}   # prompt_len -> jitted prefill
+
+    # -- compiled programs ---------------------------------------------
+    def _make_decode(self):
+        ms, pc, psv = self.ms, self.pc, self.psv
+
+        def f(params, caches, tok, pos, bt, key):
+            logits, caches = T.decode_step(
+                params, tok, caches, pos, ms=ms, pc=pc,
+                cache_layout="paged", block_tables=bt)
+            if psv.temperature > 0:
+                nxt = E.vocab_parallel_sample(logits, key, psv.temperature, pc)
+            else:
+                nxt = E.vocab_parallel_argmax(logits, pc)
+            return nxt.astype(jnp.int32), caches
+
+        return jax.jit(f, donate_argnums=(1,))
+
+    def _prefill_fn(self, prompt_len: int):
+        """Exact-length prefill + page scatter, compiled once per distinct
+        prompt length (the cache emission length rounds up to whole pages;
+        the forward itself is the exact prompt — no padding)."""
+        ms, pc, psv = self.ms, self.pc, self.psv
+        n_pg = -(-prompt_len // psv.page_size)
+        emit_len = n_pg * psv.page_size
+
+        def f(params, caches, prompt, page_ids, slot, key):
+            logits, _, seq = T.forward_full(
+                params, prompt, ms=ms, pc=pc, emit_cache=True,
+                max_len=emit_len, kv_mode="heads")
+            # Same cast T.prefill applies to the ring cache.
+            seq = jax.tree.map(
+                lambda c: c.astype(psv.cache_dtype)
+                if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
+            last = logits[:, prompt_len - 1]
+            if psv.temperature > 0:
+                tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
+            else:
+                tok0 = E.vocab_parallel_argmax(last, pc)
+            caches = PG.scatter_prefill(caches, seq, page_ids, slot)
+            return tok0.astype(jnp.int32), caches
+
+        return jax.jit(f, donate_argnums=(1,))
+
+    # -- public API ----------------------------------------------------
+    def add_request(self, prompt, max_new: int,
+                    eos_token: Optional[int] = None) -> int:
+        """Queue a request; returns its id. Fails fast if the request could
+        NEVER fit the pool (otherwise exhaustion just queues it)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        total = prompt.shape[0] + max_new
+        if total > self.psv.max_len:
+            raise ValueError(
+                f"request needs {total} positions > max_len={self.psv.max_len}")
+        need = PG.pages_needed(prompt.shape[0], max_new, self.psv.page_size)
+        if need > self.psv.n_pages - 1:
+            raise ValueError(
+                f"request needs {need} pages > pool capacity "
+                f"{self.psv.n_pages - 1}")
+        eos = self.psv.eos_token if eos_token is None else eos_token
+        r = self.sched.submit(prompt, max_new, eos)
+        self._requests[r.rid] = r
+        return r.rid
+
+    def _prefill(self, r: Request) -> None:
+        fn = self._prefills.get(r.prompt_len)
+        if fn is None:
+            fn = self._prefills[r.prompt_len] = \
+                self._prefill_fn(r.prompt_len)
+        n_pg = -(-r.prompt_len // self.psv.page_size)
+        page_ids = jnp.asarray(r.pages[:n_pg], jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        tok0, self.caches = fn(self.params, self.caches,
+                               jnp.asarray(r.prompt[None]), page_ids,
+                               jnp.int32(r.slot), sub)
+        r.out.append(int(tok0[0]))
+        row = self.block_tables[r.slot]
+        row[:] = PG.GARBAGE_PAGE
+        row[:len(r.pages)] = r.pages
+        self.tok[r.slot] = r.out[-1]
+        self.pos[r.slot] = r.pos          # == prompt_len
+
+    def _finish(self, r: Request) -> None:
+        slot = r.slot
+        self.sched.finish(r, self.step_count)
+        self.block_tables[slot] = PG.GARBAGE_PAGE
+        self.tok[slot] = 0
+        self.pos[slot] = 0
+        self.results[r.rid] = np.asarray(r.out, np.int32)
+
+    def step(self) -> Dict[str, int]:
+        """One engine iteration: admission+prefill, then one decode program
+        over every slot. Returns counters for the step."""
+        stats = {"admitted": 0, "decoded": 0, "finished": 0,
+                 "live_pages": 0}
+        for r in self.sched.admit(self.step_count):
+            self._prefill(r)
+            stats["admitted"] += 1
+            if r.done():      # max_new == 1 (or instant EOS) on prefill
+                self._finish(r)
+                stats["finished"] += 1
+        if self.sched.n_running:
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(self.tok),
+                jnp.asarray(self.pos), jnp.asarray(self.block_tables), sub)
+            nxt = np.asarray(nxt)
+            for slot, r in list(self.sched.running.items()):
+                r.out.append(int(nxt[slot]))
+                self.tok[slot] = nxt[slot]
+                self.pos[slot] += 1
+                stats["decoded"] += 1
+                if r.done():
+                    self._finish(r)
+                    stats["finished"] += 1
+        self.pool.check_balance()
+        stats["live_pages"] = self.pool.live
+        self.step_count += 1
+        return stats
+
+    def drain(self) -> Dict[int, np.ndarray]:
+        """Step until every submitted request finished; returns
+        {rid: generated tokens}."""
+        while self.sched.n_queued or self.sched.n_running:
+            self.step()
+        return dict(self.results)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of allocatable cache pages currently live."""
+        return self.pool.live / max(self.psv.n_pages - 1, 1)
+
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+
+# ---------------------------------------------------------------------------
 # Sharded wrappers (mesh execution + dry-run lowering)
 # ---------------------------------------------------------------------------
 
@@ -156,16 +381,12 @@ def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
     dp = tuple(pc.dp_axes) if pc.dp_axes else (None,)
     dp_ax = dp if len(dp) > 1 else dp[0]
     in_specs = [p_specs, P(dp_ax, None)]
-    n_extra = 0
-    if ms.cfg.prefix_len:
-        in_specs.append(P(dp_ax, None, None))
-        n_extra += 1
-    if ms.enc_segments:
-        if not ms.cfg.prefix_len:
-            in_specs.append(P(dp_ax, None, None))
-        else:
-            in_specs.append(P(dp_ax, None, None))
-        n_extra += 1
+    # Extras ride positionally after ``tokens``: a [B, prefix_len, D]
+    # patch-embedding prefix (vlm) and/or [B, enc_seq, D] encoder frames
+    # (encdec) — both [B, S, D] with only the batch axis dp-sharded, so
+    # every extra takes the same spec.
+    n_extras = int(bool(ms.cfg.prefix_len)) + int(bool(ms.enc_segments))
+    in_specs.extend([P(dp_ax, None, None)] * n_extras)
 
     def local_n(params, tokens, *extras):
         prefix = frames = None

@@ -1,0 +1,165 @@
+"""Paged pair-KV cache pool for the continuous-batching engine.
+
+One-shot ``generate()`` gives every request a contiguous ring cache of
+``max_len`` slots for its whole life — fine for a fixed batch, hopeless for
+serving: a short request strands the memory of a long one and nothing can be
+admitted until the whole batch drains. The paged pool instead carves the
+cache into fixed-size PAGES handed out from a free list; a request holds
+exactly the pages its length needs and returns them the moment it finishes,
+so requests of very different lengths share one cache allocation.
+
+Layout: the pool keeps PR 1's stacked pair layout end to end. A fused LP
+pair's k/v pool is ``[2, n_pages, page_size, Hkv, hd]`` (leading pair axis,
+bare entry names), a per-layer entry is ``[n_pages, page_size, Hkv, hd]``
+(indexed names ``k0``/``v0``) — i.e. the ring layout with the ``[B, L]``
+prefix replaced by ``[n_pages, page_size]``. Both halves of a pair live at
+the SAME page indices of their own half of the leading axis, so one block
+table serves the pair and homogeneous pairs still stream through one kernel
+launch (``repro.kernels.decode_attention.decode_attention_pair_paged``).
+
+Indirection: a block table ``[n_slots, pages_per_slot]`` maps each decode
+slot's logical position ``t`` to ``(page, offset) = (bt[slot, t // ps],
+t % ps)``. Page 0 is RESERVED as the garbage page: idle slots and the
+unused tail of every block-table row point at it, so padded slots in the
+fixed-shape decode batch write/read harmlessly without masking logic on
+device. The free list never hands out page 0.
+
+Mamba/RG-LRU state entries (``conv``/``h``) are O(1) per request and are
+not paged — they stay slot-indexed with ``n_slots`` as the batch axis.
+Cross-attention caches and non-causal ring kinds (sliding-window/chunked)
+are not supported by the paged layout; ``validate_paged_support`` rejects
+them up front.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.model import blocks as B
+from repro.model import transformer as T
+
+PyTree = Any
+
+#: Reserved garbage page: idle slots and unused block-table entries point here.
+GARBAGE_PAGE = 0
+
+
+def is_paged_entry(name: str) -> bool:
+    """Self-attention k/v entries are paged (per-token length dim); state
+    entries (conv/h) are slot-indexed; cross-attention (xk/xv) unsupported."""
+    return name.rstrip("0123456789") in ("k", "v")
+
+
+def pages_needed(prompt_len: int, max_new: int, page_size: int) -> int:
+    """Pages a request holds for its whole life (prompt + all new tokens)."""
+    return -(-(prompt_len + max_new) // page_size)
+
+
+def validate_paged_support(ms: T.ModelStructure, max_len: int) -> None:
+    """The paged layout covers plain causal attention caches + slot state.
+
+    Rejects: encoder/cross-attention (whisper), prefix-LM (paligemma), and
+    ring kinds whose cache is a reused window/chunk ring rather than one
+    slot per absolute position (recurrentgemma's attn_local, llama4's
+    attn_chunked) — paging a reused ring would need per-page eviction.
+    """
+    cfg = ms.cfg
+    if ms.enc_segments or cfg.enc_layers:
+        raise ValueError(f"{cfg.name}: encoder/cross-attention caches are "
+                         "not pageable")
+    if cfg.prefix_len:
+        raise ValueError(f"{cfg.name}: prefix-LM serving is not paged yet")
+    for seg in ms.segments:
+        for spec in seg.group.specs:
+            if spec.cross_attn:
+                raise ValueError(f"{cfg.name}: cross-attention not pageable")
+            m = spec.mixer
+            if m.startswith("attn") and B.ring_len(cfg, m, max_len) != max_len:
+                raise ValueError(
+                    f"{cfg.name}: {m} reuses a ring of "
+                    f"{B.ring_len(cfg, m, max_len)} < {max_len} slots; paged "
+                    "layout requires one slot per absolute position")
+
+
+def paged_cache_meta(ms: T.ModelStructure, *, n_slots: int, n_pages: int,
+                     page_size: int, dtype=jnp.bfloat16):
+    """(abstract, pspec) trees for the paged pool, mirroring the ring cache
+    tree structure (same segment list, same entry names) with the ``[B, L]``
+    prefix of every paged entry replaced by ``[n_pages, page_size]``.
+
+    ``dtype`` plays the role of ``prefill``'s cache cast: every float entry
+    of the ring meta (including the fp32 recurrent state) is stored at
+    ``dtype`` so pool contents match what a ring cache holds after the
+    prefill cast.
+    """
+    abs_, ps_ = T.cache_meta(ms, batch=n_slots, max_len=n_pages * page_size,
+                             kv_mode="heads", dtype=dtype)
+
+    def remap(seg_abs, seg_ps):
+        na, np_ = {}, {}
+        for name, a in seg_abs.items():
+            ba = T.cache_batch_axis(name)  # [count, (2,) B, ...]
+            dt = dtype if a.dtype in (jnp.float32, jnp.bfloat16) else a.dtype
+            if is_paged_entry(name):
+                # [count, (2,) B, L, H, hd] -> [count, (2,) n_pages, ps, H, hd]
+                shape = (*a.shape[:ba], n_pages, page_size, *a.shape[ba + 2:])
+                spec = list(seg_ps[name])
+                na[name] = jax.ShapeDtypeStruct(shape, dt)
+                np_[name] = P(*spec)
+            else:
+                na[name] = jax.ShapeDtypeStruct(a.shape, dt)
+                np_[name] = seg_ps[name]
+        return na, np_
+
+    outs = [remap(a, p) for a, p in zip(abs_, ps_)]
+    return [o[0] for o in outs], [o[1] for o in outs]
+
+
+def init_paged_caches(ms: T.ModelStructure, *, n_slots: int, n_pages: int,
+                      page_size: int, dtype=jnp.bfloat16) -> List[Dict]:
+    abs_, _ = paged_cache_meta(ms, n_slots=n_slots, n_pages=n_pages,
+                               page_size=page_size, dtype=dtype)
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), abs_)
+
+
+def scatter_prefill(pool: List[Dict], seq: List[Dict], page_ids, slot):
+    """Place one request's prefill caches into its pages / state slot.
+
+    pool: the paged cache tree (list of per-segment dicts).
+    seq:  a batch-1 ring cache tree from ``forward_full(emit_cache=True,
+          max_len=n_scatter_pages * page_size)`` — i.e. the cache length is
+          already a whole number of pages.
+    page_ids: [n_scatter_pages] int32 — the FIRST ceil(prompt_len /
+          page_size) pages the request owns (always <= its allocation,
+          since it holds pages for prompt + max_new). Positions in the
+          last page past the true prompt length receive garbage; that is
+          safe because they stay masked (pos > horizon) until the decode
+          loop overwrites each of them in turn.
+    slot: scalar int32 decode slot (receives the non-paged state entries).
+    """
+    n_pg = page_ids.shape[0]
+    out = []
+    for pool_seg, seq_seg in zip(pool, seq):
+        nseg = {}
+        for name, pv in pool_seg.items():
+            sv = seq_seg[name]
+            ba = T.cache_batch_axis(name)
+            if is_paged_entry(name):
+                ps = pv.shape[ba + 1]
+                s = jnp.squeeze(sv, axis=ba)   # drop B=1 -> length at ba
+                s = s.reshape(*s.shape[:ba], n_pg, ps, *s.shape[ba + 1:])
+                s = s.astype(pv.dtype)
+                if ba == 2:   # stacked pair entry [count, 2, n_pages, ...]
+                    nseg[name] = pv.at[:, :, page_ids].set(s)
+                else:         # per-layer entry [count, n_pages, ...]
+                    nseg[name] = pv.at[:, page_ids].set(s)
+            else:
+                # Slot state: write the request's B=1 slice at its slot.
+                nseg[name] = lax.dynamic_update_slice_in_dim(
+                    pv, sv.astype(pv.dtype), slot, axis=ba)
+        out.append(nseg)
+    return out

@@ -1,0 +1,182 @@
+"""Host-side scheduling for the continuous-batching engine.
+
+Pure-Python request/page bookkeeping — nothing here touches a device. The
+engine (repro.serve.engine.PagedEngine) asks the scheduler three questions
+per step:
+
+  admit()   — which queued requests start NOW (FCFS, gated by free decode
+              slots, free cache pages, and a prefill token budget so a
+              burst of long prompts cannot starve running decodes)
+  finish()  — recycle a finished request's slot + pages
+  n_running — is there anything to decode
+
+Pages come from ``PagePool``, a free-list allocator over the paged pair-KV
+cache (repro.serve.paged_cache). Page 0 is the reserved garbage page and is
+never handed out. The pool keeps monotone allocated/freed counters so the
+serving benchmark can assert the accounting balance
+``allocated - freed == live`` at every step (the invariant the
+``serve-structural`` CI job gates on).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.paged_cache import GARBAGE_PAGE, pages_needed
+
+QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+
+
+class PagePool:
+    """Free-list page allocator with monotone accounting counters."""
+
+    def __init__(self, n_pages: int):
+        assert n_pages >= 2, "need at least one allocatable page + garbage"
+        self.n_pages = n_pages
+        # LIFO free list; page 0 (GARBAGE_PAGE) is reserved, never listed.
+        self._free: List[int] = list(range(n_pages - 1, GARBAGE_PAGE, -1))
+        self.allocated_total = 0
+        self.freed_total = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def live(self) -> int:
+        """Pages currently held by running requests."""
+        return (self.n_pages - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None if the pool cannot satisfy the request (the
+        caller keeps the request QUEUED — exhaustion queues, never OOMs)."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self.allocated_total += n
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            assert p != GARBAGE_PAGE, "garbage page is never allocated"
+            self._free.append(p)
+        self.freed_total += len(pages)
+
+    def check_balance(self) -> None:
+        assert self.allocated_total - self.freed_total == self.live, (
+            self.allocated_total, self.freed_total, self.live)
+
+
+@dataclass
+class Request:
+    """One serving request and its life-cycle state."""
+
+    rid: int
+    prompt: np.ndarray            # [prompt_len] int32
+    max_new: int
+    eos_token: int = -1           # -1: never stop early
+    status: str = QUEUED
+    out: List[int] = field(default_factory=list)
+    slot: int = -1
+    pages: List[int] = field(default_factory=list)
+    admitted_step: int = -1
+    finished_step: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def pos(self) -> int:
+        """Absolute stream position of the NEXT token fed to decode (== the
+        position its kv will be written at)."""
+        return self.prompt_len + len(self.out) - 1
+
+    def done(self) -> bool:
+        return (len(self.out) >= self.max_new
+                or (self.eos_token >= 0 and len(self.out) > 0
+                    and self.out[-1] == self.eos_token))
+
+
+class Scheduler:
+    """FCFS admission with token-budget batching and slot recycling.
+
+    Strict FCFS: the queue head blocks admission when it does not fit
+    (head-of-line blocking is intentional — it makes page exhaustion
+    starvation-free: the head is guaranteed the next freed pages).
+    """
+
+    def __init__(self, *, n_slots: int, pool: PagePool, page_size: int,
+                 max_len: int, prefill_token_budget: int = 4096):
+        self.pool = pool
+        self.page_size = page_size
+        self.max_len = max_len
+        self.prefill_token_budget = prefill_token_budget
+        self.queue: Deque[Request] = deque()
+        self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        self.running: Dict[int, Request] = {}   # slot -> request
+        self._next_rid = 0
+
+    # ------------------------------------------------------------------
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
+
+    @property
+    def n_queued(self) -> int:
+        return len(self.queue)
+
+    def submit(self, prompt: np.ndarray, max_new: int,
+               eos_token: int = -1) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert max_new >= 1
+        total = prompt.shape[0] + max_new
+        if total > self.max_len:
+            # ValueError (not assert): an over-length request would sit in
+            # the queue forever — admit() could never satisfy it.
+            raise ValueError(
+                f"request needs {total} positions > max_len={self.max_len}")
+        if pages_needed(prompt.shape[0], max_new,
+                        self.page_size) > self.pool.n_pages - 1:
+            raise ValueError("request can never fit the page pool")
+        r = Request(self._next_rid, prompt, max_new, eos_token)
+        self._next_rid += 1
+        self.queue.append(r)
+        return r
+
+    def admit(self, step: int = -1) -> List[Request]:
+        """Admit queue-head requests while a slot, pages, and prefill-token
+        budget remain. The FIRST admission of a step ignores the token
+        budget so a prompt longer than the budget cannot livelock."""
+        admitted: List[Request] = []
+        budget = self.prefill_token_budget
+        while self.queue and self.free_slots:
+            r = self.queue[0]
+            if admitted and r.prompt_len > budget:
+                break  # prefill/decode interleaving: cap this step's prefill
+            pages = self.pool.alloc(
+                pages_needed(r.prompt_len, r.max_new, self.page_size))
+            if pages is None:
+                break  # page exhaustion: r stays queued, retried next step
+            self.queue.popleft()
+            r.pages = pages
+            r.slot = self.free_slots.pop()
+            r.status = RUNNING
+            r.admitted_step = step
+            budget -= r.prompt_len
+            self.running[r.slot] = r
+            admitted.append(r)
+        return admitted
+
+    def finish(self, r: Request, step: int = -1) -> None:
+        """Recycle the request's slot and pages (EOS / max-len reached)."""
+        assert r.status == RUNNING
+        r.status = FINISHED
+        r.finished_step = step
+        del self.running[r.slot]
+        self.free_slots.append(r.slot)
+        self.pool.free(r.pages)
+        r.pages = []

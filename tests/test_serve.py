@@ -1,9 +1,12 @@
 """Serving correctness: prefill+decode == full recompute, per family."""
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
 import pytest
+
+from _helpers import run_multidevice
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduced_config
 from repro.core.lp import plan_range
@@ -108,3 +111,59 @@ def test_temperature_sampling_valid():
     out2 = generate(params, prompts, 8, ms=ms, pc=PC, sv=sv,
                     key=jax.random.PRNGKey(11))
     assert bool((out == out2).all()), "sampling must be key-deterministic"
+
+
+def test_sampling_key_sensitivity():
+    """generate() with temperature > 0: same key => identical tokens,
+    different keys => the sequences differ somewhere."""
+    cfg, ms, params, _ = _setup("tinyllama-1.1b")
+    sv = ServeConfig(max_len=40, temperature=1.0, cache_dtype=jnp.float32)
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (4, 8), 0,
+                                 cfg.vocab_size)
+    a = generate(params, prompts, 12, ms=ms, pc=PC, sv=sv,
+                 key=jax.random.PRNGKey(21))
+    a2 = generate(params, prompts, 12, ms=ms, pc=PC, sv=sv,
+                  key=jax.random.PRNGKey(21))
+    b = generate(params, prompts, 12, ms=ms, pc=PC, sv=sv,
+                 key=jax.random.PRNGKey(22))
+    assert bool((a == a2).all())
+    assert not bool((a == b).all()), \
+        "different keys must change at least one sampled token"
+
+
+@pytest.mark.slow
+def test_vocab_parallel_sample_matches_gather_reference():
+    """Gumbel-max over the SHARDED vocabulary == gathering the full logits
+    and sampling on one device (each rank's gumbels reproduced by folding
+    the key with its rank index)."""
+    out = run_multidevice(r"""
+import jax, jax.numpy as jnp, json
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.model import embedding as E
+from repro.parallel.context import make_context
+
+tp = 8
+mesh = jax.make_mesh((1, tp), ("data", "model"))
+pc = make_context(mesh)
+B, V = 4, 64
+key = jax.random.PRNGKey(7)
+logits = jax.random.normal(jax.random.PRNGKey(3), (B, V), jnp.float32) * 3.0
+temp = 0.7
+
+fn = shard_map(lambda lg: E.vocab_parallel_sample(lg, key, temp, pc),
+               mesh=mesh, in_specs=(P(None, "model"),), out_specs=P(None),
+               check_vma=False)
+toks = jax.jit(fn)(logits)
+
+# Gather-then-sample reference: concatenate the per-rank gumbel draws
+# (key folded with the rank) into the full-vocab noise vector, then argmax.
+Vl = V // tp
+g = jnp.concatenate([jax.random.gumbel(jax.random.fold_in(key, r), (B, Vl),
+                                       jnp.float32) for r in range(tp)], -1)
+ref = jnp.argmax(logits / temp + g, axis=-1).astype(jnp.int32)
+print("RESULT " + json.dumps({"toks": toks.tolist(), "ref": ref.tolist()}))
+""")
+    res = json.loads([l for l in out.splitlines()
+                      if l.startswith("RESULT")][0][7:])
+    assert res["toks"] == res["ref"], res
