@@ -6,9 +6,16 @@ page pool, and finish independently. Reported per run:
 
   tokens/s            — generated tokens over wall-clock drain time
   latency p50 / p99   — per-request submit -> finish wall time
+  TTFT p50 / p99      — submit -> first generated token wall time
   occupancy mean/max  — live pages / allocatable pages per engine step
   LP speedup          — tokens/s of the LP-paired model over vanilla (the
                         paper's decode win, now measured under serving load)
+
+``--shared-prefix`` switches to deployment-shaped traffic: N request
+families share a per-family system prompt (whole cache pages), exercising
+the radix prefix cache — additionally reported are the prefix hit rate,
+prefill tokens saved, and the engine-on vs engine-off comparison.
+``--seed`` fixes the Poisson arrival stream and all prompt tokens.
 
 ``--structural`` (the serve-structural CI gate) skips the wall clock and
 asserts the subsystem's invariants instead:
@@ -16,10 +23,18 @@ asserts the subsystem's invariants instead:
       scatter per cache tensor per paired phase — each LP pair removes 1
       launch and 2 cache writes per decode step, exactly like the ring
       fast path lp_speed gates on;
-  (b) page accounting balances at every step (allocated - freed == live,
-      checked inside engine.step) and drains to zero;
+  (b) page accounting balances at every step (allocated - freed ==
+      live_unique, checked inside engine.step) and drains to the radix
+      tree's residents (zero with the tree disabled);
   (c) >= 8 concurrent, staggered requests come out bit-identical to
       one-shot generate().
+``--structural --shared-prefix`` adds the prefix/preemption gates:
+  (d) prefix hit rate > 0 and >= 30% of prompt tokens served from cache
+      instead of prefill on the family workload, with the SAME launch
+      counts (sharing adds zero kernel launches);
+  (e) every prefix-hit request bit-identical to one-shot generate();
+  (f) a preempted-then-resumed request bit-identical to its uninterrupted
+      run (the engine also self-checks every replayed token).
 """
 from __future__ import annotations
 
@@ -49,6 +64,13 @@ N_PAGES = 1 + N_SLOTS * (MAX_LEN // PAGE_SIZE)   # full occupancy + garbage
 PROMPT_LENS = (8, 16, 24)
 MAX_NEW = 16
 
+# Shared-prefix workload geometry: families of equal-total-length prompts
+# sharing SHARED_LEN leading tokens (whole pages — the radix match unit).
+N_FAMILIES = 4
+FAMILY_MEMBERS = 4
+SHARED_LEN = 16
+TAIL_LEN = 8
+
 
 def _structure(n_pairs: int):
     cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=N_LAYERS)
@@ -77,9 +99,34 @@ def _workload(cfg, n_requests: int, rate: float, seed: int = 17):
     return reqs
 
 
+def _shared_prefix_workload(cfg, rate: float, seed: int = 17):
+    """Family traffic: each family shares SHARED_LEN prompt tokens; every
+    member has its own TAIL_LEN suffix (equal total length — the regime
+    where donor and consumer prefills have identical reduction shapes, so
+    sharing is bit-exact). Arrivals are Poisson over the member stream."""
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed + 1)
+    shared = [np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 1000 + f), (SHARED_LEN,), 0, cfg.vocab_size))
+        for f in range(N_FAMILIES)]
+    n = N_FAMILIES * FAMILY_MEMBERS
+    gaps = rng.exponential(1.0 / rate, n)
+    arrivals = np.floor(np.cumsum(gaps)).astype(int)
+    order = rng.permutation(n)
+    reqs = []
+    for i in range(n):
+        f = int(order[i]) % N_FAMILIES
+        tail = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (TAIL_LEN,), 0, cfg.vocab_size))
+        reqs.append((int(arrivals[i]), np.concatenate([shared[f], tail]),
+                     MAX_NEW))
+    return reqs
+
+
 def _drive(eng: PagedEngine, reqs):
-    """Run the arrival schedule to drain; returns per-request metrics."""
-    submit_t, finish_t, rids = {}, {}, []
+    """Run the arrival schedule to drain; returns per-request metrics
+    (latency + TTFT percentiles, throughput, occupancy)."""
+    submit_t, first_t, finish_t, rids = {}, {}, {}, []
     occupancy = []
     nxt = 0
     t0 = time.perf_counter()
@@ -94,20 +141,40 @@ def _drive(eng: PagedEngine, reqs):
         eng.step()
         occupancy.append(eng.occupancy)
         now = time.perf_counter()
+        for rid in rids:
+            if rid not in first_t and len(eng.request(rid).out) > 0:
+                first_t[rid] = now
         for rid in set(eng.results) - done_before:
             finish_t[rid] = now
     wall = time.perf_counter() - t0
     tokens = sum(len(eng.results[r]) for r in rids)
     lat = np.array([finish_t[r] - submit_t[r] for r in rids])
+    ttft = np.array([first_t[r] - submit_t[r] for r in rids])
     return {
         "wall_s": round(wall, 3),
         "tokens": int(tokens),
         "tok_per_s": round(tokens / wall, 1),
         "lat_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
         "lat_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
+        "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
+        "ttft_p99_ms": round(float(np.percentile(ttft, 99)) * 1e3, 1),
         "occ_mean": round(float(np.mean(occupancy)), 3),
         "occ_max": round(float(np.max(occupancy)), 3),
         "steps": eng.step_count,
+    }
+
+
+def _prefix_stats(eng: PagedEngine) -> dict:
+    c = eng.counters
+    served = c["hit_tokens"] + c["prefill_tokens"]
+    return {
+        "prefill_tokens": c["prefill_tokens"],
+        "hit_tokens": c["hit_tokens"],
+        "resume_hit_tokens": c["resume_hit_tokens"],
+        "replay_tokens": c["replay_tokens"],
+        "prefix_hits": c["prefix_hits"],
+        "hit_rate": round(c["hit_tokens"] / served, 3) if served else 0.0,
+        "preemptions": eng.sched.preemptions_total,
     }
 
 
@@ -155,7 +222,7 @@ def structural() -> dict:
         assert base["cache_writes"] - row["cache_writes"] == 2 * row["pairs"]
 
     # Accounting balance + bit-identity under staggered continuous batching.
-    # (engine.step checks allocated - freed == live at EVERY step.)
+    # (engine.step checks allocated - freed == live_unique at EVERY step.)
     cfg, ms, params = _build(3)
     psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
                            n_pages=N_PAGES, max_len=MAX_LEN,
@@ -177,38 +244,176 @@ def structural() -> dict:
     return {"rows": rows, "drive": m}
 
 
+def structural_shared_prefix(seed: int = 17) -> dict:
+    """Prefix-structural gate: hit rate, prefill-token reduction, zero
+    extra launches, refcount balance, and bit-identity of prefix-hit and
+    preempted-then-resumed requests."""
+    cfg, ms, params = _build(3)
+    sv = ServeConfig(max_len=MAX_LEN, temperature=0.0,
+                     cache_dtype=jnp.float32)
+
+    def one_shot(prompt, n_new):
+        return np.asarray(generate(params, jnp.asarray(prompt)[None], n_new,
+                                   ms=ms, pc=PC, sv=sv)[0])
+
+    # (d) launches: prefix sharing changes ONLY admission — the decode
+    # program is byte-for-byte the PR 2 program, so sharing may not add a
+    # single kernel launch or cache write.
+    launches, writes = _launch_and_write_counts(ms, N_SLOTS)
+    groups = N_LAYERS - 3
+    assert launches == groups and writes == 2 * groups, (launches, writes)
+
+    psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                           n_pages=N_PAGES, max_len=MAX_LEN,
+                           cache_dtype=jnp.float32, prefix_cache=True,
+                           preempt_after=4)
+    eng = PagedEngine(params, ms, psv)
+    reqs = _shared_prefix_workload(cfg, rate=1.0, seed=seed)
+    m = _drive(eng, reqs)
+    stats = _prefix_stats(eng)
+    # (d) hit rate / prefill-token reduction: >= 30% of prompt tokens must
+    # come from the radix cache instead of the prefill forward.
+    assert stats["prefix_hits"] > 0, stats
+    assert stats["hit_rate"] >= 0.30, stats
+    # (b) refcount balance held at every step (engine.step); at drain the
+    # only live pages are the tree's residents.
+    assert eng.pool.live == eng.prefix.resident_pages
+    eng.pool.check_balance()
+    # (e) every request (hit or cold) bit-identical to one-shot.
+    for rid, (_, prompt, max_new) in zip(sorted(eng.results), reqs):
+        assert (eng.results[rid] == one_shot(prompt, max_new)).all(), rid
+
+    # (f) preemption: a pool sized for two page-hungry requests forces the
+    # third to preempt the youngest; resumed output must be bit-identical
+    # (the engine also asserts each replayed token internally).
+    psv_p = PagedServeConfig(n_slots=4, page_size=PAGE_SIZE, n_pages=9,
+                             max_len=32, cache_dtype=jnp.float32,
+                             prefix_cache=True, preempt_after=2)
+    eng_p = PagedEngine(params, ms, psv_p)
+    key = jax.random.PRNGKey(seed)
+    pr = [np.asarray(jax.random.randint(jax.random.fold_in(key, 70 + i),
+                                        (8,), 0, cfg.vocab_size))
+          for i in range(3)]
+    rids = [eng_p.add_request(pr[0], 20), eng_p.add_request(pr[1], 20)]
+    for _ in range(4):
+        eng_p.step()
+    rids.append(eng_p.add_request(pr[2], 4))
+    eng_p.drain()
+    assert eng_p.sched.preemptions_total >= 1
+    assert eng_p.counters["replay_tokens"] > 0
+    for rid, (p, n) in zip(rids, [(pr[0], 20), (pr[1], 20), (pr[2], 4)]):
+        assert (eng_p.results[rid] == one_shot(p, n)).all(), rid
+    out = {"drive": m, "prefix": stats,
+           "preemptions": eng_p.sched.preemptions_total,
+           "replay_tokens": eng_p.counters["replay_tokens"]}
+    print(f"prefix-structural OK: hit_rate={stats['hit_rate']} "
+          f"hits={stats['prefix_hits']} "
+          f"prefill={stats['prefill_tokens']} saved={stats['hit_tokens']} | "
+          f"preemptions={out['preemptions']} "
+          f"replay={out['replay_tokens']} — all bit-identical")
+    return out
+
+
 # ---------------------------------------------------------------------------
-# Wall-clock serving run
+# Wall-clock serving runs
 # ---------------------------------------------------------------------------
 
+def _reset_after_warm(eng: PagedEngine):
+    """Zero everything the measured run reports (results, clock, engine
+    counters, preemption count) so warmup activity never leaks into it."""
+    eng.results.clear()
+    eng.step_count = 0
+    eng.sched.preemptions_total = 0
+    for k in eng.counters:
+        eng.counters[k] = 0
+
+
+def _warm(eng: PagedEngine, lens):
+    """Warm THIS engine's compiled programs (jit caches are per engine) so
+    wall time measures serving, not XLA; then reset the clock/results."""
+    for L in lens:
+        eng.add_request(np.zeros(L, np.int32), 2)
+    eng.drain()
+    _reset_after_warm(eng)
+
+
+def _warm_shared(eng: PagedEngine, cfg, seed: int):
+    """Family-shaped warmup with THROWAWAY tokens: compiles the full-prompt
+    program AND the suffix-prefill program shape the real families will use
+    (donor first, then a member that radix-hits), without touching the real
+    families' tree entries."""
+    key = jax.random.PRNGKey(seed + 999)
+    shared = np.asarray(jax.random.randint(
+        jax.random.fold_in(key, 0), (SHARED_LEN,), 0, cfg.vocab_size))
+    for i in (1, 2):
+        tail = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, i), (TAIL_LEN,), 0, cfg.vocab_size))
+        eng.add_request(np.concatenate([shared, tail]), 2)
+        eng.drain()
+    if eng.prefix is not None:
+        # Drop the throwaway donations: leaving them resident would start
+        # the measured run short of allocatable pages — a handicap the
+        # cache-off engine does not pay.
+        eng.prefix.evict(eng.prefix.resident_pages, eng.pool)
+        eng.pool.check_balance()
+    _reset_after_warm(eng)
+
+
 def run(structural_only: bool = False, *, n_requests: int = 32,
-        rate: float = 2.0):
+        rate: float = 2.0, shared_prefix: bool = False, seed: int = 17,
+        preempt_after: int = 0, pages: int = 0):
+    n_pages = pages if pages > 0 else N_PAGES
     if structural_only:
-        res = structural()
+        # --structural and --structural --shared-prefix are SEPARATE CI
+        # steps; the prefix run gates only the prefix/preemption half so
+        # the job does not pay the base gate twice.
+        res = (structural_shared_prefix(seed) if shared_prefix
+               else structural())
         C.save_result("serve_throughput", {"structural": res})
         return res
+    if shared_prefix:
+        out = {}
+        cfg, ms, params = _build(3)
+        for label, on in (("cache_off", False), ("cache_on", True)):
+            psv = PagedServeConfig(
+                n_slots=N_SLOTS, page_size=PAGE_SIZE, n_pages=n_pages,
+                max_len=MAX_LEN, cache_dtype=jnp.float32, prefix_cache=on,
+                preempt_after=preempt_after)
+            eng = PagedEngine(params, ms, psv)
+            _warm_shared(eng, cfg, seed)
+            m = _drive(eng, _shared_prefix_workload(cfg, rate, seed))
+            m.update(_prefix_stats(eng))
+            out[label] = m
+            print(f"{label:10s} tok/s={m['tok_per_s']:8.1f} "
+                  f"ttft_p50={m['ttft_p50_ms']:6.1f}ms "
+                  f"ttft_p99={m['ttft_p99_ms']:7.1f}ms "
+                  f"hit_rate={m['hit_rate']:.2f} "
+                  f"prefill={m['prefill_tokens']} saved={m['hit_tokens']}")
+        out["prefix_speedup"] = round(out["cache_on"]["tok_per_s"]
+                                      / out["cache_off"]["tok_per_s"], 3)
+        print(f"prefix-cache serving speedup: {out['prefix_speedup']}x")
+        C.save_result("serve_throughput", {"shared_prefix": out})
+        return out
     out = {}
     for label, n_pairs in (("vanilla", 0), ("lp", 3)):
         cfg, ms, params = _build(n_pairs)
         psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
-                               n_pages=N_PAGES, max_len=MAX_LEN,
-                               cache_dtype=jnp.float32)
+                               n_pages=n_pages, max_len=MAX_LEN,
+                               cache_dtype=jnp.float32,
+                               preempt_after=preempt_after)
         eng = PagedEngine(params, ms, psv)
-        reqs = _workload(cfg, n_requests, rate)
-        # Warm THIS engine's compiled programs (jit caches are per engine)
-        # so wall time measures serving, not XLA; then reset the clock.
-        for L in PROMPT_LENS:
-            eng.add_request(np.zeros(L, np.int32), 2)
-        eng.drain()
-        eng.results.clear()
-        eng.step_count = 0
+        reqs = _workload(cfg, n_requests, rate, seed)
+        _warm(eng, PROMPT_LENS)
         m = _drive(eng, reqs)
         m["eff_depth"] = ms.effective_depth
+        m["preemptions"] = eng.sched.preemptions_total
+        m["replay_tokens"] = eng.counters["replay_tokens"]
         out[label] = m
         print(f"{label:8s} depth={m['eff_depth']:2d} "
               f"tok/s={m['tok_per_s']:8.1f} p50={m['lat_p50_ms']:7.1f}ms "
-              f"p99={m['lat_p99_ms']:7.1f}ms occ={m['occ_mean']:.2f}"
-              f"/{m['occ_max']:.2f} steps={m['steps']}")
+              f"p99={m['lat_p99_ms']:7.1f}ms ttft50={m['ttft_p50_ms']:6.1f}ms "
+              f"occ={m['occ_mean']:.2f}/{m['occ_max']:.2f} steps={m['steps']} "
+              f"preempt={m['preemptions']}")
     out["lp_speedup"] = round(out["lp"]["tok_per_s"]
                               / out["vanilla"]["tok_per_s"], 3)
     print(f"LP-on vs LP-off serving throughput: {out['lp_speedup']}x")
@@ -223,9 +428,22 @@ if __name__ == "__main__":
                     help="skip wall-clock; assert launch/write counts, page "
                          "accounting balance, and one-shot bit-identity "
                          "(CI gate)")
+    ap.add_argument("--shared-prefix", action="store_true",
+                    help="family traffic with shared system prompts; with "
+                         "--structural also gates hit-rate, prefill-token "
+                         "reduction, and preempt-resume bit-identity")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=2.0,
                     help="Poisson arrival rate, requests per engine step")
+    ap.add_argument("--seed", type=int, default=17,
+                    help="seed for the Poisson arrivals and prompt tokens")
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="blocked-head steps before preemption (0 = off)")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="pool size incl. garbage page (0 = full occupancy "
+                         f"default {N_PAGES}); small pools force queueing "
+                         "and, with --preempt-after, preemption")
     args = ap.parse_args()
     run(structural_only=args.structural, n_requests=args.requests,
-        rate=args.rate)
+        rate=args.rate, shared_prefix=args.shared_prefix, seed=args.seed,
+        preempt_after=args.preempt_after, pages=args.pages)

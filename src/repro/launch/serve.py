@@ -46,6 +46,16 @@ def main() -> None:
                     help="(--continuous) number of synthetic requests")
     ap.add_argument("--page-size", type=int, default=16,
                     help="(--continuous) tokens per cache page")
+    ap.add_argument("--prefill-token-budget", type=int, default=4096,
+                    help="(--continuous) max prefill tokens admitted per "
+                         "step after the first (prefill/decode interleave)")
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="(--continuous) blocked-head steps before the "
+                         "youngest running request is preempted (0 = off)")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="(--continuous) radix prefix sharing over whole "
+                         "cache pages (--no-prefix-cache disables)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,26 +73,40 @@ def main() -> None:
         psv = PagedServeConfig(
             n_slots=args.batch, page_size=ps,
             n_pages=1 + args.batch * (max_len // ps), max_len=max_len,
-            temperature=args.temperature)
+            temperature=args.temperature,
+            prefill_token_budget=args.prefill_token_budget,
+            prefix_cache=args.prefix_cache,
+            preempt_after=args.preempt_after)
         eng = PagedEngine(params, ms, psv)
         key = jax.random.PRNGKey(1)
-        lens = [max(4, args.prompt_len - 8 * (i % 3))
+        # A shared head (page-aligned) + per-request tails: realistic
+        # system-prompt traffic that exercises the radix cache when on.
+        shared_len = min(args.prompt_len // 2 // ps * ps, args.prompt_len)
+        shared = np.asarray(jax.random.randint(
+            jax.random.fold_in(key, 999), (shared_len,), 0, cfg.vocab_size))
+        lens = [max(4, args.prompt_len - shared_len - 8 * (i % 3))
                 for i in range(args.requests)]
         t0 = time.time()
         for i, L in enumerate(lens):
-            eng.add_request(np.asarray(jax.random.randint(
-                jax.random.fold_in(key, i), (L,), 0, cfg.vocab_size)),
-                args.new_tokens)
+            tail = np.asarray(jax.random.randint(
+                jax.random.fold_in(key, i), (L,), 0, cfg.vocab_size))
+            eng.add_request(np.concatenate([shared, tail]), args.new_tokens)
         res = eng.drain()
         run = time.time() - t0
         toks = sum(len(v) for v in res.values())
+        c = eng.counters
         print(f"arch={cfg.name} eff_depth={ms.effective_depth}/{cfg.n_layers} "
               f"continuous: {args.requests} reqs x {args.new_tokens} new, "
-              f"slots={psv.n_slots} pages={psv.n_pages - 1}x{ps}")
+              f"slots={psv.n_slots} pages={psv.n_pages - 1}x{ps} "
+              f"prefix_cache={'on' if eng.prefix is not None else 'off'} "
+              f"preempt_after={args.preempt_after}")
         print(f"run={run:.3f}s throughput={toks / run:.1f} tok/s "
               f"steps={eng.step_count} "
               f"pages alloc/freed={eng.pool.allocated_total}"
-              f"/{eng.pool.freed_total}")
+              f"/{eng.pool.freed_total} "
+              f"prefill_toks={c['prefill_tokens']} "
+              f"hit_toks={c['hit_tokens']} "
+              f"preemptions={eng.sched.preemptions_total}")
         print("sample:", res[0][:16].tolist())
         return
     sv = ServeConfig(max_len=args.prompt_len + args.new_tokens + 8,

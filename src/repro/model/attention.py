@@ -617,8 +617,15 @@ def output_proj(p, o, dims: AttnDims, *, pair: bool):
     """o: [B,S,P*hq,hd] -> partial [B,S,D] (caller runs phase_out)."""
     B, S = o.shape[0], o.shape[1]
     if pair:
-        o2 = o.reshape(B, S, 2, dims.hq * dims.hd).transpose(2, 0, 1, 3)
-        y = jnp.einsum("pbsc,pcd->bsd", o2, p["wo"].astype(o.dtype))
+        # Pair output projection as two per-path gemms + one explicit add.
+        # The einsum form ("pbsc,pcd->bsd") contracts (p, c) jointly and
+        # XLA's split of that reduction can depend on the sequence length,
+        # which breaks the suffix-prefill bit-identity contract
+        # (repro.serve). Per-path-then-add pins the grouping; the psum
+        # after this is still the pair's one attention-phase sync.
+        o2 = o.reshape(B, S, 2, dims.hq * dims.hd)
+        wo = p["wo"].astype(o.dtype)
+        y = o2[:, :, 0] @ wo[0] + o2[:, :, 1] @ wo[1]
     else:
         y = o.reshape(B, S, dims.hq * dims.hd) @ p["wo"].astype(o.dtype)
     if p.get("bo") is not None:

@@ -122,12 +122,23 @@ def pair_cache_stacked(group: Group) -> bool:
 
 
 def attention_phase_full(gp, xn, cfg, dims, pc, *, group: Group, positions,
-                         prefix_len=0, cross_kv=None, attn_impl="auto"):
+                         prefix_len=0, cross_kv=None, attn_impl="auto",
+                         ctx_kv=None, q0=0):
     """Full-sequence attention (train/prefill). Returns (partial_out, kv_list)
     with one (k, v) in stored layout per layer in the group.
 
     ``cross_kv`` (whisper decoder): precomputed encoder k/v in FOLDED layout
     [B,T,P*hkv,hd]; q comes from xn, keys are never roped (attn_bidir).
+
+    ``ctx_kv`` (suffix prefill — repro.serve prefix sharing): this group's
+    cached CONTEXT keys/values for absolute positions [0, q0), in stored
+    layout ({"k"/"v"}: [2,B,Tc,hkv,hd] stacked pair, {"k0"/"v0"}:
+    [B,Tc,hkv,hd] single layer; keys already roped when cached). They are
+    prepended to the suffix's freshly projected kv so every suffix row
+    reduces over exactly ``q0 + S`` keys — the same reduction shape the
+    full-prompt forward gives that row, which is what keeps a prefix-hit
+    prefill BIT-IDENTICAL to the cold one. ``q0`` is the absolute position
+    of the first query row (0 for a full forward).
     """
     kinds = _mixer_kinds(group)
     cross = cross_kv is not None
@@ -148,13 +159,26 @@ def attention_phase_full(gp, xn, cfg, dims, pc, *, group: Group, positions,
             k, v = A.project_kv(p, xn, cfg, dims, positions=positions,
                                 kind=kind, pair=group.pair)
         ks, vs = _sel_pairwise(k, v, dims, pc, pair=group.pair)
+        if ctx_kv is not None:
+            cks, cvs = _fold_ctx_kv(ctx_kv, dims, pc, group=group)
+            ks = jnp.concatenate([cks.astype(ks.dtype), ks], axis=1)
+            vs = jnp.concatenate([cvs.astype(vs.dtype), vs], axis=1)
+            # Materialise the concatenated kv: otherwise XLA splits the
+            # value contraction through the concat (p@[v_ctx;v_sfx] ->
+            # p1@v_ctx + p2@v_sfx), regrouping the float accumulation and
+            # breaking bit-identity with the cold full-prompt forward.
+            ks, vs = lax.optimization_barrier((ks, vs))
         qh = q.reshape(B, S, nP * Hk, g, dims.hd)
         o = A.attention_core(qh, ks, vs, kind=kind, window=cfg.window,
-                             chunk=cfg.chunk, prefix_len=prefix_len, impl=attn_impl)
+                             chunk=cfg.chunk, prefix_len=prefix_len,
+                             q0=q0, impl=attn_impl)
         o = o.reshape(B, S, nP * dims.hq, dims.hd)
         out = A.output_proj(p, o, dims, pair=group.pair)
         return out, _split_kv(k, v, dims, pair=group.pair)
 
+    if ctx_kv is not None:
+        raise NotImplementedError(
+            "suffix prefill supports homogeneous attention groups only")
     # Heterogeneous pair kinds (llama4 chunked+global): per-half cores, still
     # merged output projection + ONE phase_out.
     os, kvs = [], []
@@ -192,6 +216,26 @@ def _sel_pairwise(k, v, dims, pc, *, pair: bool):
             v2 = lax.dynamic_slice_in_dim(v2, kv_idx, 1, axis=3)
     ks = k2.reshape(B, S, 2 * k2.shape[3], dims.hd)
     vs = v2.reshape(B, S, 2 * v2.shape[3], dims.hd)
+    return ks, vs
+
+
+def _fold_ctx_kv(ctx_kv, dims, pc, *, group: Group):
+    """Cached context kv (stored layout) -> the folded [B,Tc,P*Hk,hd] layout
+    ``_sel_pairwise`` produces for fresh projections, so a suffix forward can
+    concatenate context before suffix keys along the length axis. Keys in the
+    cache are already roped; the pair fold is pair-major, matching
+    ``_sel_pairwise``'s [B,S,2,hkv,...] reshape."""
+    if pair_cache_stacked(group):
+        ck, cv = ctx_kv["k"], ctx_kv["v"]              # [2,B,Tc,hkv,hd]
+        ks = A.select_local_kv_pair(ck, dims, pc)
+        vs = A.select_local_kv_pair(cv, dims, pc)
+        B, Tc, Hk = ks.shape[1], ks.shape[2], ks.shape[3]
+        ks = jnp.moveaxis(ks, 0, 2).reshape(B, Tc, 2 * Hk, dims.hd)
+        vs = jnp.moveaxis(vs, 0, 2).reshape(B, Tc, 2 * Hk, dims.hd)
+        return ks, vs
+    assert not group.pair, "heterogeneous pairs have no stored ctx layout"
+    ks = A.select_local_kv(ctx_kv["k0"], dims, pc)     # [B,Tc,hkv,hd]
+    vs = A.select_local_kv(ctx_kv["v0"], dims, pc)
     return ks, vs
 
 
@@ -320,10 +364,16 @@ def group_cache_meta(cfg, group: Group, dims, *, batch: int, max_len: int,
 def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
                      positions, prefix_len=0, enc_out=None, attn_impl="auto",
                      emit_cache=False, max_len=0, kv_mode="heads",
-                     scan_impl="chunked"):
+                     scan_impl="chunked", ctx_kv=None, q0=0):
     """One group over the full sequence.
 
     x: [B,S_local,D] (S_local = S/tp under SP). Returns (x, aux, cache_dict).
+
+    ``ctx_kv``/``q0`` (suffix prefill): cached kv for positions [0, q0) in
+    stored layout; the sequence being processed starts at absolute position
+    ``q0``. Attention-only (recurrent state cannot resume from kv), and the
+    emitted cache covers ONLY the suffix (length ``max_len``, local position
+    0 == absolute ``q0``) — the caller owns placing it after the context.
     """
     aux = jnp.float32(0.0)
     cache: Dict[str, Any] = {}
@@ -338,11 +388,16 @@ def apply_group_full(gp, x, *, cfg, group: Group, dims, pc: ParallelContext,
     # (EXPERIMENTS.md §Perf iteration 2).
     xg = pc.phase_in(x)
     xn = _norm_inputs(gp, "ln1", xg, cfg, group)
+    if ctx_kv is not None and not mixer.startswith("attn"):
+        raise NotImplementedError(
+            "suffix prefill requires attention mixers (recurrent state "
+            "cannot resume from cached kv)")
     if mixer.startswith("attn"):
         out, kvs = attention_phase_full(gp, xn, cfg, dims, pc, group=group,
                                         positions=positions,
                                         prefix_len=prefix_len,
-                                        attn_impl=attn_impl)
+                                        attn_impl=attn_impl,
+                                        ctx_kv=ctx_kv, q0=q0)
         if emit_cache:
             fks, fvs = [], []
             for i, (k, v) in enumerate(kvs):

@@ -42,7 +42,17 @@ def mlp_forward(p, xn, cfg, tp: int, *, pair: bool):
             h = act(gate.astype(jnp.float32)).astype(up.dtype) * up
         else:
             h = act(up.astype(jnp.float32)).astype(up.dtype)
-        y = jnp.einsum("pbsf,pfd->bsd", h, p["w_down"].astype(h.dtype))
+        # Down projection as two per-path gemms + one explicit add. The
+        # einsum form ("pbsf,pfd->bsd") contracts (p, f) jointly and XLA's
+        # split of that 2F-long reduction depends on the sequence length,
+        # which breaks the suffix-prefill bit-identity contract
+        # (repro.serve): a suffix row must reduce in exactly the grouping
+        # the full-prompt forward used. Pinning the grouping to
+        # per-path-then-add keeps each contraction at F (sequence-length-
+        # invariant on CPU up to F ~ 512) without adding a sync — the psum
+        # after this is still the phase's one reduction.
+        wd = p["w_down"].astype(h.dtype)
+        y = h[0] @ wd[0] + h[1] @ wd[1]
     else:
         up = xn @ p["w_up"].astype(xn.dtype)
         if p.get("b_up") is not None:

@@ -102,7 +102,8 @@ def stack_template(cfg, segments: Sequence[Segment], tp: int):
 def apply_stack_full(seg_params, x, segments, *, cfg, dims, pc, positions,
                      prefix_len=0, enc_out=None, attn_impl="auto",
                      emit_cache=False, max_len=0, kv_mode="heads",
-                     remat=False, scan_impl="chunked", gather_fns=None):
+                     remat=False, scan_impl="chunked", gather_fns=None,
+                     ctx=None, q0=0):
     """Run all segments over the full sequence.
 
     ``gather_fns`` (FSDP): one fn per segment mapping the scan-sliced flat
@@ -110,30 +111,49 @@ def apply_stack_full(seg_params, x, segments, *, cfg, dims, pc, positions,
     is the ZeRO-3 gradient reduce_scatter. Under remat the backward pass
     re-gathers instead of saving the full weights.
 
+    ``ctx``/``q0`` (suffix prefill): cached context kv for absolute
+    positions [0, q0) — one count-stacked tree per segment, same structure
+    as the emitted caches but with the length axis trimmed to the context.
+    The trees ride each segment's scan as xs alongside the params, so every
+    group attends over its OWN layer's context.
+
     Returns (x, aux, caches) where caches is a list (one stacked tree per
     segment) when emit_cache else None.
     """
     caches = [] if emit_cache else None
     aux = jnp.float32(0.0)
     gather_fns = gather_fns or [None] * len(segments)
-    for sp, seg, gather in zip(seg_params, segments, gather_fns):
-        def body(x, gp, _seg=seg, _gather=gather):
+    ctx = ctx if ctx is not None else [None] * len(segments)
+    for sp, seg, gather, ctx_seg in zip(seg_params, segments, gather_fns, ctx):
+        def body(x, gp, ctx_g=None, _seg=seg, _gather=gather):
             if _gather is not None:
                 gp = _gather(gp)
             return B.apply_group_full(
                 gp, x, cfg=cfg, group=_seg.group, dims=dims, pc=pc,
                 positions=positions, prefix_len=prefix_len, enc_out=enc_out,
                 attn_impl=attn_impl, emit_cache=emit_cache, max_len=max_len,
-                kv_mode=kv_mode, scan_impl=scan_impl)
+                kv_mode=kv_mode, scan_impl=scan_impl, ctx_kv=ctx_g, q0=q0)
 
         if remat:
             body = jax.checkpoint(body)
         if seg.count == 1:
             sp1 = jax.tree.map(lambda v: v[0], sp) if gather is not None else sp
-            x, a, c = body(x, sp1)
+            ctx1 = (jax.tree.map(lambda v: v[0], ctx_seg)
+                    if ctx_seg is not None else None)
+            x, a, c = body(x, sp1, ctx1)
             aux = aux + a
             if emit_cache:
                 caches.append(jax.tree.map(lambda v: v[None], c))
+        elif ctx_seg is not None:
+            def scan_body_ctx(carry, gp_ctx):
+                x, aux = carry
+                x, a, c = body(x, gp_ctx[0], gp_ctx[1])
+                return (x, aux + a), c
+
+            (x, aux), cs = lax.scan(scan_body_ctx, (x, aux), (sp, ctx_seg),
+                                    unroll=seg.count if _SCAN_UNROLL else 1)
+            if emit_cache:
+                caches.append(cs)
         else:
             def scan_body(carry, gp):
                 x, aux = carry

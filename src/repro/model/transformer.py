@@ -210,17 +210,30 @@ def _encoder(params, frames, ms: ModelStructure, pc: ParallelContext,
 def forward_full(params, tokens, *, ms: ModelStructure, pc: ParallelContext,
                  prefix_embed=None, enc_frames=None, emit_cache=False,
                  max_len=0, kv_mode="heads", remat=False, attn_impl="auto",
-                 scan_impl="chunked", cache_dtype=jnp.bfloat16):
+                 scan_impl="chunked", cache_dtype=jnp.bfloat16,
+                 ctx_kv=None, start=0):
     """tokens: [B, S_text] -> (local_logits [B, S_total, V/tp], aux, caches).
 
     prefix_embed (vlm): [B, P, D] patch embeddings prepended to the stream.
     enc_frames (encdec): [B, T, D] frame embeddings for the encoder.
+
+    ctx_kv/start (suffix prefill — repro.serve prefix sharing): process
+    ``tokens`` as the SUFFIX of a stream whose first ``start`` positions
+    have cached kv in ``ctx_kv`` (one count-stacked tree per segment, the
+    layer layout of the emitted caches). Every suffix row attends over
+    exactly ``start + S`` keys — the reduction shape the full-prompt
+    forward gives the same row, which keeps suffix prefill bit-identical
+    to cold prefill. Attention-only; the emitted cache covers only the
+    suffix (length ``max_len``, local 0 == absolute ``start``).
     """
     cfg = ms.cfg
     Bt, S_text = tokens.shape
     prefix_len = cfg.prefix_len if prefix_embed is not None else 0
+    if ctx_kv is not None:
+        assert prefix_len == 0 and enc_frames is None, \
+            "suffix prefill does not compose with prefix-LM/encoder inputs"
     S = S_text + prefix_len
-    positions = jnp.arange(S)[None, :]
+    positions = start + jnp.arange(S)[None, :]
 
     x = _embed(params, tokens, cfg, pc,
                positions=positions[:, prefix_len:])
@@ -238,7 +251,7 @@ def forward_full(params, tokens, *, ms: ModelStructure, pc: ParallelContext,
         positions=positions, prefix_len=prefix_len, enc_out=enc_out,
         attn_impl=attn_impl, emit_cache=emit_cache,
         max_len=max_len or S, kv_mode=kv_mode, remat=remat,
-        scan_impl=scan_impl, gather_fns=gather_fns)
+        scan_impl=scan_impl, gather_fns=gather_fns, ctx=ctx_kv, q0=start)
     x = pc.phase_in(x)  # SP: re-gather the sequence before the LM head
     logits = _head(params, x, cfg, pc)
     return logits, aux, caches

@@ -9,6 +9,10 @@ from repro.serve.engine import (  # noqa: F401
     make_sharded_prefill,
     make_sharded_serve_step,
 )
+from repro.serve.prefix_cache import (  # noqa: F401
+    PrefixCache,
+    RadixNode,
+)
 from repro.serve.scheduler import (  # noqa: F401
     PagePool,
     Request,

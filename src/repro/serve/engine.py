@@ -25,6 +25,18 @@ is what makes engine outputs bit-identical to one-shot ``generate()`` —
 padding would change reduction shapes and perturb low bits. Admission is
 FCFS with a prefill token budget (repro.serve.scheduler) so prefill bursts
 interleave with, rather than starve, running decodes.
+
+Prefix sharing & preemption (PagedServeConfig.prefix_cache/preempt_after):
+admission radix-matches the prompt against donated whole pages
+(repro.serve.prefix_cache) — matched pages link read-only into the block
+table (copy-on-write: the first written page is always private) and only
+the unmatched suffix runs through ``_suffix_fn``, a forward over the
+suffix with the matched pages gathered as context kv whose rows reduce at
+the cold program's exact shapes. A blocked queue head preempts the
+youngest running request: its tokens park on the Request, its whole
+written pages are donated (reclaimable, radix-hittable at resume), and
+resume replays the parked positions through the regular decode program —
+the engine asserts every replayed token reproduces the parked one.
 """
 from __future__ import annotations
 
@@ -43,6 +55,7 @@ from repro.model import embedding as E
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext, make_context
 from repro.serve import paged_cache as PG
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import PagePool, Request, Scheduler
 
 PyTree = Any
@@ -133,6 +146,19 @@ class PagedServeConfig:
     equal reduction shapes are part of the bit-identity contract.
     ``n_pages`` INCLUDES the reserved garbage page 0, so the allocatable
     capacity is ``n_pages - 1`` pages.
+
+    prefix_cache: radix prefix sharing over whole pages — matched prompt
+    pages are linked read-only into the block table and only the unmatched
+    suffix is prefilled. Attention-only models (the engine silently
+    disables it for mixers with recurrent state). Greedy prefix-hit
+    outputs are bit-identical to a cold run when the pool holds fp32 and
+    the donor computed the shared pages at compatible shapes (whole-page
+    chunks are length-invariant by the suffix-prefill contract; see
+    EXPERIMENTS.md).
+    preempt_after: > 0 enables preemption — after that many consecutive
+    steps with a blocked queue head, the youngest running request is
+    parked (pages donated/released, tokens kept) and later resumed via
+    radix re-link + bit-exact decode replay. 0 keeps PR 2's strict FCFS.
     """
     n_slots: int = 8              # concurrent decode slots (fixed batch)
     page_size: int = 16           # tokens per cache page
@@ -142,6 +168,8 @@ class PagedServeConfig:
     temperature: float = 0.0      # 0 -> greedy (bit-identical to generate())
     cache_dtype: Any = jnp.bfloat16
     eos_token: int = -1           # -1: run every request to max_new
+    prefix_cache: bool = False    # radix prefix sharing (CoW pages)
+    preempt_after: int = 0        # blocked-head steps before preemption
 
     @property
     def pages_per_slot(self) -> int:
@@ -173,10 +201,14 @@ class PagedEngine:
         self.psv = psv
         self.pc = pc if pc is not None else ParallelContext()
         self.pool = PagePool(psv.n_pages)
+        self.prefix = (PrefixCache(psv.page_size)
+                       if psv.prefix_cache and self._prefix_eligible(ms)
+                       else None)
         self.sched = Scheduler(
             n_slots=psv.n_slots, pool=self.pool, page_size=psv.page_size,
             max_len=psv.max_len,
-            prefill_token_budget=psv.prefill_token_budget)
+            prefill_token_budget=psv.prefill_token_budget,
+            prefix_cache=self.prefix, preempt_after=psv.preempt_after)
         self.caches = PG.init_paged_caches(
             ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
             page_size=psv.page_size, dtype=psv.cache_dtype)
@@ -190,7 +222,25 @@ class PagedEngine:
         self.results: Dict[int, np.ndarray] = {}
         self._requests: Dict[int, Request] = {}
         self._decode = self._make_decode()
-        self._prefills: Dict[int, Any] = {}   # prompt_len -> jitted prefill
+        self._prefills: Dict[Any, Any] = {}   # program-shape key -> jit fn
+        # Greedy + fp32 pool => suffix/replay recomputation is bit-exact
+        # against the original run; the engine then self-checks the replay.
+        self._exact = (psv.temperature == 0.0
+                       and psv.cache_dtype == jnp.float32)
+        self.counters = {"prefill_tokens": 0, "hit_tokens": 0,
+                         "resume_hit_tokens": 0, "replay_tokens": 0,
+                         "full_prefills": 0, "suffix_prefills": 0,
+                         "prefix_hits": 0}
+
+    @staticmethod
+    def _prefix_eligible(ms: T.ModelStructure) -> bool:
+        """Prefix sharing resumes from cached kv alone: every mixer must be
+        attention (recurrent conv/h state has no page representation) and
+        the FFN a plain MLP (the MoE pair path has no pinned-order
+        projection; see model.mlp.mlp_forward)."""
+        return all(spec.mixer.startswith("attn") and not spec.cross_attn
+                   and spec.ffn in ("mlp", None)
+                   for seg in ms.segments for spec in seg.group.specs)
 
     # -- compiled programs ---------------------------------------------
     def _make_decode(self):
@@ -234,6 +284,40 @@ class PagedEngine:
 
         return jax.jit(f, donate_argnums=(1,))
 
+    def _suffix_fn(self, n_ctx_pages: int, suffix_len: int):
+        """Prefix-hit prefill: gather the matched pages as read-only
+        context kv, run the forward over ONLY the unmatched suffix, and
+        scatter the suffix pages. Compiled once per (context pages, suffix
+        length) shape. Every suffix row reduces over exactly
+        ``ctx + suffix`` keys — the cold full-prompt program's reduction
+        shape for the same row — so greedy outputs stay bit-identical to a
+        cold run (fp32 pool). Copy-on-write holds by construction: the
+        program writes only ``sfx_ids`` pages, never ``ctx_ids``.
+        """
+        ms, pc, psv = self.ms, self.pc, self.psv
+        ps = psv.page_size
+        start = n_ctx_pages * ps
+        n_sfx = -(-suffix_len // ps)
+        emit_len = n_sfx * ps
+
+        def f(params, caches, suffix, ctx_ids, sfx_ids, slot, key):
+            ctx = PG.gather_ctx(caches, ctx_ids)
+            logits, _, seq = T.forward_full(
+                params, suffix, ms=ms, pc=pc, emit_cache=True,
+                max_len=emit_len, kv_mode="heads", ctx_kv=ctx, start=start)
+            seq = jax.tree.map(
+                lambda c: c.astype(psv.cache_dtype)
+                if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
+            last = logits[:, suffix_len - 1]
+            if psv.temperature > 0:
+                tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
+            else:
+                tok0 = E.vocab_parallel_argmax(last, pc)
+            caches = PG.scatter_prefill(caches, seq, sfx_ids, slot)
+            return tok0.astype(jnp.int32), caches
+
+        return jax.jit(f, donate_argnums=(1,))
+
     # -- public API ----------------------------------------------------
     def add_request(self, prompt, max_new: int,
                     eos_token: Optional[int] = None) -> int:
@@ -254,23 +338,129 @@ class PagedEngine:
         self._requests[r.rid] = r
         return r.rid
 
-    def _prefill(self, r: Request) -> None:
-        fn = self._prefills.get(r.prompt_len)
-        if fn is None:
-            fn = self._prefills[r.prompt_len] = \
-                self._prefill_fn(r.prompt_len)
-        n_pg = -(-r.prompt_len // self.psv.page_size)
-        page_ids = jnp.asarray(r.pages[:n_pg], jnp.int32)
+    def _run_prefill(self, r: Request, ctx: int):
+        """Stage-1 forward over the unmatched prompt suffix (the full
+        prompt when ctx == 0). Returns the token sampled from the last
+        prompt position's logits."""
+        ps = self.psv.page_size
+        Lp = r.prompt_len
+        n_pg_prompt = -(-Lp // ps)
         self._key, sub = jax.random.split(self._key)
-        tok0, self.caches = fn(self.params, self.caches,
-                               jnp.asarray(r.prompt[None]), page_ids,
-                               jnp.int32(r.slot), sub)
-        r.out.append(int(tok0[0]))
+        if ctx == 0:
+            key = ("full", Lp)
+            fn = self._prefills.get(key)
+            if fn is None:
+                fn = self._prefills[key] = self._prefill_fn(Lp)
+            tok0, self.caches = fn(
+                self.params, self.caches, jnp.asarray(r.prompt[None]),
+                jnp.asarray(r.pages[:n_pg_prompt], jnp.int32),
+                jnp.int32(r.slot), sub)
+            self.counters["prefill_tokens"] += Lp
+            self.counters["full_prefills"] += 1
+        else:
+            m = ctx // ps
+            Ls = Lp - ctx
+            key = ("sfx", m, Ls)
+            fn = self._prefills.get(key)
+            if fn is None:
+                fn = self._prefills[key] = self._suffix_fn(m, Ls)
+            tok0, self.caches = fn(
+                self.params, self.caches, jnp.asarray(r.prompt[None, ctx:]),
+                jnp.asarray(r.pages[:m], jnp.int32),
+                jnp.asarray(r.pages[m:n_pg_prompt], jnp.int32),
+                jnp.int32(r.slot), sub)
+            self.counters["prefill_tokens"] += Ls
+            self.counters["suffix_prefills"] += 1
+        return int(tok0[0])
+
+    def _replay(self, r: Request, start: int) -> None:
+        """Resume catch-up: teacher-force the parked generated tokens whose
+        kv fell outside the surviving radix prefix through the REGULAR
+        decode program (all other slots masked to the garbage page, their
+        rows ignored). Position p re-runs the exact computation that
+        produced it originally — same program, same token, same kv bits —
+        so with greedy sampling the replayed prediction must reproduce the
+        parked token, which the engine asserts (the continuous form of the
+        preempt-resume bit-identity gate).
+
+        Recurrent state (mamba/rec conv/h) needs explicit protection: the
+        masked slots' ATTENTION writes land on the garbage page, but the
+        decode program advances EVERY slot's state each call — replay
+        would corrupt concurrently running requests. The engine snapshots
+        the state entries before replaying and restores every row except
+        the replaying slot's afterwards (their true timeline has no step
+        here)."""
+        n_slots = self.psv.n_slots
+        Lp = r.prompt_len
+        end = Lp + len(r.out) - 1      # exclusive; kv for end-1 is the
+        if start >= end:               # resumed decode step's own write
+            return
+        state_saved = [
+            {name: np.asarray(v) for name, v in seg.items()
+             if not PG.is_paged_entry(name)} for seg in self.caches]
+        for p in range(start, end):
+            tok_v = np.zeros((n_slots,), np.int32)
+            pos_v = np.zeros((n_slots,), np.int32)
+            bt = np.full_like(self.block_tables, PG.GARBAGE_PAGE)
+            tok_v[r.slot] = r.out[p - Lp]
+            pos_v[r.slot] = p
+            bt[r.slot] = self.block_tables[r.slot]
+            self._key, sub = jax.random.split(self._key)
+            nxt, self.caches = self._decode(
+                self.params, self.caches, jnp.asarray(tok_v),
+                jnp.asarray(pos_v), jnp.asarray(bt), sub)
+            if self._exact:
+                got = int(np.asarray(nxt)[r.slot])
+                assert got == r.out[p - Lp + 1], (
+                    f"replay divergence at pos {p}: {got} != "
+                    f"{r.out[p - Lp + 1]} (rid={r.rid})")
+            self.counters["replay_tokens"] += 1
+        for seg, saved in zip(self.caches, state_saved):
+            for name, host in saved.items():
+                sl = (slice(None),) * T.cache_batch_axis(name) + (r.slot,)
+                merged = host.copy()
+                merged[sl] = np.asarray(seg[name])[sl]
+                seg[name] = jnp.asarray(merged)
+
+    def _start(self, r: Request) -> None:
+        """Bring an admitted request onto its slot: link its block table,
+        run the stage-1 prefill (full / suffix / skipped when the radix hit
+        covers the whole prompt), and for resumed requests replay the
+        parked generated positions."""
+        ps = self.psv.page_size
+        ctx = r.n_shared * ps
+        Lp = r.prompt_len
+        resumed = bool(r.out)
         row = self.block_tables[r.slot]
         row[:] = PG.GARBAGE_PAGE
         row[:len(r.pages)] = r.pages
+        # hit_tokens counts PROMPT tokens served from shared pages on FRESH
+        # admissions only (a fresh match is prompt-only by the _match_cap);
+        # a preemption resume re-linking its own donation is real savings
+        # too but a different phenomenon — tracked under resume_hit_tokens
+        # so hit_rate stays "prompt prefill work avoided by sharing".
+        if resumed:
+            self.counters["resume_hit_tokens"] += ctx
+        else:
+            self.counters["hit_tokens"] += ctx
+            if ctx:
+                self.counters["prefix_hits"] += 1
+        if ctx < Lp:
+            tok0 = self._run_prefill(r, ctx)
+            if not resumed:
+                r.out.append(tok0)
+            elif self._exact:
+                # Same program + same inputs as the original prefill: the
+                # re-sampled first token must reproduce the parked one.
+                assert tok0 == r.out[0], (tok0, r.out[0], r.rid)
+        # Early donation: the prompt pages are complete now — concurrent
+        # same-prefix requests admitted from the NEXT step on can share
+        # them without waiting for this request to finish.
+        self.sched.donate_prefilled(r, self.step_count)
+        if resumed:
+            self._replay(r, max(Lp, ctx))
         self.tok[r.slot] = r.out[-1]
-        self.pos[r.slot] = r.pos          # == prompt_len
+        self.pos[r.slot] = r.pos
 
     def _finish(self, r: Request) -> None:
         slot = r.slot
@@ -280,17 +470,30 @@ class PagedEngine:
         self.pos[slot] = 0
         self.results[r.rid] = np.asarray(r.out, np.int32)
 
-    def step(self) -> Dict[str, int]:
-        """One engine iteration: admission+prefill, then one decode program
-        over every slot. Returns counters for the step."""
-        stats = {"admitted": 0, "decoded": 0, "finished": 0,
-                 "live_pages": 0}
-        for r in self.sched.admit(self.step_count):
-            self._prefill(r)
+    def _admit(self, stats: Dict[str, int], *, count_blocked: bool) -> None:
+        for r in self.sched.admit(self.step_count,
+                                  count_blocked=count_blocked):
+            self._start(r)
             stats["admitted"] += 1
             if r.done():      # max_new == 1 (or instant EOS) on prefill
                 self._finish(r)
                 stats["finished"] += 1
+
+    def step(self) -> Dict[str, int]:
+        """One engine iteration: admission+prefill (with blocked-head
+        preemption when enabled), then one decode program over every slot.
+        Returns counters for the step."""
+        stats = {"admitted": 0, "decoded": 0, "finished": 0,
+                 "preempted": 0, "live_pages": 0}
+        self._admit(stats, count_blocked=True)
+        if self.sched.should_preempt():
+            _victim, slot = self.sched.preempt_youngest(self.step_count)
+            self.block_tables[slot] = PG.GARBAGE_PAGE
+            self.tok[slot] = 0
+            self.pos[slot] = 0
+            stats["preempted"] += 1
+            # The freed pages/slot may unblock the head immediately.
+            self._admit(stats, count_blocked=False)
         if self.sched.n_running:
             self._key, sub = jax.random.split(self._key)
             nxt, self.caches = self._decode(
@@ -306,6 +509,8 @@ class PagedEngine:
                     self._finish(r)
                     stats["finished"] += 1
         self.pool.check_balance()
+        if self.prefix is not None:
+            self.prefix.check_locks()
         stats["live_pages"] = self.pool.live
         self.step_count += 1
         return stats

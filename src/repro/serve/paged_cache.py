@@ -126,6 +126,32 @@ def init_paged_caches(ms: T.ModelStructure, *, n_slots: int, n_pages: int,
     return jax.tree.map(lambda a: jnp.zeros(a.shape, a.dtype), abs_)
 
 
+def gather_ctx(pool: List[Dict], page_ids) -> List[Dict]:
+    """Gather a prefix's pages into per-segment CONTEXT kv trees for the
+    suffix prefill (``forward_full(ctx_kv=..., start=n_pg * page_size)``).
+
+    pool: the paged cache tree; page_ids: [n_pg] int32 pages covering the
+    matched prefix in position order. Returns one tree per segment with the
+    emitted-cache layer layout and a batch-1 length axis: stacked pair
+    entries [count, 2, 1, n_pg * ps, Hkv, hd], per-layer entries
+    [count, 1, n_pg * ps, Hkv, hd]. Slot-state entries (conv/h) have no kv
+    to resume from and are rejected upstream (prefix sharing is
+    attention-only).
+    """
+    out = []
+    for seg in pool:
+        nseg = {}
+        for name, pv in seg.items():
+            assert is_paged_entry(name), (
+                f"{name}: prefix sharing requires attention-only caches")
+            ba = T.cache_batch_axis(name)   # page axis of the pool entry
+            g = jnp.take(pv, page_ids, axis=ba)   # [.., n_pg, ps, H, hd]
+            g = g.reshape(*g.shape[:ba], -1, *g.shape[ba + 2:])
+            nseg[name] = jnp.expand_dims(g, ba)   # batch-1 at the B axis
+        out.append(nseg)
+    return out
+
+
 def scatter_prefill(pool: List[Dict], seq: List[Dict], page_ids, slot):
     """Place one request's prefill caches into its pages / state slot.
 

@@ -10,12 +10,31 @@ per step:
   finish()  — recycle a finished request's slot + pages
   n_running — is there anything to decode
 
-Pages come from ``PagePool``, a free-list allocator over the paged pair-KV
-cache (repro.serve.paged_cache). Page 0 is the reserved garbage page and is
-never handed out. The pool keeps monotone allocated/freed counters so the
-serving benchmark can assert the accounting balance
-``allocated - freed == live`` at every step (the invariant the
-``serve-structural`` CI job gates on).
+Pages come from ``PagePool``, a REFCOUNTED free-list allocator over the
+paged pair-KV cache (repro.serve.paged_cache). Page 0 is the reserved
+garbage page and is never handed out. Refcounts are what make prefix
+sharing possible: many slots' block tables (plus the radix tree) can hold
+the same page, and it only returns to the free list when the last holder
+releases it. The pool keeps monotone allocated/freed counters so the
+serving benchmark can assert the generalized accounting invariant
+``allocated - freed == live_unique`` at every step (the invariant the
+``serve-structural`` CI job gates on) — shares and partial releases move
+refcounts, not the counters.
+
+Prefix sharing (repro.serve.prefix_cache) hooks admission: the queue head's
+prompt is radix-matched against donated whole pages; matched pages are
+linked read-only (share + lock) and only the unmatched suffix needs fresh
+pages and prefill compute. Finished requests donate their full prompt pages
+back to the tree; under pool pressure admission evicts LRU unlocked leaves
+before giving up.
+
+Preemption removes head-of-line blocking: when the head has been blocked
+``preempt_after`` consecutive steps, the YOUNGEST running request is
+preempted — its generated tokens are parked on the request, its whole
+written pages are donated to the tree (so they are reclaimable by the head
+but radix-hittable at resume), everything else is released, and it is
+re-queued directly BEHIND the blocked head (re-queueing it at position 0
+would let it re-steal the pages the preemption just freed).
 """
 from __future__ import annotations
 
@@ -26,20 +45,31 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.serve.paged_cache import GARBAGE_PAGE, pages_needed
+from repro.serve.prefix_cache import PrefixCache, RadixNode
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 
 
 class PagePool:
-    """Free-list page allocator with monotone accounting counters."""
+    """Refcounted free-list page allocator with monotone accounting.
+
+    ``alloc`` hands out pages at refcount 1; ``share`` adds a reference to
+    an already-live page (prefix sharing / tree residency transfer);
+    ``free`` drops one reference per page and only a 1 -> 0 transition
+    returns the page to the free list and counts as freed. Releasing a
+    shared page twice therefore only recycles it once the LAST holder lets
+    go — the double-free safety the property tests pin down.
+    """
 
     def __init__(self, n_pages: int):
         assert n_pages >= 2, "need at least one allocatable page + garbage"
         self.n_pages = n_pages
         # LIFO free list; page 0 (GARBAGE_PAGE) is reserved, never listed.
         self._free: List[int] = list(range(n_pages - 1, GARBAGE_PAGE, -1))
-        self.allocated_total = 0
-        self.freed_total = 0
+        self._ref = np.zeros(n_pages, np.int32)
+        self.allocated_total = 0     # fresh allocations (0 -> 1)
+        self.freed_total = 0         # true frees (1 -> 0)
+        self.shared_total = 0        # extra references taken over lifetime
 
     @property
     def n_free(self) -> int:
@@ -47,32 +77,66 @@ class PagePool:
 
     @property
     def live(self) -> int:
-        """Pages currently held by running requests."""
+        """UNIQUE pages currently held (by requests and/or the tree) —
+        shared pages count once, whatever their refcount."""
         return (self.n_pages - 1) - len(self._free)
 
+    # Alias making call sites that care about the invariant read naturally.
+    live_unique = live
+
+    def refcount(self, page: int) -> int:
+        return int(self._ref[page])
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n pages, or None if the pool cannot satisfy the request (the
-        caller keeps the request QUEUED — exhaustion queues, never OOMs)."""
+        """n fresh pages at refcount 1, or None if the pool cannot satisfy
+        the request (the caller keeps the request QUEUED — exhaustion
+        queues, never OOMs)."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._ref[p] = 1
         self.allocated_total += n
         return pages
 
+    def share(self, pages: List[int]) -> None:
+        """Add one reference per page; every page must already be live."""
+        for p in pages:
+            assert p != GARBAGE_PAGE, "garbage page is never refcounted"
+            assert self._ref[p] >= 1, f"share of dead page {p}"
+            self._ref[p] += 1
+        self.shared_total += len(pages)
+
     def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; a last-holder release returns the
+        page to the free list and advances ``freed_total``."""
         for p in pages:
             assert p != GARBAGE_PAGE, "garbage page is never allocated"
-            self._free.append(p)
-        self.freed_total += len(pages)
+            assert self._ref[p] >= 1, f"double-free past zero of page {p}"
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free.append(p)
+                self.freed_total += 1
 
     def check_balance(self) -> None:
         assert self.allocated_total - self.freed_total == self.live, (
             self.allocated_total, self.freed_total, self.live)
+        assert self._ref[GARBAGE_PAGE] == 0
+        live_by_ref = int((self._ref > 0).sum())
+        assert live_by_ref == self.live, (live_by_ref, self.live)
+        assert all(self._ref[p] == 0 for p in self._free)
 
 
 @dataclass
 class Request:
-    """One serving request and its life-cycle state."""
+    """One serving request and its life-cycle state.
+
+    Prefix/preemption extensions: ``pages`` always lists the request's
+    pages in POSITION ORDER, the first ``n_shared`` of which are read-only
+    links into the radix tree (``shared_path`` holds the matched nodes).
+    After a preemption, ``out`` keeps the parked generated tokens and
+    admission resumes the request by re-linking/re-computing their kv.
+    """
 
     rid: int
     prompt: np.ndarray            # [prompt_len] int32
@@ -82,8 +146,11 @@ class Request:
     out: List[int] = field(default_factory=list)
     slot: int = -1
     pages: List[int] = field(default_factory=list)
+    n_shared: int = 0
+    shared_path: List[RadixNode] = field(default_factory=list)
     admitted_step: int = -1
     finished_step: int = -1
+    preemptions: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -95,6 +162,16 @@ class Request:
         position its kv will be written at)."""
         return self.prompt_len + len(self.out) - 1
 
+    @property
+    def seq_tokens(self) -> np.ndarray:
+        """Tokens whose kv must exist before decode resumes: the prompt
+        plus every parked generated token except the last (the last parked
+        token is the next decode INPUT; its kv is written by that step)."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out[:-1], np.int32)])
+
     def done(self) -> bool:
         return (len(self.out) >= self.max_new
                 or (self.eos_token >= 0 and len(self.out) > 0
@@ -102,22 +179,31 @@ class Request:
 
 
 class Scheduler:
-    """FCFS admission with token-budget batching and slot recycling.
+    """FCFS admission with token-budget batching, slot recycling, radix
+    prefix matching, and blocked-head preemption.
 
     Strict FCFS: the queue head blocks admission when it does not fit
-    (head-of-line blocking is intentional — it makes page exhaustion
-    starvation-free: the head is guaranteed the next freed pages).
+    (head-of-line blocking makes page exhaustion starvation-free: the head
+    is guaranteed the next freed pages). With ``preempt_after > 0`` the
+    head additionally reclaims pages from the youngest running request
+    once it has been blocked that many consecutive admission rounds.
     """
 
     def __init__(self, *, n_slots: int, pool: PagePool, page_size: int,
-                 max_len: int, prefill_token_budget: int = 4096):
+                 max_len: int, prefill_token_budget: int = 4096,
+                 prefix_cache: Optional[PrefixCache] = None,
+                 preempt_after: int = 0):
         self.pool = pool
         self.page_size = page_size
         self.max_len = max_len
         self.prefill_token_budget = prefill_token_budget
+        self.prefix_cache = prefix_cache
+        self.preempt_after = preempt_after
         self.queue: Deque[Request] = deque()
         self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
         self.running: Dict[int, Request] = {}   # slot -> request
+        self.head_blocked = 0                   # consecutive blocked rounds
+        self.preemptions_total = 0
         self._next_rid = 0
 
     # ------------------------------------------------------------------
@@ -147,36 +233,207 @@ class Scheduler:
         self.queue.append(r)
         return r
 
-    def admit(self, step: int = -1) -> List[Request]:
+    # -- prefix matching ----------------------------------------------
+    def _match_cap(self, r: Request) -> int:
+        """Max whole pages the radix match may link for this admission.
+
+        Fresh request: the unmatched prompt suffix must keep >= 2 tokens —
+        1 because the engine needs the last prompt position's logits to
+        sample the first token, 2 because a 1-row suffix forward lowers to
+        matvecs whose reduction grouping differs from the full forward's
+        gemm rows, breaking the bit-identity contract (see
+        model.attention.output_proj).
+        Resumed request: same cap while the match lands inside the prompt;
+        a match covering the whole prompt ([prompt_len, written]) skips the
+        suffix forward entirely (decode replay only), so any whole written
+        page may link.
+        """
+        ps = self.page_size
+        Lp = r.prompt_len
+        written = Lp + len(r.out) - 1 if r.out else Lp
+        cap_written = written // ps
+        cap_prompt = max(Lp - 2, 0) // ps
+        if not r.out:
+            return cap_prompt
+        if cap_written * ps >= Lp:
+            return cap_written
+        return cap_prompt
+
+    def _match_head(self, r: Request, step: int) -> List[RadixNode]:
+        # Only a RESUME may link decode-written pages (a preemption
+        # donation holds decode-horizon bits that only reproduce the
+        # donor's own interrupted run; a fresh prompt extending into
+        # another request's generated range must prefill cold).
+        path = self.prefix_cache.match(
+            r.seq_tokens, max_pages=self._match_cap(r), step=step,
+            include_decode_written=bool(r.out))
+        # A match may not land in [prompt_len - 1, prompt_len): a 1-token
+        # suffix forward is not bit-safe (see _match_cap). One pop always
+        # clears the window (it is narrower than a page).
+        while path and (r.prompt_len - 2
+                        < len(path) * self.page_size < r.prompt_len):
+            path.pop()
+        return path
+
+    def _try_admit_head(self, r: Request, path: List[RadixNode],
+                        step: int) -> bool:
+        """Allocate + link the matched queue head; False when blocked."""
+        need = pages_needed(r.prompt_len, r.max_new, self.page_size) \
+            - len(path)
+        pages = self.pool.alloc(need)
+        if pages is None and self.prefix_cache is not None:
+            protect = {id(n) for n in path}
+            self.prefix_cache.evict(need - self.pool.n_free, self.pool,
+                                    protect=protect)
+            pages = self.pool.alloc(need)
+        if pages is None:
+            return False
+        if path:
+            self.prefix_cache.lock_path(path, self.pool, step=step)
+        self.queue.popleft()
+        r.shared_path = path
+        r.n_shared = len(path)
+        r.pages = [n.page for n in path] + pages
+        r.slot = self.free_slots.pop()
+        r.status = RUNNING
+        r.admitted_step = step
+        self.running[r.slot] = r
+        return True
+
+    def admit(self, step: int = -1, *, count_blocked: bool = True
+              ) -> List[Request]:
         """Admit queue-head requests while a slot, pages, and prefill-token
-        budget remain. The FIRST admission of a step ignores the token
-        budget so a prompt longer than the budget cannot livelock."""
+        budget remain. The FIRST admission of a round ignores the token
+        budget so a prompt longer than the budget cannot livelock. A
+        blocked head bumps ``head_blocked`` (the preemption trigger);
+        any admission resets it."""
         admitted: List[Request] = []
         budget = self.prefill_token_budget
         while self.queue and self.free_slots:
             r = self.queue[0]
-            if admitted and r.prompt_len > budget:
-                break  # prefill/decode interleaving: cap this step's prefill
-            pages = self.pool.alloc(
-                pages_needed(r.prompt_len, r.max_new, self.page_size))
-            if pages is None:
+            path = (self._match_head(r, step)
+                    if self.prefix_cache is not None else [])
+            # Cost this step = tokens actually recomputed (suffix forward
+            # rows + decode replay steps), not the full prompt.
+            cost = len(r.seq_tokens) - len(path) * self.page_size
+            if admitted and cost > budget:
+                break  # prefill/decode interleaving: cap this step's cost
+            if not self._try_admit_head(r, path, step):
                 break  # page exhaustion: r stays queued, retried next step
-            self.queue.popleft()
-            r.pages = pages
-            r.slot = self.free_slots.pop()
-            r.status = RUNNING
-            r.admitted_step = step
-            budget -= r.prompt_len
-            self.running[r.slot] = r
+            budget -= cost
             admitted.append(r)
+        if admitted:
+            self.head_blocked = 0
+        elif self.queue and count_blocked:
+            self.head_blocked += 1
         return admitted
 
+    def donate_prefilled(self, r: Request, step: int = -1) -> None:
+        """Donate a request's whole PROMPT pages the moment its prefill
+        lands (not at finish): concurrent same-prefix requests admitted a
+        step later can already share them. The request keeps using the
+        pages through the tree protocol — ownership of each newly created
+        node transfers to the tree and the request re-pins it (lock +
+        share), exactly the state a radix HIT would have produced, so
+        finish/preempt release uniformly. Pages whose chunk already has an
+        incumbent node under a different page id stay private (first donor
+        wins; the duplicate is freed at finish)."""
+        if self.prefix_cache is None:
+            return
+        n_whole = r.prompt_len // self.page_size
+        if n_whole <= r.n_shared:
+            return
+        self.prefix_cache.insert(
+            r.prompt[:n_whole * self.page_size], r.pages[:n_whole],
+            step=step, prompt_len=r.prompt_len)
+        # include_decode_written: the re-match only confirms OUR pages (the
+        # ext loop drops anything foreign), so reach past flagged nodes.
+        path = self.prefix_cache.match(
+            r.prompt, max_pages=n_whole, step=step,
+            include_decode_written=True)
+        ext = []
+        for i in range(r.n_shared, len(path)):
+            if path[i].page != r.pages[i]:
+                break   # incumbent from another donor: our copy stays private
+            ext.append(path[i])
+        if ext:
+            self.prefix_cache.lock_path(ext, self.pool, step=step)
+            r.shared_path = r.shared_path + ext
+            r.n_shared += len(ext)
+
+    # -- release paths -------------------------------------------------
+    def _release_pages(self, r: Request, *, donate_upto_tokens: int,
+                       step: int) -> None:
+        """Return a leaving request's pages: donate the whole-page chunks
+        of its first ``donate_upto_tokens`` tokens to the radix tree
+        (reference transfer for new nodes), release everything else.
+        Shared-path pins are always released (the tree keeps its own
+        reference on those pages)."""
+        ps = self.page_size
+        private = r.pages[r.n_shared:]
+        transferred: List[int] = []
+        if self.prefix_cache is not None and donate_upto_tokens >= ps:
+            donate_pages = r.pages[:donate_upto_tokens // ps]
+            transferred = self.prefix_cache.insert(
+                r.seq_tokens[:donate_upto_tokens], donate_pages, step=step,
+                prompt_len=r.prompt_len)
+        if r.shared_path:
+            self.prefix_cache.release_path(r.shared_path, self.pool)
+        keep = set(transferred)
+        leftover = [p for p in private if p not in keep]
+        if leftover:
+            self.pool.free(leftover)
+        r.pages = []
+        r.n_shared = 0
+        r.shared_path = []
+
     def finish(self, r: Request, step: int = -1) -> None:
-        """Recycle the request's slot and pages (EOS / max-len reached)."""
+        """Recycle the request's slot and pages (EOS / max-len reached);
+        its full prompt pages are donated to the prefix tree."""
         assert r.status == RUNNING
         r.status = FINISHED
         r.finished_step = step
         del self.running[r.slot]
         self.free_slots.append(r.slot)
-        self.pool.free(r.pages)
-        r.pages = []
+        # Donate only pages fully covered by the PROMPT (pages containing
+        # generated-token kv are per-request: decode wrote them with the
+        # full-horizon reduction, so their bits are not what a cold prefill
+        # of a matching prompt would produce).
+        self._release_pages(
+            r, donate_upto_tokens=(r.prompt_len // self.page_size)
+            * self.page_size, step=step)
+        r.slot = -1
+
+    # -- preemption ----------------------------------------------------
+    def should_preempt(self) -> bool:
+        return (self.preempt_after > 0 and self.running
+                and self.head_blocked >= self.preempt_after)
+
+    def preempt_youngest(self, step: int = -1):
+        """Preempt the youngest running request: park its generated tokens
+        on the request, donate every WHOLE written page (prompt and
+        generated — at resume the radix hit makes those positions free to
+        recover, and decode replay is bit-exact against its own pages),
+        release the rest, and re-queue it directly behind the blocked head.
+        Returns ``(victim, freed_slot)`` so the engine can clear the
+        slot's device-side rows."""
+        assert self.running
+        victim = max(self.running.values(),
+                     key=lambda r: (r.admitted_step, r.rid))
+        slot = victim.slot
+        del self.running[victim.slot]
+        self.free_slots.append(victim.slot)
+        victim.slot = -1
+        victim.status = QUEUED
+        victim.preemptions += 1
+        self.preemptions_total += 1
+        written = victim.prompt_len + len(victim.out) - 1
+        self._release_pages(
+            victim, donate_upto_tokens=(written // self.page_size)
+            * self.page_size, step=step)
+        if self.queue:
+            self.queue.insert(1, victim)
+        else:
+            self.queue.appendleft(victim)
+        self.head_blocked = 0
+        return victim, slot

@@ -1,0 +1,247 @@
+"""Preemptive scheduling over the refcounted page pool.
+
+The contract under test is acceptance gate (b): a preempted-then-resumed
+request produces EXACTLY the tokens of the same request run uninterrupted.
+The engine achieves that without cross-shape numerics: surviving donated
+pages keep the ORIGINAL kv bits, the missing prompt tail re-runs the
+suffix/full prefill at the original reduction shape, and parked generated
+positions are replayed through the SAME decode program that produced them
+(the engine asserts each replayed prediction reproduces the parked token).
+Scheduler-level tests pin the trigger/victim/requeue mechanics.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.lp import plan_range
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.serve import (PagedEngine, PagedServeConfig, PagePool,
+                         PrefixCache, Scheduler, ServeConfig, generate)
+
+PC = ParallelContext()
+KEY = jax.random.PRNGKey(0)
+PS = 8
+
+
+def _build(n_layers=4, arch="tinyllama-1.1b"):
+    cfg = reduced_config(get_config(arch), n_layers=n_layers)
+    ms = T.build_structure(cfg, plan=plan_range(cfg, 0, n_layers), tp=1)
+    return cfg, ms, T.init_params(ms, KEY)
+
+
+def _one_shot(params, ms, prompt, n_new, max_len):
+    sv = ServeConfig(max_len=max_len, temperature=0.0,
+                     cache_dtype=jnp.float32)
+    return np.asarray(generate(params, jnp.asarray(prompt)[None], n_new,
+                               ms=ms, pc=PC, sv=sv)[0])
+
+
+def _prompt(i, n, vocab):
+    return np.asarray(jax.random.randint(jax.random.fold_in(KEY, 50 + i),
+                                         (n,), 0, vocab))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler mechanics
+# ---------------------------------------------------------------------------
+
+def test_scheduler_preempts_youngest_after_k_blocked_rounds():
+    pool = PagePool(9)          # 8 allocatable
+    sched = Scheduler(n_slots=4, pool=pool, page_size=8, max_len=32,
+                      preempt_after=3)
+    r0 = sched.submit(np.zeros(8, np.int32), 24)   # 4 pages
+    r1 = sched.submit(np.zeros(8, np.int32), 24)   # 4 pages -> pool full
+    assert len(sched.admit(0)) == 2
+    r2 = sched.submit(np.zeros(8, np.int32), 8)    # 2 pages -> blocked
+    for step in (1, 2):
+        assert sched.admit(step) == []
+        assert not sched.should_preempt()
+    assert sched.admit(3) == [] and sched.should_preempt()
+    victim, slot = sched.preempt_youngest(3)
+    assert victim is r1 and slot == 1   # r0 took slot 0, r1 slot 1
+    assert victim.status == "queued" and victim.pages == []
+    # Re-queued BEHIND the blocked head: head admits first.
+    assert [r.rid for r in sched.queue] == [r2.rid, r1.rid]
+    adm = sched.admit(4)
+    assert adm and adm[0] is r2
+    assert sched.head_blocked == 0
+    pool.check_balance()
+
+
+def test_scheduler_preempt_donates_whole_written_pages():
+    pool = PagePool(9)
+    tree = PrefixCache(page_size=8)
+    sched = Scheduler(n_slots=2, pool=pool, page_size=8, max_len=32,
+                      prefix_cache=tree, preempt_after=1)
+    r = sched.submit(np.arange(12, dtype=np.int32), 20)   # 4 pages
+    sched.admit(0)
+    r.out.extend([7, 8, 9, 10, 11])     # pretend 5 decoded tokens
+    # written kv = 12 + 5 - 1 = 16 positions = 2 whole pages donated
+    victim, _ = sched.preempt_youngest(1)
+    assert victim is r
+    assert tree.resident_pages == 2
+    assert pool.live == 2               # the other 2 pages were released
+    # Resume: the match hits its own donated pages (prompt + generated) —
+    # the generated-range node is flagged decode_written, so only the
+    # resume-style match (include_decode_written) reaches it; a fresh
+    # match stops at the prompt-range node.
+    path = tree.match(r.seq_tokens, max_pages=8, step=2,
+                      include_decode_written=True)
+    assert len(path) == 2 and path[1].decode_written
+    assert len(tree.match(r.seq_tokens, max_pages=8, step=2)) == 1
+    pool.check_balance()
+
+
+def test_scheduler_requeue_goes_behind_head_even_when_queue_longer():
+    pool = PagePool(5)
+    sched = Scheduler(n_slots=2, pool=pool, page_size=8, max_len=16,
+                      preempt_after=1)
+    r0 = sched.submit(np.zeros(8, np.int32), 8)   # 2 pages
+    r1 = sched.submit(np.zeros(8, np.int32), 8)
+    sched.admit(0)                                # both admitted, pool full
+    r2 = sched.submit(np.zeros(8, np.int32), 8)
+    r3 = sched.submit(np.zeros(8, np.int32), 8)
+    sched.admit(1)
+    victim, _ = sched.preempt_youngest(1)
+    assert victim is r1
+    assert [r.rid for r in sched.queue] == [r2.rid, r1.rid, r3.rid]
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end bit-identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefix_cache", [True, False])
+def test_preempted_request_matches_uninterrupted_run(prefix_cache):
+    """(b) of the acceptance gate, with and without the radix cache: with
+    it, resume radix-hits the preemption donation (cheap); without it,
+    resume re-prefills from scratch — both must be bit-identical to the
+    uninterrupted run (the engine additionally self-checks every replayed
+    token against the parked one)."""
+    cfg, ms, params = _build()
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=9, max_len=32,
+                           cache_dtype=jnp.float32,
+                           prefix_cache=prefix_cache, preempt_after=2)
+    eng = PagedEngine(params, ms, psv)
+    pa, pb, pc_ = (_prompt(i, 8, cfg.vocab_size) for i in range(3))
+    ra = eng.add_request(pa, 20)       # 4 pages each: two fill the pool
+    rb = eng.add_request(pb, 20)
+    for _ in range(4):
+        eng.step()
+    rc = eng.add_request(pc_, 4)       # blocks -> preempts the youngest
+    res = eng.drain()
+    assert eng.sched.preemptions_total >= 1
+    assert eng.counters["replay_tokens"] > 0
+    for rid, (p, n) in zip((ra, rb, rc), [(pa, 20), (pb, 20), (pc_, 4)]):
+        ref = _one_shot(params, ms, p, n, psv.max_len)
+        assert (res[rid] == ref).all(), (prefix_cache, rid)
+    # Everything the tree does not hold drained back to the free list.
+    resident = eng.prefix.resident_pages if eng.prefix else 0
+    assert eng.pool.live == resident
+    eng.pool.check_balance()
+
+
+def test_preemption_unblocks_short_request_behind_long_head():
+    """Head-of-line removal: a short request stuck behind page-hogging
+    long decodes gets served long before they finish."""
+    cfg, ms, params = _build()
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=9, max_len=64,
+                           cache_dtype=jnp.float32, preempt_after=2)
+    eng = PagedEngine(params, ms, psv)
+    long_a = eng.add_request(_prompt(0, 8, cfg.vocab_size), 48)  # 7 pages
+    eng.step()
+    short = eng.add_request(_prompt(1, 8, cfg.vocab_size), 4)    # 2 pages
+    short_done = None
+    for _ in range(40):
+        eng.step()
+        if short in eng.results and short_done is None:
+            short_done = eng.step_count
+    assert short_done is not None, "short request starved"
+    assert long_a not in eng.results or \
+        eng.request(long_a).finished_step >= short_done
+    eng.drain()
+    ref = _one_shot(params, ms, eng.request(short).prompt, 4, psv.max_len)
+    assert (eng.results[short] == ref).all()
+
+
+def test_preemption_cascade_converges_and_stays_exact():
+    """Repeated preemptions (several victims, repeated resumes) must
+    converge — no livelock — and keep every request exact."""
+    cfg, ms, params = _build()
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=9, max_len=32,
+                           cache_dtype=jnp.float32, prefix_cache=True,
+                           preempt_after=1)
+    eng = PagedEngine(params, ms, psv)
+    reqs = [(_prompt(i, 8, cfg.vocab_size), 16 - 4 * (i % 3))
+            for i in range(5)]
+    rids = [eng.add_request(p, n) for p, n in reqs]
+    res = eng.drain()
+    for rid, (p, n) in zip(rids, reqs):
+        assert (res[rid] == _one_shot(params, ms, p, n, psv.max_len)).all()
+
+
+def test_fresh_request_never_links_decode_written_donation():
+    """A preemption donation includes generated-range pages whose kv the
+    DECODE program wrote (max_len-horizon reduction — not what a cold
+    prefill of the same tokens produces). Those nodes are resume-only: a
+    FRESH request whose prompt extends the victim's prompt+generated
+    stream must stop its match at the prompt-range nodes and stay
+    bit-identical to one-shot generate()."""
+    cfg, ms, params = _build()
+    psv = PagedServeConfig(n_slots=2, page_size=PS, n_pages=17, max_len=32,
+                           cache_dtype=jnp.float32, prefix_cache=True,
+                           preempt_after=0)
+    eng = PagedEngine(params, ms, psv)
+    prompt = _prompt(0, 8, cfg.vocab_size)
+    rid = eng.add_request(prompt, 12)
+    for _ in range(10):
+        eng.step()
+    victim, slot = eng.sched.preempt_youngest(eng.step_count)
+    eng.block_tables[slot] = 0
+    eng.tok[slot] = 0
+    eng.pos[slot] = 0
+    # The donation now holds prompt pages (clean) + a generated-range
+    # page flagged decode_written.
+    flagged = [n for n in eng.prefix.evictable_leaves() if n.decode_written]
+    assert flagged, "preemption must donate flagged generated-range pages"
+    # Fresh request whose prompt IS the victim's prompt + generated head:
+    # must match only the clean prompt page (8 tokens = 1 page), not the
+    # flagged ones.
+    ext_prompt = np.concatenate(
+        [prompt, np.asarray(victim.out[:8], np.int32)])
+    rid2 = eng.add_request(ext_prompt, 4)
+    eng.step()
+    r2 = eng.request(rid2)
+    assert r2.n_shared * PS <= prompt.shape[0]
+    assert not any(n.decode_written for n in r2.shared_path)
+    eng.drain()
+    ref = _one_shot(params, ms, ext_prompt, 4, psv.max_len)
+    assert (eng.results[rid2] == ref).all()
+    # ... while the victim's own resume DID re-link its flagged pages
+    # (cheap resume) and stays exact.
+    assert (eng.results[rid] == _one_shot(params, ms, prompt, 12,
+                                          psv.max_len)).all()
+
+
+def test_mamba_preemption_resumes_via_full_reprefill():
+    """State mixers have no kv pages to resume from: the engine re-prefills
+    prompt (rebuilding conv/h state) and replays decode — still exact."""
+    cfg, ms, params = _build(arch="falcon-mamba-7b")
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=9, max_len=32,
+                           cache_dtype=jnp.float32, prefix_cache=True,
+                           preempt_after=2)
+    eng = PagedEngine(params, ms, psv)
+    assert eng.prefix is None          # sharing auto-disabled
+    pa, pb, pc_ = (_prompt(i, 8, cfg.vocab_size) for i in range(3))
+    ra = eng.add_request(pa, 20)
+    rb = eng.add_request(pb, 20)
+    for _ in range(4):
+        eng.step()
+    rc = eng.add_request(pc_, 4)
+    res = eng.drain()
+    assert eng.sched.preemptions_total >= 1
+    for rid, (p, n) in zip((ra, rb, rc), [(pa, 20), (pb, 20), (pc_, 4)]):
+        assert (res[rid] == _one_shot(params, ms, p, n, psv.max_len)).all()

@@ -1,0 +1,334 @@
+"""Radix prefix cache: refcounted pages, copy-on-write sharing, exactness.
+
+Three layers of guarantees:
+  * PagePool refcounting — property-style random interleavings of
+    alloc/share/free hold the generalized accounting invariant
+    ``allocated - freed == live_unique``, never touch the garbage page,
+    and only return a shared page to the free list at refcount 0.
+  * Radix tree semantics — whole-page chunk matching, first-donor-wins
+    insertion, LRU eviction of unlocked leaves only.
+  * End-to-end bit-identity — a prefix-hit request produces EXACTLY the
+    tokens of (i) the same request on a cold engine with sharing disabled
+    and (ii) one-shot generate(); shared pages are never written
+    (copy-on-write by construction).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced_config
+from repro.core.lp import plan_range
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.serve import (PagedEngine, PagedServeConfig, PagePool,
+                         PrefixCache, ServeConfig, generate)
+from repro.serve import paged_cache as PG
+
+PC = ParallelContext()
+KEY = jax.random.PRNGKey(0)
+PS = 8
+
+
+# ---------------------------------------------------------------------------
+# PagePool refcounting (property-style)
+# ---------------------------------------------------------------------------
+
+def test_pool_share_free_lifecycle():
+    pool = PagePool(6)
+    a = pool.alloc(2)
+    assert a is not None and PG.GARBAGE_PAGE not in a
+    pool.share(a)                      # second holder
+    pool.check_balance()
+    assert pool.live == 2
+    pool.free(a)                       # first holder lets go
+    assert pool.live == 2              # still resident: refcount 1
+    assert pool.freed_total == 0
+    pool.free(a)                       # last holder -> free list
+    assert pool.live == 0 and pool.freed_total == 2
+    pool.check_balance()
+
+
+def test_pool_double_free_shared_page_only_recycles_at_zero():
+    pool = PagePool(4)
+    (p,) = pool.alloc(1)
+    pool.share([p])
+    pool.share([p])                    # refcount 3
+    pool.free([p])
+    pool.free([p])
+    assert pool.n_free == 2            # still held by one reference
+    assert pool.refcount(p) == 1
+    pool.free([p])
+    assert pool.n_free == 3 and pool.refcount(p) == 0
+    with pytest.raises(AssertionError):
+        pool.free([p])                 # freeing past zero is a bug
+
+
+def test_pool_garbage_page_never_allocated_or_refcounted():
+    pool = PagePool(5)
+    seen = set()
+    while True:
+        got = pool.alloc(1)
+        if got is None:
+            break
+        seen.update(got)
+    assert PG.GARBAGE_PAGE not in seen and len(seen) == 4
+    with pytest.raises(AssertionError):
+        pool.share([PG.GARBAGE_PAGE])
+    with pytest.raises(AssertionError):
+        pool.free([PG.GARBAGE_PAGE])
+
+
+def test_pool_random_interleavings_hold_invariant():
+    """Seeded random alloc/share/free program against a model: after every
+    operation ``allocated - freed == live_unique`` and the free list agrees
+    with the refcounts."""
+    rng = np.random.default_rng(7)
+    pool = PagePool(17)
+    held = []                          # (page, holders) live handles
+    for _ in range(500):
+        op = rng.integers(0, 3)
+        if op == 0:
+            n = int(rng.integers(1, 4))
+            got = pool.alloc(n)
+            if got is not None:
+                held.extend((p, 1) for p in got)
+        elif op == 1 and held:
+            i = int(rng.integers(len(held)))
+            p, h = held[i]
+            pool.share([p])
+            held[i] = (p, h + 1)
+        elif op == 2 and held:
+            i = int(rng.integers(len(held)))
+            p, h = held[i]
+            pool.free([p])
+            if h == 1:
+                held.pop(i)
+            else:
+                held[i] = (p, h - 1)
+        pool.check_balance()
+        assert pool.live == len({p for p, _ in held})
+    for p, h in held:
+        pool.free([p] * h)
+    pool.check_balance()
+    assert pool.live == 0
+
+
+# ---------------------------------------------------------------------------
+# Radix tree semantics
+# ---------------------------------------------------------------------------
+
+def _toks(*chunks):
+    return np.asarray([t for c in chunks for t in c], np.int32)
+
+
+def test_radix_match_whole_pages_and_insert_transfer():
+    pool = PagePool(10)
+    tree = PrefixCache(page_size=4)
+    toks = _toks(range(4), range(10, 14), range(20, 22))   # 2.5 pages
+    pages = pool.alloc(3)
+    moved = tree.insert(toks, pages[:2], step=0)           # whole pages only
+    assert moved == pages[:2] and tree.n_nodes == 2
+    # Same chunks again: first donor wins, nothing transfers.
+    pages2 = pool.alloc(2)
+    assert tree.insert(toks[:8], pages2, step=1) == []
+    pool.free(pages2)
+    # Match walks chunk-by-chunk and respects the cap.
+    m = tree.match(toks, max_pages=8, step=2)
+    assert [n.page for n in m] == pages[:2]
+    assert len(tree.match(toks, max_pages=1, step=2)) == 1
+    # Diverging second chunk stops the walk after one page.
+    other = _toks(range(4), range(99, 103))
+    assert len(tree.match(other, max_pages=8, step=3)) == 1
+
+
+def test_radix_evicts_lru_unlocked_leaves_only():
+    pool = PagePool(10)
+    tree = PrefixCache(page_size=2)
+    # Two branches off one shared root chunk.
+    pa = pool.alloc(2)
+    pb = pool.alloc(1)
+    tree.insert(_toks((0, 1), (2, 3)), pa, step=0)
+    tree.insert(_toks((0, 1), (7, 8)), [pa[0], pb[0]], step=5)
+    assert tree.n_nodes == 3 and pool.live == 3
+    # Lock the (2, 3) leaf: only the (7, 8) leaf is evictable.
+    path = tree.match(_toks((0, 1), (2, 3)), max_pages=2, step=6)
+    tree.lock_path(path, pool, step=6)
+    assert {n.page for n in tree.evictable_leaves()} == {pb[0]}
+    assert tree.evict(5, pool) == 1          # leaf (7,8) only; root chunk
+    assert tree.n_nodes == 2                 # is locked via the path
+    tree.release_path(path, pool)
+    # Now the whole chain peels leaf-first (LRU).
+    assert tree.evict(5, pool) == 2
+    assert tree.n_nodes == 0 and pool.live == 0
+    pool.check_balance()
+
+
+def test_radix_protect_set_survives_eviction():
+    pool = PagePool(6)
+    tree = PrefixCache(page_size=2)
+    pg = pool.alloc(2)
+    tree.insert(_toks((0, 1), (2, 3)), pg, step=0)
+    path = tree.match(_toks((0, 1), (2, 3)), max_pages=2, step=1)
+    freed = tree.evict(5, pool, protect={id(n) for n in path})
+    assert freed == 0 and tree.n_nodes == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine end-to-end: bit-identity + CoW
+# ---------------------------------------------------------------------------
+
+def _build(n_layers=4):
+    cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=n_layers)
+    ms = T.build_structure(cfg, plan=plan_range(cfg, 0, n_layers), tp=1)
+    return cfg, ms, T.init_params(ms, KEY)
+
+
+def _one_shot(params, ms, prompt, n_new, max_len):
+    sv = ServeConfig(max_len=max_len, temperature=0.0,
+                     cache_dtype=jnp.float32)
+    return np.asarray(generate(params, jnp.asarray(prompt)[None], n_new,
+                               ms=ms, pc=PC, sv=sv)[0])
+
+
+def _family(cfg, shared_len, tail_len, n):
+    shared = np.asarray(jax.random.randint(jax.random.fold_in(KEY, 1),
+                                           (shared_len,), 0, cfg.vocab_size))
+    return [np.concatenate([shared, np.asarray(jax.random.randint(
+        jax.random.fold_in(KEY, 100 + i), (tail_len,), 0, cfg.vocab_size))])
+        for i in range(n)]
+
+
+def test_prefix_hit_bit_identical_to_cold_and_one_shot():
+    """(a) of the acceptance gate: serve a donor, then same-prefix requests
+    with sharing ON; tokens must equal both the sharing-OFF engine and
+    one-shot generate(), while the engine reports real prefill savings."""
+    cfg, ms, params = _build()
+    prompts = _family(cfg, 16, 8, 4)
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=33, max_len=48,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    eng = PagedEngine(params, ms, psv)
+    assert eng.prefix is not None
+    rids = [eng.add_request(prompts[0], 6)]
+    eng.drain()                        # donor finishes -> donates its pages
+    rids += [eng.add_request(p, 6) for p in prompts[1:]]
+    res = dict(eng.drain())
+    assert eng.counters["prefix_hits"] >= len(prompts) - 1
+    assert eng.counters["hit_tokens"] >= (len(prompts) - 1) * 16
+    # Saved prefill compute: only the donor ran its full prompt.
+    assert eng.counters["prefill_tokens"] == 24 + (len(prompts) - 1) * 8
+
+    cold = PagedEngine(params, ms, PagedServeConfig(
+        n_slots=4, page_size=PS, n_pages=33, max_len=48,
+        cache_dtype=jnp.float32, prefix_cache=False))
+    cold_rids = [cold.add_request(p, 6) for p in prompts]
+    cold_res = cold.drain()
+    for rid, crid, p in zip(rids, cold_rids, prompts):
+        ref = _one_shot(params, ms, p, 6, psv.max_len)
+        assert (res[rid] == ref).all(), rid
+        assert (res[rid] == cold_res[crid]).all(), rid
+
+
+def test_full_prompt_rematch_keeps_two_token_suffix():
+    """An identical repeat request may match at most (Lp-2)//ps pages: the
+    suffix forward needs >= 2 rows (1-row forwards lower to matvecs with a
+    different reduction grouping — not bit-safe) and the last position's
+    logits seed sampling. Exactness must survive the full-match edge."""
+    cfg, ms, params = _build()
+    prompt = np.asarray(jax.random.randint(jax.random.fold_in(KEY, 2),
+                                           (24,), 0, cfg.vocab_size))
+    psv = PagedServeConfig(n_slots=2, page_size=PS, n_pages=17, max_len=32,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    eng = PagedEngine(params, ms, psv)
+    r0 = eng.add_request(prompt, 4)
+    eng.drain()
+    r1 = eng.add_request(prompt, 4)    # exact repeat
+    res = eng.drain()
+    # 24 tokens = 3 pages, but the cap is (24-2)//8 = 2 pages.
+    assert eng.counters["hit_tokens"] == 16
+    ref = _one_shot(params, ms, prompt, 4, psv.max_len)
+    assert (res[r0] == ref).all() and (res[r1] == ref).all()
+
+
+def test_shared_pages_are_never_written():
+    """Copy-on-write by construction: serving prefix-hit requests must not
+    change a single byte of the donated prefix pages."""
+    cfg, ms, params = _build()
+    prompts = _family(cfg, 16, 8, 3)
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=33, max_len=48,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    eng = PagedEngine(params, ms, psv)
+    eng.add_request(prompts[0], 6)
+    eng.drain()
+    path = eng.prefix.match(prompts[0][:16], max_pages=2,
+                            step=eng.step_count)
+    shared_pages = jnp.asarray([n.page for n in path])
+    before = [{k: np.asarray(jnp.take(v, shared_pages,
+                                      axis=T.cache_batch_axis(k)))
+               for k, v in seg.items()} for seg in eng.caches]
+    for p in prompts[1:]:
+        eng.add_request(p, 6)
+    eng.drain()
+    after = [{k: np.asarray(jnp.take(v, shared_pages,
+                                     axis=T.cache_batch_axis(k)))
+              for k, v in seg.items()} for seg in eng.caches]
+    for sb, sa in zip(before, after):
+        for k in sb:
+            assert (sb[k] == sa[k]).all(), k
+
+
+def test_eviction_under_pressure_then_still_exact():
+    """A pool too small to keep donations resident must evict refcount-0
+    leaves to admit new work — and stay bit-exact throughout."""
+    cfg, ms, params = _build()
+    prompts = _family(cfg, 16, 8, 2)
+    other = np.asarray(jax.random.randint(jax.random.fold_in(KEY, 3),
+                                          (24,), 0, cfg.vocab_size))
+    # 6 allocatable pages; each request needs 4 -> donations must evict.
+    psv = PagedServeConfig(n_slots=2, page_size=PS, n_pages=7, max_len=32,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    eng = PagedEngine(params, ms, psv)
+    ra = eng.add_request(prompts[0], 8)
+    eng.drain()
+    assert eng.prefix.resident_pages > 0
+    rb = eng.add_request(other, 8)      # no hit; needs eviction space
+    eng.drain()
+    assert eng.prefix.evicted_pages_total > 0
+    rc = eng.add_request(prompts[1], 8)  # family member after eviction
+    res = eng.drain()
+    for rid, (p, n) in zip((ra, rb, rc),
+                           [(prompts[0], 8), (other, 8), (prompts[1], 8)]):
+        assert (res[rid] == _one_shot(params, ms, p, n, 32)).all(), rid
+    eng.pool.check_balance()
+
+
+def test_prefix_cache_disabled_for_state_models():
+    """Mamba/rec state cannot resume from kv pages: the engine silently
+    disables sharing (and still serves correctly)."""
+    cfg = reduced_config(get_config("falcon-mamba-7b"), n_layers=4)
+    ms = T.build_structure(cfg, plan=plan_range(cfg, 0, 4), tp=1)
+    params = T.init_params(ms, KEY)
+    psv = PagedServeConfig(n_slots=2, page_size=PS, n_pages=17, max_len=32,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    eng = PagedEngine(params, ms, psv)
+    assert eng.prefix is None
+    prompt = np.asarray(jax.random.randint(jax.random.fold_in(KEY, 4),
+                                           (8,), 0, cfg.vocab_size))
+    rid = eng.add_request(prompt, 4)
+    res = eng.drain()
+    assert (res[rid] == _one_shot(params, ms, prompt, 4, 32)).all()
+
+
+def test_pool_drains_to_tree_residency_only():
+    """After drain, live pages are exactly the tree's residents (requests
+    hold nothing); disabling the tree recovers PR 2's drain-to-zero."""
+    cfg, ms, params = _build()
+    prompts = _family(cfg, 16, 8, 2)
+    psv = PagedServeConfig(n_slots=4, page_size=PS, n_pages=33, max_len=48,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    eng = PagedEngine(params, ms, psv)
+    for p in prompts:
+        eng.add_request(p, 4)
+    eng.drain()
+    assert eng.pool.live == eng.prefix.resident_pages > 0
+    eng.pool.check_balance()
