@@ -37,13 +37,18 @@ from repro.serve.engine import ServeConfig, make_sharded_serve_step
 from repro.analysis.roofline import collective_bytes, jaxpr_primitive_count
 
 cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=12)
-mesh = jax.make_mesh((2, 4), ("data", "model"))
+from repro.launch.mesh import parse_mesh_spec
+DATA, MODEL = parse_mesh_spec(os.environ.get("LP_SPEED_MESH", "2x4"))
+assert DATA * MODEL <= len(jax.devices()), (
+    f"mesh {DATA}x{MODEL} needs {DATA * MODEL} devices, the subprocess "
+    f"forces {len(jax.devices())}")
+mesh = jax.make_mesh((DATA, MODEL), ("data", "model"))
 MAXLEN = 512
 BATCH = 8
 STRUCTURAL_ONLY = os.environ.get("LP_SPEED_STRUCTURAL", "0") == "1"
 
 def build(plan):
-    ms = T.build_structure(cfg, plan=plan, tp=4)
+    ms = T.build_structure(cfg, plan=plan, tp=MODEL)
     sv = ServeConfig(max_len=MAXLEN, kv_mode="heads", cache_dtype=jnp.float32)
     fn, c_abs, c_specs, pc = make_sharded_serve_step(ms, mesh, sv, batch=BATCH)
     params = T.init_params(ms, jax.random.PRNGKey(0))
@@ -108,11 +113,13 @@ print("RESULT " + json.dumps(rows))
 """
 
 
-def run(structural_only: bool = False):
+def run(structural_only: bool = False, mesh: str = "2x4"):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
     env["LP_SPEED_STRUCTURAL"] = "1" if structural_only else "0"
+    env["LP_SPEED_MESH"] = mesh  # DxM: tp = M (the 2-ARs-per-pair claim is
+    # tp-degree-invariant; CI gates it at tp=4 and tp=2)
     r = subprocess.run([sys.executable, "-c", _CHILD], capture_output=True,
                        text=True, env=env, timeout=1200)
     assert r.returncode == 0, r.stdout + r.stderr
@@ -143,8 +150,12 @@ def run(structural_only: bool = False):
         # per-pair delta — the scatter-count gate lives in
         # benchmarks/serve_throughput.py --structural, counted in jaxpr.)
         assert base["attn_launches"] - row["attn_launches"] == pairs, (base, row)
-    C.save_result("lp_speed", {"rows": rows})
-    return {"rows": rows}
+    # Distinct file per mesh so the tp=2 sharded-structural run never
+    # clobbers the tp=4 baseline artifact (serve_throughput's _tp suffix
+    # convention); the payload records the mesh either way.
+    name = "lp_speed" if mesh == "2x4" else f"lp_speed_{mesh}"
+    C.save_result(name, {"mesh": mesh, "rows": rows})
+    return {"mesh": mesh, "rows": rows}
 
 
 if __name__ == "__main__":
@@ -153,4 +164,8 @@ if __name__ == "__main__":
     ap.add_argument("--structural", action="store_true",
                     help="skip wall-clock timing; assert only the AR-count "
                          "and launch-count invariants (CI gate)")
-    run(structural_only=ap.parse_args().structural)
+    ap.add_argument("--mesh", default="2x4",
+                    help="DxM subprocess device mesh (8 host devices); "
+                         "tp = M — e.g. 4x2 gates the claims at tp=2")
+    args = ap.parse_args()
+    run(structural_only=args.structural, mesh=args.mesh)

@@ -35,9 +35,24 @@ asserts the subsystem's invariants instead:
   (e) every prefix-hit request bit-identical to one-shot generate();
   (f) a preempted-then-resumed request bit-identical to its uninterrupted
       run (the engine also self-checks every replayed token).
+``--structural --mesh 1x2`` (the sharded-structural CI gate, needs
+XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the tp>1 half:
+  (g) launches == groups and scatters == 2*groups in the SHARD_MAP'd
+      paged decode program (one fused launch per paired phase per rank);
+  (h) page accounting balance is tp-invariant (same host-side scheduler);
+  (i) the tp>1 engine's staggered greedy streams are bit-identical to the
+      tp=1 engine AND to one-shot ``sharded_generate`` per request;
+  (j) the prefix cache auto-disables under tp>1 (radix-aware sharded
+      serving is a ROADMAP follow-on).
+
+Every structural run also folds its throughput/latency numbers into
+``benchmarks/results/BENCH_serve.json`` so successive PRs leave a
+comparable perf trajectory (uploaded as a CI artifact).
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -48,11 +63,14 @@ from benchmarks import common as C
 from repro.analysis.roofline import jaxpr_primitive_count
 from repro.configs import get_config, reduced_config
 from repro.core.lp import LPPlan, plan_range
+from repro.launch.mesh import make_serving_mesh
 from repro.model import attention as A
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
-from repro.serve import PagedEngine, PagedServeConfig, ServeConfig, generate
+from repro.serve import (PagedEngine, PagedServeConfig, ServeConfig,
+                         generate, sharded_generate)
 from repro.serve import paged_cache as PG
+from repro.serve.engine import make_sharded_serve_step
 
 PC = ParallelContext()
 
@@ -72,15 +90,41 @@ SHARED_LEN = 16
 TAIL_LEN = 8
 
 
-def _structure(n_pairs: int):
+def _structure(n_pairs: int, tp: int = 1):
     cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=N_LAYERS)
     plan = LPPlan(plan_range(cfg, 0, N_LAYERS).pairs[:n_pairs])
-    return cfg, T.build_structure(cfg, plan=plan, tp=1)
+    return cfg, T.build_structure(cfg, plan=plan, tp=tp)
 
 
-def _build(n_pairs: int):
-    cfg, ms = _structure(n_pairs)
+def _build(n_pairs: int, tp: int = 1):
+    # Param shapes are GLOBAL and tp-invariant for the smoke config (heads
+    # and vocab divide evenly), so one init serves every tp — which is what
+    # lets the tp sweep gate BIT-identity on the same weights.
+    cfg, ms = _structure(n_pairs, tp)
     return cfg, ms, T.init_params(ms, jax.random.PRNGKey(0))
+
+
+def _bench_summary(section: str, payload: dict) -> str:
+    """Fold one run's headline numbers into BENCH_serve.json (read-modify-
+    write): the per-PR perf trajectory CI uploads as an artifact."""
+    path = os.path.join(C.RESULTS, "BENCH_serve.json")
+    os.makedirs(C.RESULTS, exist_ok=True)
+    data = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            data = json.load(f)
+    data[section] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    return path
+
+
+def _drive_summary(m: dict, **extra) -> dict:
+    out = {"tok_per_s": m["tok_per_s"], "lat_p50_ms": m["lat_p50_ms"],
+           "lat_p99_ms": m["lat_p99_ms"], "ttft_p50_ms": m["ttft_p50_ms"],
+           "ttft_p99_ms": m["ttft_p99_ms"]}
+    out.update(extra)
+    return out
 
 
 def _workload(cfg, n_requests: int, rate: float, seed: int = 17):
@@ -241,7 +285,100 @@ def structural() -> dict:
     print("structural OK:", rows,
           f"| {len(reqs)} staggered requests bit-identical, "
           f"pages alloc={eng.pool.allocated_total} freed={eng.pool.freed_total}")
+    _bench_summary("tp1", _drive_summary(m))
     return {"rows": rows, "drive": m}
+
+
+# ---------------------------------------------------------------------------
+# Sharded structural gate (tp > 1 paged engine)
+# ---------------------------------------------------------------------------
+
+def _sharded_launch_and_write_counts(ms, mesh, n_slots: int):
+    """(pallas launches, cache-tensor scatters) in ONE traced SHARD_MAP'd
+    paged decode step — the per-rank counts of the tp>1 program (the
+    counter recurses into the shard_map jaxpr, scans weighted by trip
+    count)."""
+    psv = PagedServeConfig(n_slots=n_slots, page_size=PAGE_SIZE,
+                           n_pages=N_PAGES, max_len=MAX_LEN,
+                           cache_dtype=jnp.float32)
+    prev = A.get_decode_impl()
+    A.set_decode_impl("pallas")
+    try:
+        fn, c_abs, _, _ = make_sharded_serve_step(ms, mesh, None,
+                                                  batch=n_slots, paged=psv)
+        p_abs = jax.eval_shape(lambda: T.init_params(ms, jax.random.PRNGKey(0)))
+        i32 = jnp.int32
+        jaxpr = jax.make_jaxpr(fn)(
+            p_abs, c_abs, jax.ShapeDtypeStruct((n_slots,), i32),
+            jax.ShapeDtypeStruct((n_slots,), i32),
+            jax.ShapeDtypeStruct((n_slots, MAX_LEN // PAGE_SIZE), i32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+    finally:
+        A.set_decode_impl(prev)
+    return (jaxpr_primitive_count(jaxpr, "pallas_call"),
+            jaxpr_primitive_count(jaxpr, "scatter"))
+
+
+def structural_sharded(mesh_spec: str = "1x2", seed: int = 17) -> dict:
+    """The sharded-structural CI gate — see the module docstring, items
+    (g)-(j): per-rank launch counts, tp-invariant page accounting, tp>1
+    vs tp=1 vs one-shot sharded bit-identity, prefix auto-disable."""
+    mesh, m = make_serving_mesh(mesh_spec)
+    assert m > 1, f"--structural --mesh needs a model axis > 1, got {mesh_spec}"
+
+    # (g) one fused attention launch + 2 scatters per paired phase PER RANK.
+    rows = []
+    for n_pairs in (0, 3):
+        _, ms = _structure(n_pairs, tp=m)
+        launches, writes = _sharded_launch_and_write_counts(ms, mesh, N_SLOTS)
+        groups = N_LAYERS - n_pairs
+        assert launches == groups, (n_pairs, launches, groups)
+        assert writes == 2 * groups, (n_pairs, writes, groups)
+        rows.append({"pairs": n_pairs, "launches": launches,
+                     "cache_writes": writes})
+
+    # (h)+(i): identical staggered workload through the tp=1 and tp=m
+    # engines; every request's greedy stream must agree BITWISE, and both
+    # pools must drain with balanced accounting (checked every step).
+    cfg, ms1, params = _build(3, tp=1)
+    _, ms_tp = _structure(3, tp=m)
+    psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                           n_pages=N_PAGES, max_len=MAX_LEN,
+                           cache_dtype=jnp.float32)
+    reqs = _workload(cfg, 12, rate=4.0, seed=seed)
+    eng1 = PagedEngine(params, ms1, psv)
+    m1 = _drive(eng1, reqs)
+    eng2 = PagedEngine(params, ms_tp, psv, mesh=mesh)
+    m2 = _drive(eng2, reqs)
+    for rid in sorted(eng1.results):
+        assert (eng1.results[rid] == eng2.results[rid]).all(), rid
+    assert eng2.pool.live == 0
+    assert eng2.pool.allocated_total == eng2.pool.freed_total > 0
+    assert eng2.pool.allocated_total == eng1.pool.allocated_total
+
+    # (i) cross-check a subset against one-shot sharded generate() (the
+    # ring-cache reference under the same mesh).
+    sv = ServeConfig(max_len=MAX_LEN, temperature=0.0,
+                     cache_dtype=jnp.float32)
+    for rid, (_, prompt, max_new) in list(zip(sorted(eng2.results), reqs))[:4]:
+        ref = sharded_generate(params, prompt[None], max_new, ms=ms_tp,
+                               mesh=mesh, sv=sv)[0]
+        assert (eng2.results[rid] == ref).all(), rid
+
+    # (j) prefix sharing auto-disables under tp>1 (and stays on at tp=1).
+    psv_px = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                              n_pages=N_PAGES, max_len=MAX_LEN,
+                              cache_dtype=jnp.float32, prefix_cache=True)
+    assert PagedEngine(params, ms_tp, psv_px, mesh=mesh).prefix is None
+    assert PagedEngine(params, ms1, psv_px).prefix is not None
+
+    out = {"mesh": mesh_spec, "rows": rows, "tp1": m1, f"tp{m}": m2}
+    print(f"sharded-structural OK (mesh {mesh_spec}): launches==groups "
+          f"{rows} | {len(reqs)} staggered requests bit-identical at "
+          f"tp={m} vs tp=1 vs sharded one-shot | prefix auto-disabled")
+    _bench_summary(f"tp{m}", _drive_summary(m2))
+    C.save_result("serve_throughput_sharded", {"structural": out})
+    return out
 
 
 def structural_shared_prefix(seed: int = 17) -> dict:
@@ -306,6 +443,8 @@ def structural_shared_prefix(seed: int = 17) -> dict:
     out = {"drive": m, "prefix": stats,
            "preemptions": eng_p.sched.preemptions_total,
            "replay_tokens": eng_p.counters["replay_tokens"]}
+    _bench_summary("shared_prefix",
+                   _drive_summary(m, hit_rate=stats["hit_rate"]))
     print(f"prefix-structural OK: hit_rate={stats['hit_rate']} "
           f"hits={stats['prefix_hits']} "
           f"prefill={stats['prefill_tokens']} saved={stats['hit_tokens']} | "
@@ -361,12 +500,14 @@ def _warm_shared(eng: PagedEngine, cfg, seed: int):
 
 def run(structural_only: bool = False, *, n_requests: int = 32,
         rate: float = 2.0, shared_prefix: bool = False, seed: int = 17,
-        preempt_after: int = 0, pages: int = 0):
+        preempt_after: int = 0, pages: int = 0, mesh: str = ""):
     n_pages = pages if pages > 0 else N_PAGES
     if structural_only:
-        # --structural and --structural --shared-prefix are SEPARATE CI
-        # steps; the prefix run gates only the prefix/preemption half so
-        # the job does not pay the base gate twice.
+        # --structural, --structural --shared-prefix and --structural
+        # --mesh AxB are SEPARATE CI steps; each gates only its own half so
+        # no job pays another's assertions twice.
+        if mesh:
+            return structural_sharded(mesh, seed)
         res = (structural_shared_prefix(seed) if shared_prefix
                else structural())
         C.save_result("serve_throughput", {"structural": res})
@@ -394,30 +535,39 @@ def run(structural_only: bool = False, *, n_requests: int = 32,
         print(f"prefix-cache serving speedup: {out['prefix_speedup']}x")
         C.save_result("serve_throughput", {"shared_prefix": out})
         return out
+    # Wall-clock serving (optionally sharded: --mesh DxM runs the engine
+    # under shard_map with tp = M; "1x1" keeps the plain tp=1 engine — the
+    # knob the EXPERIMENTS.md tp sweep drives).
+    tp = 1
+    mesh_dev = None
+    if mesh:
+        mesh_dev, tp = make_serving_mesh(mesh)
     out = {}
     for label, n_pairs in (("vanilla", 0), ("lp", 3)):
-        cfg, ms, params = _build(n_pairs)
+        cfg, ms, params = _build(n_pairs, tp=tp)
         psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
                                n_pages=n_pages, max_len=MAX_LEN,
                                cache_dtype=jnp.float32,
                                preempt_after=preempt_after)
-        eng = PagedEngine(params, ms, psv)
+        eng = PagedEngine(params, ms, psv, mesh=mesh_dev)
         reqs = _workload(cfg, n_requests, rate, seed)
         _warm(eng, PROMPT_LENS)
         m = _drive(eng, reqs)
         m["eff_depth"] = ms.effective_depth
+        m["tp"] = tp
         m["preemptions"] = eng.sched.preemptions_total
         m["replay_tokens"] = eng.counters["replay_tokens"]
         out[label] = m
-        print(f"{label:8s} depth={m['eff_depth']:2d} "
+        print(f"{label:8s} depth={m['eff_depth']:2d} tp={tp} "
               f"tok/s={m['tok_per_s']:8.1f} p50={m['lat_p50_ms']:7.1f}ms "
               f"p99={m['lat_p99_ms']:7.1f}ms ttft50={m['ttft_p50_ms']:6.1f}ms "
               f"occ={m['occ_mean']:.2f}/{m['occ_max']:.2f} steps={m['steps']} "
               f"preempt={m['preemptions']}")
     out["lp_speedup"] = round(out["lp"]["tok_per_s"]
                               / out["vanilla"]["tok_per_s"], 3)
-    print(f"LP-on vs LP-off serving throughput: {out['lp_speedup']}x")
-    C.save_result("serve_throughput", out)
+    print(f"LP-on vs LP-off serving throughput (tp={tp}): "
+          f"{out['lp_speedup']}x")
+    C.save_result("serve_throughput" + (f"_tp{tp}" if tp > 1 else ""), out)
     return out
 
 
@@ -443,7 +593,12 @@ if __name__ == "__main__":
                     help="pool size incl. garbage page (0 = full occupancy "
                          f"default {N_PAGES}); small pools force queueing "
                          "and, with --preempt-after, preemption")
+    ap.add_argument("--mesh", default="",
+                    help="1xM device mesh (e.g. 1x2): run the engine under "
+                         "shard_map with tp=M (needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8); with "
+                         "--structural this is the sharded-structural gate")
     args = ap.parse_args()
     run(structural_only=args.structural, n_requests=args.requests,
         rate=args.rate, shared_prefix=args.shared_prefix, seed=args.seed,
-        preempt_after=args.preempt_after, pages=args.pages)
+        preempt_after=args.preempt_after, pages=args.pages, mesh=args.mesh)

@@ -40,7 +40,10 @@ Grid: (rows, nL|nPages), innermost sequential. The valid horizon ``t`` is a
 scalar-prefetch operand (SMEM) so cache positions beyond the current decode
 step are masked without recompiling per step; the paged kernels take a
 PER-ROW horizon ``t[b]`` (continuous batching: every slot sits at its own
-position). ``interpret`` defaults to auto-detection (compiled on TPU,
+position) and an optional ``head_map`` (third scalar-prefetch operand)
+mapping local kv heads to stored pool heads, which is how replicated-kv TP
+ranks select their head in-kernel instead of deferring to the XLA gather
+path. ``interpret`` defaults to auto-detection (compiled on TPU,
 interpreter elsewhere — repro.compat).
 """
 from __future__ import annotations
@@ -158,8 +161,8 @@ def decode_attention_pair(q, k, v, t_valid, *, block_l=256, interpret=None):
 # Paged variant: grid over block tables instead of a contiguous ring
 # ---------------------------------------------------------------------------
 
-def _paged_kernel(bt_ref, t_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc,
-                  acc_sc, *, ps, n_pg, B, hkv, scale):
+def _paged_kernel(bt_ref, t_ref, hm_ref, q_ref, k_ref, v_ref, o_ref, m_sc,
+                  l_sc, acc_sc, *, ps, n_pg, B, hkv, scale):
     r = pl.program_id(0)
     j = pl.program_id(1)
     b = (r // hkv) % B  # which request's horizon gates this row
@@ -198,24 +201,35 @@ def _paged_kernel(bt_ref, t_ref, q_ref, k_ref, v_ref, o_ref, m_sc, l_sc,
 
 
 def _launch_paged(qr, k_pages, v_pages, block_tables, t_valid, *, n_half,
-                  B, hkv, interpret):
+                  B, hkv, head_map=None, interpret):
     """qr: [R, g, hd] flattened rows (R = nP*B*hkv, pair-major); k/v_pages:
     [nP*n_half, ps, Hkv, hd] with the pair axis folded into the page axis;
     block_tables: [B, n_pg]; t_valid: [B]. The block table is a scalar-
     prefetch operand: the k/v index maps translate (row, page-step) ->
     physical page id, so each row streams exactly the pages its request
-    owns — the paged analogue of the ring kernel's sequential L walk."""
+    owns — the paged analogue of the ring kernel's sequential L walk.
+
+    ``head_map`` ([hkv] int32, default identity) maps a row's LOCAL kv-head
+    index to the STORED head it streams — a third scalar-prefetch operand
+    feeding the k/v index maps. This is how a TP rank with REPLICATED kv
+    heads (n_kv < tp) selects its kv head(s) inside the kernel: the pool
+    keeps all n_kv stored heads and each rank's rows pick theirs, so no
+    per-rank kv gather is ever materialised (the selection the XLA path
+    does with ``attention.select_local_kv``)."""
     R, g, hd = qr.shape
     ps = k_pages.shape[1]
     n_pg = block_tables.shape[1]
     bt = jnp.asarray(block_tables, jnp.int32)
     t_arr = jnp.asarray(t_valid, jnp.int32).reshape(B)
+    if head_map is None:
+        head_map = jnp.arange(hkv, dtype=jnp.int32)
+    hm = jnp.asarray(head_map, jnp.int32).reshape(hkv)
 
-    def kv_index(r, j, bt_ref, t_ref):
+    def kv_index(r, j, bt_ref, t_ref, hm_ref):
         half = r // (B * hkv)            # 0 (single / first layer) or 1
         b = (r // hkv) % B
         h = r % hkv
-        return (half * n_half + bt_ref[b, j], 0, h, 0)
+        return (half * n_half + bt_ref[b, j], 0, hm_ref[h], 0)
 
     kern = functools.partial(_paged_kernel, ps=ps, n_pg=n_pg, B=B, hkv=hkv,
                              scale=hd ** -0.5)
@@ -223,12 +237,14 @@ def _launch_paged(qr, k_pages, v_pages, block_tables, t_valid, *, n_half,
         kern,
         out_shape=jax.ShapeDtypeStruct((R, g, hd), qr.dtype),
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=2,
+            num_scalar_prefetch=3,
             grid=(R, n_pg),
-            in_specs=[pl.BlockSpec((1, g, hd), lambda r, j, bt, t: (r, 0, 0)),
+            in_specs=[pl.BlockSpec((1, g, hd),
+                                   lambda r, j, bt, t, hm: (r, 0, 0)),
                       pl.BlockSpec((1, ps, 1, hd), kv_index),
                       pl.BlockSpec((1, ps, 1, hd), kv_index)],
-            out_specs=pl.BlockSpec((1, g, hd), lambda r, j, bt, t: (r, 0, 0)),
+            out_specs=pl.BlockSpec((1, g, hd),
+                                   lambda r, j, bt, t, hm: (r, 0, 0)),
             scratch_shapes=[pltpu.VMEM((g,), jnp.float32),
                             pltpu.VMEM((g,), jnp.float32),
                             pltpu.VMEM((g, hd), jnp.float32)],
@@ -236,31 +252,34 @@ def _launch_paged(qr, k_pages, v_pages, block_tables, t_valid, *, n_half,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=resolve_interpret(interpret),
-    )(bt, t_arr, qr, k_pages, v_pages)
+    )(bt, t_arr, hm, qr, k_pages, v_pages)
 
 
 def decode_attention_paged(q, k_pages, v_pages, block_tables, t_valid, *,
-                           interpret=None):
+                           head_map=None, interpret=None):
     """Paged decode attention, one layer. q: [B, Hkv, g, hd]; k_pages,
     v_pages: [n_pages, page_size, Hkv, hd]; block_tables: [B, n_pg] int32;
-    t_valid: [B] int32 per-slot horizons. Returns [B, Hkv, g, hd]."""
+    t_valid: [B] int32 per-slot horizons; head_map: optional [Hkv] int32
+    mapping q's local kv-head axis to stored pool heads (replicated-kv TP
+    ranks — see _launch_paged). Returns [B, Hkv, g, hd]."""
     B, Hkv, g, hd = q.shape
     qr = q.reshape(B * Hkv, g, hd)
     out = _launch_paged(qr, k_pages, v_pages, block_tables, t_valid,
                         n_half=k_pages.shape[0], B=B, hkv=Hkv,
-                        interpret=interpret)
+                        head_map=head_map, interpret=interpret)
     return out.reshape(B, Hkv, g, hd)
 
 
 def decode_attention_pair_paged(q, k_pages, v_pages, block_tables, t_valid,
-                                *, interpret=None):
+                                *, head_map=None, interpret=None):
     """Fused paged LP-pair decode: ONE launch for both halves.
 
     q: [2, B, Hkv, g, hd]; k_pages, v_pages: [2, n_pages, page_size, Hkv,
     hd] (the stacked pair pool); block_tables: [B, n_pg] SHARED by both
     halves (an LP pair sits at the same stream position, so its two layers
-    occupy the same page indices of their own half); t_valid: [B] int32.
-    Returns [2, B, Hkv, g, hd].
+    occupy the same page indices of their own half); t_valid: [B] int32;
+    head_map: optional [Hkv] int32 local-head -> stored-head selection,
+    shared by both halves. Returns [2, B, Hkv, g, hd].
     """
     P2, B, Hkv, g, hd = q.shape
     assert P2 == 2 and k_pages.shape[0] == 2, (q.shape, k_pages.shape)
@@ -269,5 +288,5 @@ def decode_attention_pair_paged(q, k_pages, v_pages, block_tables, t_valid,
     kf = k_pages.reshape(2 * n_half, *k_pages.shape[2:])
     vf = v_pages.reshape(2 * n_half, *v_pages.shape[2:])
     out = _launch_paged(qr, kf, vf, block_tables, t_valid, n_half=n_half,
-                        B=B, hkv=Hkv, interpret=interpret)
+                        B=B, hkv=Hkv, head_map=head_map, interpret=interpret)
     return out.reshape(2, B, Hkv, g, hd)

@@ -37,3 +37,41 @@ def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
         n *= s
     import numpy as np
     return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def parse_mesh_spec(spec: str):
+    """'DxM' -> (data, model) sizes; the CLI mesh grammar shared by
+    launch/serve.py, benchmarks/serve_throughput.py and lp_speed.py."""
+    try:
+        d, m = (int(x) for x in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"mesh spec must be DxM (e.g. 1x2), got {spec!r}")
+    if d < 1 or m < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {spec!r}")
+    return d, m
+
+
+def make_serving_mesh(spec: str):
+    """(mesh | None, model_size) from a 'DxM' CLI spec.
+
+    '1x1' means plain single-device execution (mesh None). Any D > 1 is
+    REJECTED instead of silently accepted: serving shards only over the
+    model axis today, so a data axis would either be dropped (engine
+    inputs are replicated — every data rank duplicates identical work) or
+    crash shard_map on batches not divisible by D (the one-shot prefill
+    dp-shards its batch). Insufficient devices exit with the XLA_FLAGS
+    incantation rather than an opaque reshape error.
+    """
+    d, m = parse_mesh_spec(spec)
+    if d > 1:
+        raise ValueError(
+            f"mesh {spec!r}: serving shards only the model axis; use 1xM "
+            "(data-parallel serving means running engine replicas)")
+    if m == 1:
+        return None, 1
+    n = len(jax.devices())
+    if n < m:
+        raise SystemExit(
+            f"mesh {spec} needs {m} devices, found {n}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={max(8, m)}")
+    return jax.make_mesh((1, m), ("data", "model")), m

@@ -11,9 +11,15 @@ requests arrive staggered, share pages, finish independently):
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
         --eff-depth 20 --continuous --requests 16 --new-tokens 32
 
-In-container this runs the reduced config on CPU; on a real slice the same
-code path runs under shard_map via serve.engine.make_sharded_serve_step
-(exercised by the decode-shape dry-run cells).
+Sharded continuous batching (tp > 1: the page pool shards its kv-head axis
+over the model axis, scheduling stays host-side):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch tinyllama-1.1b --eff-depth 20 \
+        --continuous --mesh 1x2 --requests 16 --new-tokens 32
+
+In-container this runs the reduced config on CPU host devices; on a real
+slice the same shard_map programs run unchanged.
 """
 from __future__ import annotations
 
@@ -26,9 +32,11 @@ import numpy as np
 
 from repro.configs import get_config, reduced_config
 from repro.core.lp import EMPTY_PLAN, plan_for_depth
+from repro.launch.mesh import make_serving_mesh
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
-from repro.serve import PagedEngine, PagedServeConfig, ServeConfig, generate
+from repro.serve import (PagedEngine, PagedServeConfig, ServeConfig,
+                         generate, make_sharded_generate)
 
 
 def main() -> None:
@@ -55,7 +63,12 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="(--continuous) radix prefix sharing over whole "
-                         "cache pages (--no-prefix-cache disables)")
+                         "cache pages (--no-prefix-cache disables; "
+                         "auto-disabled under tp > 1)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="1xM device mesh; M > 1 runs the shard_map "
+                         "programs with tp=M — needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count>=M on CPU")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,7 +76,8 @@ def main() -> None:
         cfg = reduced_config(cfg)
     plan = (plan_for_depth(cfg, args.eff_depth) if args.eff_depth
             else EMPTY_PLAN)
-    ms = T.build_structure(cfg, plan=plan, tp=1)
+    mesh, mesh_m = make_serving_mesh(args.mesh)
+    ms = T.build_structure(cfg, plan=plan, tp=mesh_m)
     params = T.init_params(ms, jax.random.PRNGKey(0))
     pc = ParallelContext()
 
@@ -77,7 +91,7 @@ def main() -> None:
             prefill_token_budget=args.prefill_token_budget,
             prefix_cache=args.prefix_cache,
             preempt_after=args.preempt_after)
-        eng = PagedEngine(params, ms, psv)
+        eng = PagedEngine(params, ms, psv, mesh=mesh)
         key = jax.random.PRNGKey(1)
         # A shared head (page-aligned) + per-request tails: realistic
         # system-prompt traffic that exercises the radix cache when on.
@@ -96,6 +110,7 @@ def main() -> None:
         toks = sum(len(v) for v in res.values())
         c = eng.counters
         print(f"arch={cfg.name} eff_depth={ms.effective_depth}/{cfg.n_layers} "
+              f"tp={ms.tp} "
               f"continuous: {args.requests} reqs x {args.new_tokens} new, "
               f"slots={psv.n_slots} pages={psv.n_pages - 1}x{ps} "
               f"prefix_cache={'on' if eng.prefix is not None else 'off'} "
@@ -114,6 +129,23 @@ def main() -> None:
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (args.batch, args.prompt_len), 0,
                                  cfg.vocab_size)
+    if mesh is not None:
+        assert args.temperature == 0.0, "--mesh one-shot is greedy-only"
+        # Build the loop ONCE so the warm call compiles the programs the
+        # timed call reuses.
+        gen = make_sharded_generate(ms, mesh, sv, batch=args.batch,
+                                    prompt_len=args.prompt_len)
+        out = gen(params, prompts, args.new_tokens)    # warm + compile
+        t0 = time.time()
+        out = gen(params, prompts, args.new_tokens)
+        run = time.time() - t0
+        tput = args.batch * args.new_tokens / run
+        print(f"arch={cfg.name} eff_depth={ms.effective_depth}/"
+              f"{cfg.n_layers} tp={ms.tp} batch={args.batch} "
+              f"new={args.new_tokens}")
+        print(f"run={run:.3f}s throughput={tput:.1f} tok/s")
+        print("sample:", out[0, :16].tolist())
+        return
     extras = {}
     if cfg.prefix_len:
         extras["prefix"] = jnp.zeros((args.batch, cfg.prefix_len, cfg.d_model))

@@ -299,6 +299,27 @@ def select_local_kv_pair(kv, dims: AttnDims, pc: ParallelContext):
     return select_local_kv(kv, dims, pc, head_axis=3)
 
 
+def paged_head_map(dims: AttnDims, pc: ParallelContext):
+    """Local-head -> STORED-head map for the paged decode kernels, or None
+    when the identity applies (tp == 1, or kv heads sharded so each rank's
+    pool shard already holds exactly its heads).
+
+    This is ``select_local_kv`` expressed as an index map instead of a
+    gather: the paged pool keeps all stored kv heads replicated across
+    ranks, and the kernel's BlockSpec index map streams only the head(s)
+    this rank's q rows need (repro.kernels.decode_attention._launch_paged),
+    so replicated-kv TP never materialises a per-rank kv selection on the
+    Pallas path.
+    """
+    if dims.tp == 1 or dims.kv_sharded:
+        return None
+    if dims.per_head:
+        return rank_head_kv_map(dims, pc)            # [hq], g = 1
+    base = pc.tp_index() * dims.hq
+    kv_idx = jnp.clip(base // dims.group, 0, dims.hkv - 1)
+    return kv_idx[None]                              # [1], g = hq
+
+
 def core_layout(dims: AttnDims) -> Tuple[int, int]:
     """(Hk_eff, g) of the grouped core for one layer's local heads."""
     if dims.tp == 1 or dims.kv_sharded:
@@ -456,6 +477,11 @@ def decode_attn_paged(p, xn, k_pages, v_pages, t, block_tables, cfg,
     Only plain causal kinds page (slot == t); window/chunk rings are
     rejected upstream (serve.paged_cache.validate_paged_support).
 
+    TP: kv-sharded pools hold this rank's heads (identity head map);
+    replicated-kv ranks select their kv head(s) in-kernel through
+    ``paged_head_map`` on the Pallas path and ``select_local_kv`` on the
+    XLA gather path — both run under tp > 1.
+
     Returns (partial_out, new_k_pages, new_v_pages).
     """
     B = xn.shape[1] if pair else xn.shape[0]
@@ -469,7 +495,6 @@ def decode_attn_paged(p, xn, k_pages, v_pages, t, block_tables, cfg,
     off = t % ps
     Hk, g = core_layout(dims)
     scale = dims.hd ** -0.5
-    kernel_ok = dims.tp == 1 or dims.kv_sharded  # no kv-head gather needed
 
     if pair:
         hkv_st = k_pages.shape[3]
@@ -480,11 +505,12 @@ def decode_attn_paged(p, xn, k_pages, v_pages, t, block_tables, cfg,
         k_pages = k_pages.at[:, page_of, off].set(k2.astype(k_pages.dtype))
         v_pages = v_pages.at[:, page_of, off].set(v2.astype(v_pages.dtype))
         qh = q.reshape(B, 2, Hk, g, dims.hd)           # pair-major heads, S=1
-        if _DECODE_IMPL == "pallas" and kernel_ok:
+        if _DECODE_IMPL == "pallas":
             from repro.kernels import ops as KOPS
             qp = qh.transpose(1, 0, 2, 3, 4)           # [2,B,Hk,g,hd]
             o = KOPS.decode_attention_pair_paged(
-                qp, k_pages, v_pages, block_tables, t).astype(xn.dtype)
+                qp, k_pages, v_pages, block_tables, t,
+                paged_head_map(dims, pc)).astype(xn.dtype)
             o = o.transpose(1, 0, 2, 3, 4).reshape(B, 1, 2 * dims.hq, dims.hd)
             return output_proj(p, o, dims, pair=True), k_pages, v_pages
         # XLA path: gather the slots' pages back into per-request sequences
@@ -507,10 +533,11 @@ def decode_attn_paged(p, xn, k_pages, v_pages, t, block_tables, cfg,
     k_pages = k_pages.at[page_of, off].set(k[:, 0].astype(k_pages.dtype))
     v_pages = v_pages.at[page_of, off].set(v[:, 0].astype(v_pages.dtype))
     qh = q.reshape(B, 1, Hk, g, dims.hd)
-    if _DECODE_IMPL == "pallas" and kernel_ok:
+    if _DECODE_IMPL == "pallas":
         from repro.kernels import ops as KOPS
         o = KOPS.decode_attention_paged(
-            qh[:, 0], k_pages, v_pages, block_tables, t).astype(xn.dtype)
+            qh[:, 0], k_pages, v_pages, block_tables, t,
+            paged_head_map(dims, pc)).astype(xn.dtype)
         o = o.reshape(B, 1, dims.hq, dims.hd)
         return output_proj(p, o, dims, pair=False), k_pages, v_pages
     kg = jnp.take(k_pages, block_tables, axis=0)

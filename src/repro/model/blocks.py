@@ -480,12 +480,20 @@ def apply_group_decode(gp, x, cache, t, *, cfg, group: Group, dims,
     per-slot positions, attention k/v entries are page pools indirected
     through ``block_tables`` [B, n_pg], and state entries stay slot-indexed
     with B == n_slots. The fused pair path is preserved — one
-    decode_attn_paged(pair=True) call per stacked pair.
+    decode_attn_paged(pair=True) call per stacked pair. Under tp > 1 the
+    pool shards kv heads over the model axis exactly like the ring cache
+    (replicated when n_kv < tp, with in-kernel head selection); a
+    seq-sharded page pool has no block-table analogue, so kv_mode="seq"
+    is rejected rather than silently ignored.
     """
     new_cache: Dict[str, Any] = {}
     mixer = group.specs[0].mixer
     nP = 2 if group.pair else 1
     paged = cache_layout == "paged"
+    if paged and kv_mode != "heads":
+        raise NotImplementedError(
+            f"paged decode supports kv_mode='heads' only (got {kv_mode!r}): "
+            "pages shard kv heads over the model axis, not the sequence")
     fused = pair_cache_stacked(group)
     if fused:  # tolerate caches emitted under the per-layer layout
         fused = ("k" if mixer.startswith("attn") else "conv") in cache

@@ -176,6 +176,10 @@ def apply_stack_decode(seg_params, x, caches, t, segments, *, cfg, dims, pc,
     through ``block_tables`` and ``t`` is the per-slot position vector; the
     scan-over-count machinery is layout-agnostic (the pool rides in the
     carry exactly like the ring cache, so XLA still aliases the buffers).
+    That layout-agnosticism is what makes the sharded paged engine free
+    here: under shard_map each rank scans its LOCAL pool shard (kv heads
+    cut over the model axis) with the same block tables, so the carry
+    aliasing — decode holds ONE pool copy per rank — survives tp > 1.
     """
     new_caches = []
     gather_fns = gather_fns or [None] * len(segments)

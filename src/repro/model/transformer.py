@@ -325,13 +325,17 @@ def decode_step(params, tok, caches, t, *, ms: ModelStructure,
     cache_layout="paged" (continuous batching — repro.serve): ``t`` is a
     [B] int32 VECTOR of per-slot positions, ``caches`` is the paged pool
     tree (serve.paged_cache) and ``block_tables`` [B, n_pg] carries the
-    slot -> page indirection. The ring path is untouched.
+    slot -> page indirection. The ring path is untouched. The same body
+    runs inside shard_map on a tp > 1 mesh: tok/t/block_tables arrive
+    replicated (host-side scheduling is tp-agnostic) and only the pool's
+    kv-head axis is sharded (serve.engine.make_sharded_serve_step).
     """
     cfg = ms.cfg
     dpc = pc.with_sp(False)  # decode never uses sequence parallelism
     if cache_layout == "paged":
         assert block_tables is not None
         t = jnp.asarray(t, jnp.int32)
+        assert t.ndim == 1, f"paged decode takes per-slot positions, got {t.shape}"
         pos = t[:, None]          # per-slot positions for embed/rope
     else:
         pos = jnp.full((tok.shape[0], 1), t, jnp.int32)

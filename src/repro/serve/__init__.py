@@ -6,8 +6,10 @@ from repro.serve.engine import (  # noqa: F401
     generate,
     make_prefill,
     make_serve_step,
+    make_sharded_generate,
     make_sharded_prefill,
     make_sharded_serve_step,
+    sharded_generate,
 )
 from repro.serve.prefix_cache import (  # noqa: F401
     PrefixCache,

@@ -37,6 +37,14 @@ youngest running request: its tokens park on the Request, its whole
 written pages are donated (reclaimable, radix-hittable at resume), and
 resume replays the parked positions through the regular decode program —
 the engine asserts every replayed token reproduces the parked one.
+
+Sharded paged serving (``PagedEngine(mesh=...)``): the same engine loop
+drives shard_map-compiled programs on a tp > 1 mesh. The page pool shards
+its kv-head axis over the "model" axis exactly like the ring cache, every
+host-side structure (scheduler, block tables, positions, page ids) is
+tp-agnostic, and greedy decode streams stay bit-identical to the tp=1
+engine and to one-shot ``sharded_generate`` (the sharded-structural CI
+gate). Prefix sharing auto-disables under tp > 1 for now.
 """
 from __future__ import annotations
 
@@ -48,6 +56,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
@@ -136,6 +145,59 @@ def generate(params, prompts, n_new: int, *, ms: T.ModelStructure,
 # Continuous batching over the paged pair-KV cache pool
 # ---------------------------------------------------------------------------
 
+def make_paged_decode_fn(ms: T.ModelStructure, pc: ParallelContext, psv):
+    """Local paged decode step: (params, caches, tok [n_slots], pos
+    [n_slots], block_tables, key) -> (next_tok [n_slots], caches).
+
+    The SAME body runs under plain jit (tp=1 engine) and inside shard_map
+    over a tp mesh (``make_sharded_serve_step(paged=...)``): tok/pos/block
+    tables are replicated host-side inputs, the pool's kv-head axis is the
+    only sharded dim, and sampling is vocab-parallel so full logits never
+    materialise.
+    """
+    def f(params, caches, tok, pos, bt, key):
+        logits, caches = T.decode_step(
+            params, tok, caches, pos, ms=ms, pc=pc,
+            cache_layout="paged", block_tables=bt)
+        if psv.temperature > 0:
+            nxt = E.vocab_parallel_sample(logits, key, psv.temperature, pc)
+        else:
+            nxt = E.vocab_parallel_argmax(logits, pc)
+        return nxt.astype(jnp.int32), caches
+
+    return f
+
+
+def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
+                          prompt_len: int):
+    """Local exact-length prefill + page scatter: (params, caches, prompt
+    [1, prompt_len], page_ids, slot, key) -> (first_tok [1], caches). The
+    cache emission length rounds up to whole pages; the forward itself is
+    the exact prompt — no padding (the bit-identity contract). Shared by
+    the tp=1 jit and the shard_map wrapper (sp stays off: exact odd-length
+    prompts do not split over ranks)."""
+    n_pg = -(-prompt_len // psv.page_size)
+    emit_len = n_pg * psv.page_size
+
+    def f(params, caches, prompt, page_ids, slot, key):
+        logits, _, seq = T.forward_full(
+            params, prompt, ms=ms, pc=pc, emit_cache=True,
+            max_len=emit_len, kv_mode="heads")
+        # Same cast T.prefill applies to the ring cache.
+        seq = jax.tree.map(
+            lambda c: c.astype(psv.cache_dtype)
+            if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
+        last = logits[:, prompt_len - 1]
+        if psv.temperature > 0:
+            tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
+        else:
+            tok0 = E.vocab_parallel_argmax(last, pc)
+        caches = PG.scatter_prefill(caches, seq, page_ids, slot)
+        return tok0.astype(jnp.int32), caches
+
+    return f
+
+
 @dataclass(frozen=True)
 class PagedServeConfig:
     """Static geometry of the continuous-batching engine.
@@ -189,29 +251,57 @@ class PagedEngine:
     this engine's: prefill runs the identical forward at the exact prompt
     length, decode runs the identical per-row math (paged gather + same
     cores), and every cross-request interaction is row-independent.
+
+    ``mesh``: run the compiled programs under shard_map on a tp > 1 mesh
+    (``ms`` must be built with the matching tp). The page pool shards its
+    kv-head axis over the model axis like the ring cache; scheduling,
+    block tables and per-slot positions stay host-side and tp-agnostic.
+    The radix prefix cache auto-disables under tp > 1 for now — the
+    suffix-prefill ctx path assumes replicated kv (radix-aware sharded
+    serving is a ROADMAP follow-on) — while preemption still works via
+    full re-prefill + bit-exact decode replay.
     """
 
     def __init__(self, params, ms: T.ModelStructure, psv: PagedServeConfig,
-                 *, pc: Optional[ParallelContext] = None, key=None):
+                 *, pc: Optional[ParallelContext] = None, key=None,
+                 mesh=None):
         assert psv.max_len % psv.page_size == 0, (psv.max_len, psv.page_size)
         assert psv.n_slots >= 1
         PG.validate_paged_support(ms, psv.max_len)
-        self.params = params
         self.ms = ms
         self.psv = psv
-        self.pc = pc if pc is not None else ParallelContext()
+        self.mesh = mesh
+        if mesh is not None:
+            assert pc is None, "pc is derived from mesh; pass one or the other"
+            self.pc = make_context(mesh, sp=False)
+            assert self.pc.tp_size == ms.tp, (
+                f"mesh model axis ({self.pc.tp_size}) != ms.tp ({ms.tp})")
+            self.params = jax.device_put(params, _tree_shardings(
+                mesh, T.param_pspecs(ms)))
+        else:
+            self.pc = pc if pc is not None else ParallelContext()
+            self.params = params
         self.pool = PagePool(psv.n_pages)
         self.prefix = (PrefixCache(psv.page_size)
-                       if psv.prefix_cache and self._prefix_eligible(ms)
+                       if psv.prefix_cache and ms.tp == 1
+                       and self._prefix_eligible(ms)
                        else None)
         self.sched = Scheduler(
             n_slots=psv.n_slots, pool=self.pool, page_size=psv.page_size,
             max_len=psv.max_len,
             prefill_token_budget=psv.prefill_token_budget,
             prefix_cache=self.prefix, preempt_after=psv.preempt_after)
-        self.caches = PG.init_paged_caches(
-            ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
-            page_size=psv.page_size, dtype=psv.cache_dtype)
+        if mesh is not None:
+            c_abs, c_specs = PG.paged_cache_meta(
+                ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
+                page_size=psv.page_size, dtype=psv.cache_dtype)
+            self.caches = jax.tree.map(
+                lambda a, sh: jax.device_put(jnp.zeros(a.shape, a.dtype), sh),
+                c_abs, _tree_shardings(mesh, c_specs))
+        else:
+            self.caches = PG.init_paged_caches(
+                ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
+                page_size=psv.page_size, dtype=psv.cache_dtype)
         P_slot = psv.pages_per_slot
         self.block_tables = np.full((psv.n_slots, P_slot), PG.GARBAGE_PAGE,
                                     np.int32)
@@ -244,45 +334,25 @@ class PagedEngine:
 
     # -- compiled programs ---------------------------------------------
     def _make_decode(self):
-        ms, pc, psv = self.ms, self.pc, self.psv
-
-        def f(params, caches, tok, pos, bt, key):
-            logits, caches = T.decode_step(
-                params, tok, caches, pos, ms=ms, pc=pc,
-                cache_layout="paged", block_tables=bt)
-            if psv.temperature > 0:
-                nxt = E.vocab_parallel_sample(logits, key, psv.temperature, pc)
-            else:
-                nxt = E.vocab_parallel_argmax(logits, pc)
-            return nxt.astype(jnp.int32), caches
-
-        return jax.jit(f, donate_argnums=(1,))
+        if self.mesh is not None:
+            fn, _, _, _ = make_sharded_serve_step(
+                self.ms, self.mesh, None, batch=self.psv.n_slots,
+                paged=self.psv)
+            return fn
+        local = make_paged_decode_fn(self.ms, self.pc, self.psv)
+        return jax.jit(local, donate_argnums=(1,))
 
     def _prefill_fn(self, prompt_len: int):
         """Exact-length prefill + page scatter, compiled once per distinct
         prompt length (the cache emission length rounds up to whole pages;
         the forward itself is the exact prompt — no padding)."""
-        ms, pc, psv = self.ms, self.pc, self.psv
-        n_pg = -(-prompt_len // psv.page_size)
-        emit_len = n_pg * psv.page_size
-
-        def f(params, caches, prompt, page_ids, slot, key):
-            logits, _, seq = T.forward_full(
-                params, prompt, ms=ms, pc=pc, emit_cache=True,
-                max_len=emit_len, kv_mode="heads")
-            # Same cast T.prefill applies to the ring cache.
-            seq = jax.tree.map(
-                lambda c: c.astype(psv.cache_dtype)
-                if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
-            last = logits[:, prompt_len - 1]
-            if psv.temperature > 0:
-                tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
-            else:
-                tok0 = E.vocab_parallel_argmax(last, pc)
-            caches = PG.scatter_prefill(caches, seq, page_ids, slot)
-            return tok0.astype(jnp.int32), caches
-
-        return jax.jit(f, donate_argnums=(1,))
+        if self.mesh is not None:
+            fn, _, _ = make_sharded_prefill(
+                self.ms, self.mesh, None, batch=1, prompt_len=prompt_len,
+                paged=self.psv)
+            return fn
+        local = make_paged_prefill_fn(self.ms, self.pc, self.psv, prompt_len)
+        return jax.jit(local, donate_argnums=(1,))
 
     def _suffix_fn(self, n_ctx_pages: int, suffix_len: int):
         """Prefix-hit prefill: gather the matched pages as read-only
@@ -295,6 +365,7 @@ class PagedEngine:
         program writes only ``sfx_ids`` pages, never ``ctx_ids``.
         """
         ms, pc, psv = self.ms, self.pc, self.psv
+        assert ms.tp == 1, "prefix sharing is tp=1 only (auto-disabled)"
         ps = psv.page_size
         start = n_ctx_pages * ps
         n_sfx = -(-suffix_len // ps)
@@ -420,7 +491,10 @@ class PagedEngine:
                 sl = (slice(None),) * T.cache_batch_axis(name) + (r.slot,)
                 merged = host.copy()
                 merged[sl] = np.asarray(seg[name])[sl]
-                seg[name] = jnp.asarray(merged)
+                # Re-place at the entry's current sharding: under a mesh the
+                # state entries are model-sharded and a bare jnp.asarray
+                # would silently collapse them onto one device.
+                seg[name] = jax.device_put(merged, seg[name].sharding)
 
     def _start(self, r: Request) -> None:
         """Bring an admitted request onto its slot: link its block table,
@@ -535,6 +609,12 @@ class PagedEngine:
 # Sharded wrappers (mesh execution + dry-run lowering)
 # ---------------------------------------------------------------------------
 
+def _tree_shardings(mesh, pspecs):
+    """PartitionSpec tree -> NamedSharding tree (P is a tuple: need is_leaf)."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
 def cache_pspecs(ms: T.ModelStructure, *, batch: int, sv: ServeConfig,
                  pc: ParallelContext, shard_batch: bool = True):
     """(abstract, pspec) for the global cache; batch sharded over dp when
@@ -558,9 +638,32 @@ def cache_pspecs(ms: T.ModelStructure, *, batch: int, sv: ServeConfig,
 
 
 def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
-                            *, batch: int, shard_batch: bool = True):
+                            *, batch: int, shard_batch: bool = True,
+                            paged: Optional[PagedServeConfig] = None):
     """jit(shard_map(serve_step)) + its in/out specs, for execution and the
-    decode-shape dry-run."""
+    decode-shape dry-run.
+
+    ``paged`` threads the continuous-batching engine's pool through the
+    same wrapper: the local step becomes the paged decode (params, caches,
+    tok, pos, block_tables, key) with the pool's pspecs from
+    ``paged_cache_meta`` (kv-head axis over "model", everything else
+    replicated) and tok/pos/block tables replicated — host-side scheduling
+    is tp-agnostic, so the ONLY sharded state is the pool itself. ``sv``
+    may be None in that mode; ``batch`` is the slot count.
+    """
+    if paged is not None:
+        pc = make_context(mesh, sp=False)
+        local = make_paged_decode_fn(ms, pc, paged)
+        p_specs = T.param_pspecs(ms)
+        c_abs, c_specs = PG.paged_cache_meta(
+            ms, n_slots=batch, n_pages=paged.n_pages,
+            page_size=paged.page_size, dtype=paged.cache_dtype)
+        wrapped = shard_map(
+            local, mesh=mesh,
+            in_specs=(p_specs, c_specs, P(), P(), P(), P()),
+            out_specs=(P(), c_specs),
+            check_vma=False)
+        return jax.jit(wrapped, donate_argnums=(1,)), c_abs, c_specs, pc
     pc = make_context(mesh, sp=False)
     local = make_serve_step(ms, pc, sv)
     p_specs = T.param_pspecs(ms)
@@ -578,7 +681,27 @@ def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
 
 
 def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
-                         *, batch: int, prompt_len: int, sp: bool = True):
+                         *, batch: int, prompt_len: int, sp: bool = True,
+                         paged: Optional[PagedServeConfig] = None):
+    """jit(shard_map(prefill)) for the ring cache (default), or — with
+    ``paged`` — the engine's exact-length prefill + page scatter: the
+    forward runs replicated over the sequence (sp off: prompt lengths are
+    exact, not tp-multiples), each rank scatters its LOCAL kv-head shard
+    of the emitted pages into its pool shard, and page ids/slot stay
+    host-side and tp-agnostic. Returns (fn, cache_pspecs, pc)."""
+    if paged is not None:
+        pc = make_context(mesh, sp=False)
+        local = make_paged_prefill_fn(ms, pc, paged, prompt_len)
+        p_specs = T.param_pspecs(ms)
+        _, c_specs = PG.paged_cache_meta(
+            ms, n_slots=paged.n_slots, n_pages=paged.n_pages,
+            page_size=paged.page_size, dtype=paged.cache_dtype)
+        wrapped = shard_map(
+            local, mesh=mesh,
+            in_specs=(p_specs, c_specs, P(), P(), P(), P()),
+            out_specs=(P(), c_specs),
+            check_vma=False)
+        return jax.jit(wrapped, donate_argnums=(1,)), c_specs, pc
     pc = make_context(mesh, sp=sp)
     local = make_prefill(ms, pc, sv)
     p_specs = T.param_pspecs(ms)
@@ -608,3 +731,59 @@ def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
         out_specs=(P(dp_ax, "model"), c_specs),
         check_vma=False)
     return jax.jit(wrapped), c_specs, pc
+
+
+def make_sharded_generate(ms: T.ModelStructure, mesh, sv: ServeConfig,
+                          *, batch: int, prompt_len: int):
+    """Build the one-shot sharded generation loop ONCE (prefill + serve
+    step jits are per-instance, so reusing the returned closure is what
+    makes a warm call actually warm the next one). Returns
+    ``gen(params, prompts [batch, prompt_len], n_new, key=None) ->
+    [batch, n_new] np.int32``.
+
+    The prefill runs without sequence parallelism so the forward matches
+    the engine's exact-length paged prefill shape-for-shape (SP would need
+    prompt_len % tp == 0 and regroup the sequence reductions).
+    """
+    assert sv.temperature == 0.0, "sharded generation is the greedy reference"
+    # Fail fast rather than silently dropping the prefix/frames extras the
+    # ring prefill would expect positionally (transformer.forward_full runs
+    # prefix-LM archs WITHOUT their prefix when prefix_embed is None).
+    assert not ms.cfg.prefix_len and not ms.enc_segments, (
+        f"{ms.cfg.name}: sharded one-shot generation does not take "
+        "prefix/encoder extras yet")
+    pre, _, _ = make_sharded_prefill(ms, mesh, sv, batch=batch,
+                                     prompt_len=prompt_len, sp=False)
+    step, _, _, _ = make_sharded_serve_step(ms, mesh, sv, batch=batch,
+                                            shard_batch=False)
+
+    def gen(params, prompts, n_new: int, key=None) -> np.ndarray:
+        prompts = jnp.asarray(prompts, jnp.int32)
+        assert prompts.shape == (batch, prompt_len), prompts.shape
+        logits, caches = pre(params, prompts)
+        # Gathered full-vocab logits: argmax's first-max tie-break equals
+        # vocab_parallel_argmax's smallest-global-id rule.
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [np.asarray(tok)]
+        key_ = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(n_new - 1):
+            key_, sub = jax.random.split(key_)
+            tok, caches = step(params, tok, caches, jnp.int32(prompt_len + i),
+                               sub)
+            toks.append(np.asarray(tok))
+        return np.stack(toks, axis=1).astype(np.int32)
+
+    return gen
+
+
+def sharded_generate(params, prompts, n_new: int, *, ms: T.ModelStructure,
+                     mesh, sv: ServeConfig, key=None) -> np.ndarray:
+    """One-shot greedy generation under shard_map (ring cache, host decode
+    loop): the tp > 1 reference stream the sharded paged engine is gated
+    against. ``prompts``: [B, S] token ids. Returns [B, n_new] np.int32.
+    One-off convenience over ``make_sharded_generate`` — compiles fresh
+    programs per call; loops should build the factory once."""
+    prompts = jnp.asarray(prompts, jnp.int32)
+    B, S = prompts.shape
+    return make_sharded_generate(ms, mesh, sv, batch=B, prompt_len=S)(
+        params, prompts, n_new, key)

@@ -29,6 +29,17 @@ not paged — they stay slot-indexed with ``n_slots`` as the batch axis.
 Cross-attention caches and non-causal ring kinds (sliding-window/chunked)
 are not supported by the paged layout; ``validate_paged_support`` rejects
 them up front.
+
+Sharding (tp > 1): the pool shards over the model axis exactly like the
+ring cache — the stored kv-head axis is cut when kv heads are sharded
+(n_kv >= tp, so each rank's shard is ``[2, n_pages, page_size, Hkv/tp,
+hd]``), replicated when n_kv < tp (ranks select their head in-kernel).
+``paged_cache_meta`` inherits the pspecs from the ring meta verbatim:
+replacing the ``[B, L]`` prefix with ``[n_pages, page_size]`` keeps every
+sharded axis at the same position, so no new partition rules exist for
+paged serving. Page ids, block tables and slot indices are host-side and
+tp-agnostic — ``scatter_prefill``/decode writes run unchanged inside
+shard_map on each rank's local shard.
 """
 from __future__ import annotations
 
@@ -66,6 +77,15 @@ def validate_paged_support(ms: T.ModelStructure, max_len: int) -> None:
     ring kinds whose cache is a reused window/chunk ring rather than one
     slot per absolute position (recurrentgemma's attn_local, llama4's
     attn_chunked) — paging a reused ring would need per-page eviction.
+
+    TP: a kv-SHARDED pool (n_kv >= tp) cuts the stored head axis into
+    equal per-rank shards, so ``n_kv`` must divide by ``tp`` — the padded
+    hkv_global the ring cache tolerates would put phantom heads in the
+    pool and the paged kernel's scalar-prefetch index maps would walk off
+    the real heads. Reject it HERE with an actionable message instead of
+    failing inside the kernel index map. Replicated kv (n_kv < tp) has no
+    divisibility requirement: every rank holds all stored heads and
+    selects in-kernel (kernels.decode_attention head_map).
     """
     cfg = ms.cfg
     if ms.enc_segments or cfg.enc_layers:
@@ -73,6 +93,15 @@ def validate_paged_support(ms: T.ModelStructure, max_len: int) -> None:
                          "not pageable")
     if cfg.prefix_len:
         raise ValueError(f"{cfg.name}: prefix-LM serving is not paged yet")
+    dims = ms.dims
+    if ms.tp > 1 and dims.kv_sharded and cfg.n_kv_heads % ms.tp:
+        raise ValueError(
+            f"{cfg.name}: n_kv_heads={cfg.n_kv_heads} does not divide by "
+            f"tp={ms.tp}; the paged pool shards stored kv heads evenly over "
+            "the model axis (the ring cache pads to "
+            f"{dims.hkv_global} heads, but padded pool heads would desync "
+            "the paged kernel's block-table index maps) — pick tp dividing "
+            "n_kv_heads, or tp > n_kv_heads for replicated-kv selection")
     for seg in ms.segments:
         for spec in seg.group.specs:
             if spec.cross_attn:

@@ -35,6 +35,15 @@ written pages are donated to the tree (so they are reclaimable by the head
 but radix-hittable at resume), everything else is released, and it is
 re-queued directly BEHIND the blocked head (re-queueing it at position 0
 would let it re-steal the pages the preemption just freed).
+
+Tensor parallelism never reaches this module: page ids, block tables, slot
+indices and refcounts are logical names for DEVICE-side pages whose kv-head
+axis may be sharded over a mesh (repro.serve.paged_cache), so one scheduler
+instance drives tp=1 and tp>1 engines identically and the accounting
+invariant ``allocated - freed == live_unique`` is tp-invariant. Under tp>1
+the engine passes ``prefix_cache=None`` (radix sharing is tp=1-only for
+now); preemption still works — resume then takes the full-reprefill +
+decode-replay path.
 """
 from __future__ import annotations
 
