@@ -45,6 +45,20 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the tp>1 half:
   (j) the prefix cache auto-disables under tp>1 (radix-aware sharded
       serving is a ROADMAP follow-on).
 
+``--chaos`` (the chaos-structural CI gate) runs the hardening soak:
+  (k) >= 200 engine steps under a seeded FaultPlan firing all five fault
+      kinds (page-alloc failure, NaN logits, block-table corruption,
+      poisoned prompts, deadline storms) with page accounting balanced at
+      every step and no engine crash;
+  (l) every faulted request lands in a TYPED terminal state (failed /
+      expired / cancelled) carrying a ServeError;
+  (m) surviving requests are bit-identical to the same workload on a
+      faults-disabled engine (per-request fault isolation);
+  (n) the whole soak replays exactly from the same --seed;
+  (o) under sustained overload the bounded submit queue never exceeds
+      max_queue, shedding is deadline-aware, and the aggressive-Δ degraded
+      cohort is bit-identical to a fixed-Δ engine re-paired by LP.replan.
+
 Every structural run also folds its throughput/latency numbers into
 ``benchmarks/results/BENCH_serve.json`` so successive PRs leave a
 comparable perf trajectory (uploaded as a CI artifact).
@@ -62,13 +76,16 @@ import numpy as np
 from benchmarks import common as C
 from repro.analysis.roofline import jaxpr_primitive_count
 from repro.configs import get_config, reduced_config
-from repro.core.lp import LPPlan, plan_range
+from repro.core.lp import LPPlan, plan_for_depth, plan_range, replan
 from repro.launch.mesh import make_serving_mesh
 from repro.model import attention as A
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
-from repro.serve import (PagedEngine, PagedServeConfig, ServeConfig,
-                         generate, sharded_generate)
+from repro.serve import (ALL_FAULT_KINDS, CANCELLED, COHORT_DEGRADED,
+                         EXPIRED, FAILED, FINISHED, TERMINAL_STATES,
+                         FaultPlan, PagedEngine, PagedServeConfig,
+                         QueueFullError, ServeConfig, generate,
+                         sharded_generate)
 from repro.serve import paged_cache as PG
 from repro.serve.engine import make_sharded_serve_step
 
@@ -312,6 +329,7 @@ def _sharded_launch_and_write_counts(ms, mesh, n_slots: int):
             p_abs, c_abs, jax.ShapeDtypeStruct((n_slots,), i32),
             jax.ShapeDtypeStruct((n_slots,), i32),
             jax.ShapeDtypeStruct((n_slots, MAX_LEN // PAGE_SIZE), i32),
+            jax.ShapeDtypeStruct((n_slots,), jnp.bool_),
             jax.ShapeDtypeStruct((2,), jnp.uint32))
     finally:
         A.set_decode_impl(prev)
@@ -454,6 +472,193 @@ def structural_shared_prefix(seed: int = 17) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Chaos + degradation gate (deterministic fault injection soak)
+# ---------------------------------------------------------------------------
+
+CHAOS_STEPS = 200          # fault-injection horizon (soak runs past it)
+CHAOS_REQUESTS = 100       # enough arrivals to keep slots busy all horizon
+CHAOS_RATE = 0.5           # requests per engine step
+CHAOS_CANCEL_STEP = 60     # exercise cancel() mid-soak, deterministically
+DEG_EFF_DEPTH = 3          # aggressive-Δ cohort depth (base soaks at 5)
+
+
+def _chaos_drive(eng: PagedEngine, reqs, *, cancel_step: int = -1,
+                 queue_cap: int = 0, max_steps: int = 3000):
+    """Submit on the arrival schedule and step to drain, tolerating
+    faults. Returns (rids aligned with ``reqs`` — a shed submission gets
+    rid -1 — , rids cancelled by the driver). Deterministic: the only
+    inputs are the engine (with its seeded FaultPlan) and the schedule."""
+    rids, cancelled = [], []
+    nxt = 0
+    while nxt < len(reqs) or eng.sched.n_queued or eng.sched.n_running:
+        while nxt < len(reqs) and reqs[nxt][0] <= eng.step_count:
+            _, prompt, max_new, deadline = reqs[nxt]
+            try:
+                rids.append(eng.add_request(prompt, max_new,
+                                            deadline=deadline))
+            except QueueFullError:
+                rids.append(-1)
+            nxt += 1
+        if eng.step_count == cancel_step and eng.sched.running:
+            victim = max(r.rid for r in eng.sched.running.values())
+            eng.cancel(victim)
+            cancelled.append(victim)
+        eng.step()
+        if queue_cap:
+            # The bounded queue may NEVER exceed its cap, at any step.
+            assert eng.sched.n_queued <= queue_cap, (
+                eng.step_count, eng.sched.n_queued, queue_cap)
+        assert eng.step_count <= max_steps, "chaos drive failed to drain"
+    return rids, cancelled
+
+
+def _chaos_workload(cfg, n: int, rate: float, seed: int):
+    """Like _workload but with an explicit no-deadline column (the storm
+    fault is what sets deadlines in the soak)."""
+    return [(a, p, m, None) for a, p, m in _workload(cfg, n, rate, seed)]
+
+
+def structural_chaos(seed: int = 0) -> dict:
+    """The chaos-structural CI gate: a >= CHAOS_STEPS-step soak with all
+    five deterministic fault kinds live, then a sustained-overload run with
+    the bounded queue and the aggressive-Δ degraded cohort. Gates:
+
+      (k) the engine never crashes across the soak; page accounting
+          balances at EVERY step (engine.step self-checks) and at drain;
+      (l) every one of the five fault kinds actually fired, and every
+          faulted request landed in a TYPED terminal state carrying a
+          ServeError — faults never leak as bare asserts;
+      (m) SURVIVORS are bit-identical to the same workload on a
+          faults-disabled engine (fault isolation: a poisoned slot never
+          perturbs a healthy one);
+      (n) the whole soak is reproducible from (seed): a second engine with
+          a fresh FaultPlan(seed) produces the identical fault log,
+          terminal states, and token streams;
+      (o) under sustained overload the bounded submit queue NEVER exceeds
+          max_queue (shedding is deadline-aware and typed), and every
+          FINISHED degraded-cohort request is bit-identical to a
+          fixed-aggressive-Δ engine built from the same weights by
+          LP.replan — degradation trades depth for capacity, never
+          correctness.
+    """
+    cfg, ms, params = _build(1)           # eff depth 5: room to degrade
+    psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                           n_pages=N_PAGES, max_len=MAX_LEN,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    reqs = _chaos_workload(cfg, CHAOS_REQUESTS, CHAOS_RATE, seed)
+
+    # Clean reference first (same workload, no FaultPlan).
+    eng0 = PagedEngine(params, ms, psv)
+    rids0, _ = _chaos_drive(eng0, reqs)
+    assert all(eng0.request(r).state == FINISHED for r in rids0)
+
+    # (k)+(l): the seeded soak. FaultPlan draws every event up front.
+    plan = FaultPlan(seed, n_steps=CHAOS_STEPS)
+    assert plan.events == FaultPlan(seed, n_steps=CHAOS_STEPS).events
+    eng1 = PagedEngine(params, ms, psv, fault_plan=plan)
+    rids1, cancelled = _chaos_drive(eng1, reqs,
+                                    cancel_step=CHAOS_CANCEL_STEP)
+    assert eng1.step_count >= CHAOS_STEPS, eng1.step_count
+    assert eng1.pool.allocated_total - eng1.pool.freed_total == \
+        eng1.pool.live                      # balanced at drain too
+    applied = {k: eng1.fault_counts[k] for k in ALL_FAULT_KINDS}
+    assert all(v > 0 for v in applied.values()), applied
+    assert eng1.pool.alloc_faults > 0       # refusals actually served
+    for rid in rids1:
+        r = eng1.request(rid)
+        assert r.state in TERMINAL_STATES, (rid, r.state)
+        if r.state in (FAILED, EXPIRED):
+            assert r.error is not None, rid
+        if r.state == EXPIRED:              # within one step of deadline
+            assert r.finished_step <= r.deadline + 1, (rid, r.finished_step)
+    assert all(eng1.request(r).state == CANCELLED for r in cancelled)
+
+    # (m) survivors bit-identical to the fault-free run.
+    survivors = [r for r in rids1 if eng1.request(r).state == FINISHED]
+    victims = [r for r in rids1 if eng1.request(r).state != FINISHED]
+    assert victims, "soak injected faults but no request was hit"
+    assert len(survivors) >= len(rids1) // 2, (len(survivors), len(rids1))
+    for rid in survivors:
+        assert (eng1.results[rid] == eng0.results[rid]).all(), rid
+
+    # (n) determinism: fresh plan, fresh engine, identical everything.
+    eng2 = PagedEngine(params, ms, psv, fault_plan=FaultPlan(
+        seed, n_steps=CHAOS_STEPS))
+    rids2, _ = _chaos_drive(eng2, reqs, cancel_step=CHAOS_CANCEL_STEP)
+    assert rids2 == rids1
+    assert eng2.fault_log == eng1.fault_log
+    for rid in rids1:
+        assert eng2.request(rid).state == eng1.request(rid).state, rid
+        assert (eng2.results[rid] == eng1.results[rid]).all(), rid
+
+    # (o) sustained overload: bounded queue + degraded cohort.
+    cap = 4
+    psv_deg = PagedServeConfig(
+        n_slots=N_SLOTS, page_size=PAGE_SIZE, n_pages=N_PAGES,
+        max_len=MAX_LEN, cache_dtype=jnp.float32, max_queue=cap,
+        degrade_delta=True, degrade_slots=N_SLOTS // 2,
+        degrade_queue_depth=1, degrade_eff_depth=DEG_EFF_DEPTH)
+    eng_d = PagedEngine(params, ms, psv_deg)
+    burst = _chaos_workload(cfg, 32, rate=4.0, seed=seed + 1)
+    # Deadline mix: mostly patient, every 5th urgent — urgent newcomers
+    # shed the most-patient queued victim; the rest ride out the queue.
+    burst = [(a, p, m, (a + 10 if i % 5 == 4 else a + 400))
+             for i, (a, p, m, _) in enumerate(burst)]
+    rids_d, _ = _chaos_drive(eng_d, burst, queue_cap=cap)
+    shed = eng_d.counters["shed"] + sum(1 for r in rids_d if r == -1)
+    assert shed > 0, "overload burst never exercised the shed policy"
+    assert eng_d.counters["degraded_admissions"] > 0
+    deg_done = [(i, r) for i, r in enumerate(rids_d) if r >= 0
+                and eng_d.request(r).cohort == COHORT_DEGRADED
+                and eng_d.request(r).state == FINISHED]
+    assert deg_done, "no degraded request ran to completion"
+
+    # Fixed-aggressive-Δ reference engine: SAME weights, re-paired by
+    # LP.replan to the degraded plan — the cohort must match it bitwise.
+    deg_plan = plan_for_depth(cfg, DEG_EFF_DEPTH, end=N_LAYERS)
+    _, seg_params = replan(cfg, params["segments"], ms.segments, deg_plan)
+    ms_ref = T.build_structure(cfg, plan=deg_plan, tp=1)
+    eng_ref = PagedEngine(dict(params, segments=seg_params), ms_ref,
+                          PagedServeConfig(n_slots=N_SLOTS,
+                                           page_size=PAGE_SIZE,
+                                           n_pages=N_PAGES, max_len=MAX_LEN,
+                                           cache_dtype=jnp.float32))
+    ref_rids = [eng_ref.add_request(burst[i][1], burst[i][2])
+                for i, _ in deg_done]
+    eng_ref.drain()
+    for (_, rid), ref_rid in zip(deg_done, ref_rids):
+        assert (eng_d.results[rid] == eng_ref.results[ref_rid]).all(), rid
+
+    out = {
+        "soak_steps": eng1.step_count,
+        "faults_applied": applied,
+        "alloc_faults": eng1.pool.alloc_faults,
+        "survivors": len(survivors),
+        "victims": {s: sum(1 for r in rids1
+                           if eng1.request(r).state == s)
+                    for s in (FAILED, EXPIRED, CANCELLED)},
+        "overload": {
+            "queue_cap": cap, "shed": shed,
+            "degraded_admissions": eng_d.counters["degraded_admissions"],
+            "degraded_finished": len(deg_done),
+            "deg_eff_depth": DEG_EFF_DEPTH,
+            "base_eff_depth": ms.effective_depth,
+        },
+    }
+    _bench_summary("chaos", out)
+    C.save_result("serve_throughput_chaos", {"structural": out})
+    print(f"chaos-structural OK: {eng1.step_count}-step soak, faults "
+          f"{applied} (+{eng1.pool.alloc_faults} alloc refusals) | "
+          f"{len(survivors)} survivors bit-identical, victims "
+          f"{out['victims']} | deterministic replay exact | overload: "
+          f"queue<= {cap} held, shed={shed}, "
+          f"{len(deg_done)} degraded requests bit-identical to the "
+          f"fixed-Δ reference (depth {ms.effective_depth}->"
+          f"{DEG_EFF_DEPTH})")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Wall-clock serving runs
 # ---------------------------------------------------------------------------
 
@@ -500,8 +705,13 @@ def _warm_shared(eng: PagedEngine, cfg, seed: int):
 
 def run(structural_only: bool = False, *, n_requests: int = 32,
         rate: float = 2.0, shared_prefix: bool = False, seed: int = 17,
-        preempt_after: int = 0, pages: int = 0, mesh: str = ""):
+        preempt_after: int = 0, pages: int = 0, mesh: str = "",
+        chaos: bool = False):
     n_pages = pages if pages > 0 else N_PAGES
+    if chaos:
+        # --chaos is its own CI step (chaos-structural): the soak + overload
+        # gate is deterministic in --seed, so it always runs structural.
+        return structural_chaos(seed)
     if structural_only:
         # --structural, --structural --shared-prefix and --structural
         # --mesh AxB are SEPARATE CI steps; each gates only its own half so
@@ -578,6 +788,11 @@ if __name__ == "__main__":
                     help="skip wall-clock; assert launch/write counts, page "
                          "accounting balance, and one-shot bit-identity "
                          "(CI gate)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="chaos-structural gate: >=200-step deterministic "
+                         "fault-injection soak (all five kinds) + bounded-"
+                         "queue overload with the aggressive-Δ degraded "
+                         "cohort; reproducible from --seed")
     ap.add_argument("--shared-prefix", action="store_true",
                     help="family traffic with shared system prompts; with "
                          "--structural also gates hit-rate, prefill-token "
@@ -601,4 +816,5 @@ if __name__ == "__main__":
     args = ap.parse_args()
     run(structural_only=args.structural, n_requests=args.requests,
         rate=args.rate, shared_prefix=args.shared_prefix, seed=args.seed,
-        preempt_after=args.preempt_after, pages=args.pages, mesh=args.mesh)
+        preempt_after=args.preempt_after, pages=args.pages, mesh=args.mesh,
+        chaos=args.chaos)

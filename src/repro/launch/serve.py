@@ -35,8 +35,8 @@ from repro.core.lp import EMPTY_PLAN, plan_for_depth
 from repro.launch.mesh import make_serving_mesh
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
-from repro.serve import (PagedEngine, PagedServeConfig, ServeConfig,
-                         generate, make_sharded_generate)
+from repro.serve import (PagedEngine, PagedServeConfig, QueueFullError,
+                         ServeConfig, generate, make_sharded_generate)
 
 
 def main() -> None:
@@ -69,6 +69,25 @@ def main() -> None:
                     help="1xM device mesh; M > 1 runs the shard_map "
                          "programs with tp=M — needs XLA_FLAGS="
                          "--xla_force_host_platform_device_count>=M on CPU")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="(--continuous) bound the submit queue; a full "
+                         "queue sheds the slackest-deadline request for a "
+                         "more urgent newcomer, else rejects (0 = "
+                         "unbounded)")
+    ap.add_argument("--deadline-steps", type=int, default=0,
+                    help="(--continuous) per-request deadline, engine "
+                         "steps after submission; overrun requests EXPIRE "
+                         "and release their pages (0 = none)")
+    ap.add_argument("--degrade-delta", action="store_true",
+                    help="(--continuous) overload degradation: overflow "
+                         "admissions run an aggressive-Δ re-pairing of the "
+                         "same weights in a reserved slot cohort")
+    ap.add_argument("--degrade-slots", type=int, default=0,
+                    help="(--degrade-delta) slots reserved for the "
+                         "degraded cohort (default: half the batch)")
+    ap.add_argument("--degrade-eff-depth", type=int, default=0,
+                    help="(--degrade-delta) effective depth of the "
+                         "degraded cohort (0 = maximal pairing)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -84,13 +103,19 @@ def main() -> None:
     if args.continuous:
         ps = args.page_size
         max_len = -(-(args.prompt_len + args.new_tokens + 8) // ps) * ps
+        deg_slots = (args.degrade_slots or args.batch // 2
+                     if args.degrade_delta else 0)
         psv = PagedServeConfig(
             n_slots=args.batch, page_size=ps,
             n_pages=1 + args.batch * (max_len // ps), max_len=max_len,
             temperature=args.temperature,
             prefill_token_budget=args.prefill_token_budget,
             prefix_cache=args.prefix_cache,
-            preempt_after=args.preempt_after)
+            preempt_after=args.preempt_after,
+            max_queue=args.max_queue,
+            degrade_delta=args.degrade_delta,
+            degrade_slots=deg_slots,
+            degrade_eff_depth=args.degrade_eff_depth)
         eng = PagedEngine(params, ms, psv, mesh=mesh)
         key = jax.random.PRNGKey(1)
         # A shared head (page-aligned) + per-request tails: realistic
@@ -101,10 +126,20 @@ def main() -> None:
         lens = [max(4, args.prompt_len - shared_len - 8 * (i % 3))
                 for i in range(args.requests)]
         t0 = time.time()
+        rejected = 0
         for i, L in enumerate(lens):
             tail = np.asarray(jax.random.randint(
                 jax.random.fold_in(key, i), (L,), 0, cfg.vocab_size))
-            eng.add_request(np.concatenate([shared, tail]), args.new_tokens)
+            prompt = np.concatenate([shared, tail])
+            dl = (eng.step_count + args.deadline_steps
+                  if args.deadline_steps else None)
+            try:
+                eng.add_request(prompt, args.new_tokens, deadline=dl)
+            except QueueFullError:
+                # Bounded queue, nothing slacker to shed: serve a step to
+                # make room, then drop this arrival (typed, counted).
+                rejected += 1
+                eng.step()
         res = eng.drain()
         run = time.time() - t0
         toks = sum(len(v) for v in res.values())
@@ -122,6 +157,11 @@ def main() -> None:
               f"prefill_toks={c['prefill_tokens']} "
               f"hit_toks={c['hit_tokens']} "
               f"preemptions={eng.sched.preemptions_total}")
+        if (c["failed"] or c["expired"] or c["shed"] or rejected
+                or c["degraded_admissions"]):
+            print(f"lifecycle: failed={c['failed']} expired={c['expired']} "
+                  f"shed={c['shed']} rejected={rejected} "
+                  f"degraded={c['degraded_admissions']}")
         print("sample:", res[0][:16].tolist())
         return
     sv = ServeConfig(max_len=args.prompt_len + args.new_tokens + 8,

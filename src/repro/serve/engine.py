@@ -38,6 +38,32 @@ written pages are donated (reclaimable, radix-hittable at resume), and
 resume replays the parked positions through the regular decode program —
 the engine asserts every replayed token reproduces the parked one.
 
+Robustness (request lifecycle, fault isolation, chaos, degradation)
+-------------------------------------------------------------------
+Per-request failures are CONTAINED, never engine-fatal. The decode and
+prefill programs return a per-row finite flag alongside tokens (NaN/inf
+logits or non-finite emitted cache values), the block table of every
+running slot is validated against its request's owned pages before each
+launch, and prompts are re-checked against the vocabulary at the device
+boundary. A tripped guard FAILs exactly the offending request — its
+private pages are scrubbed (zeroed) before returning to the free list so
+stale NaN cannot leak to a later holder — while every surviving stream
+stays bit-identical to a fault-free run (the chaos CI gate). Requests
+carry deadlines (expired at step boundaries) and can be cancelled;
+``PagedServeConfig.max_queue`` bounds the submit queue with deadline-aware
+shedding. ``fault_plan`` (repro.serve.faults.FaultPlan) injects seeded,
+reproducible faults through the same hooks the real failures would take.
+
+``degrade_delta`` turns overload into the paper's retraining-free
+depth/quality trade instead of queueing: the engine re-pairs the SAME
+weights under a more aggressive Δ plan (repro.core.lp.replan — no reload,
+no retraining) and reserves ``degrade_slots`` decode slots as a DEGRADED
+cohort running a second precompiled decode program over a separate cache
+pool tree. Under SLO pressure (queue depth >= degrade_queue_depth) new
+admissions overflow into that cohort; its greedy streams are bit-identical
+to an engine built wholly at the aggressive Δ (the overload CI gate), and
+cohorts never share radix pages (kv bits are plan-specific).
+
 Sharded paged serving (``PagedEngine(mesh=...)``): the same engine loop
 drives shard_map-compiled programs on a tp > 1 mesh. The page pool shards
 its kv-head axis over the "model" axis exactly like the ring cache, every
@@ -60,12 +86,20 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import lp as LP
 from repro.model import embedding as E
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext, make_context
+from repro.serve import faults as F
 from repro.serve import paged_cache as PG
+from repro.serve.faults import (BlockTableCorruptionError,
+                                DeadlineExceededError, InvalidRequestError,
+                                LoadShedError, NonFiniteLogitsError,
+                                PoisonedPromptError, QueueFullError)
 from repro.serve.prefix_cache import PrefixCache
-from repro.serve.scheduler import PagePool, Request, Scheduler
+from repro.serve.scheduler import (COHORT_DEGRADED, COHORT_MAIN,
+                                   TERMINAL_STATES, PagePool, Request,
+                                   Scheduler)
 
 PyTree = Any
 
@@ -145,9 +179,28 @@ def generate(params, prompts, n_new: int, *, ms: T.ModelStructure,
 # Continuous batching over the paged pair-KV cache pool
 # ---------------------------------------------------------------------------
 
+def _finite_flag(pc: ParallelContext, *leaves) -> jnp.ndarray:
+    """Scalar bool: every inexact leaf is fully finite (reduced over tp so
+    all ranks agree — the host decision must be replicated)."""
+    bad = jnp.zeros((), jnp.int32)
+    for leaf in leaves:
+        if jnp.issubdtype(leaf.dtype, jnp.inexact):
+            bad = bad | jnp.any(~jnp.isfinite(leaf)).astype(jnp.int32)
+    return pc.pmax_tp(bad) == 0
+
+
 def make_paged_decode_fn(ms: T.ModelStructure, pc: ParallelContext, psv):
     """Local paged decode step: (params, caches, tok [n_slots], pos
-    [n_slots], block_tables, key) -> (next_tok [n_slots], caches).
+    [n_slots], block_tables, poison [n_slots] bool, key) ->
+    (next_tok [n_slots], ok [n_slots] bool, caches).
+
+    ``ok[slot]`` is the per-row finite guard: False when the slot's logits
+    hold NaN/inf (tp-reduced so every rank reports identically). ``poison``
+    is the deterministic-chaos hook — True rows get their logits overwritten
+    with NaN BEFORE the guard, exercising the containment path; an
+    all-False mask is a bitwise no-op (``where`` with a false predicate
+    returns the original lanes), so the hook costs the bit-identity
+    contract nothing.
 
     The SAME body runs under plain jit (tp=1 engine) and inside shard_map
     over a tp mesh (``make_sharded_serve_step(paged=...)``): tok/pos/block
@@ -155,15 +208,18 @@ def make_paged_decode_fn(ms: T.ModelStructure, pc: ParallelContext, psv):
     only sharded dim, and sampling is vocab-parallel so full logits never
     materialise.
     """
-    def f(params, caches, tok, pos, bt, key):
+    def f(params, caches, tok, pos, bt, poison, key):
         logits, caches = T.decode_step(
             params, tok, caches, pos, ms=ms, pc=pc,
             cache_layout="paged", block_tables=bt)
+        logits = jnp.where(poison[:, None], jnp.nan, logits)
+        bad = jnp.any(~jnp.isfinite(logits), axis=-1).astype(jnp.int32)
+        ok = pc.pmax_tp(bad) == 0
         if psv.temperature > 0:
             nxt = E.vocab_parallel_sample(logits, key, psv.temperature, pc)
         else:
             nxt = E.vocab_parallel_argmax(logits, pc)
-        return nxt.astype(jnp.int32), caches
+        return nxt.astype(jnp.int32), ok, caches
 
     return f
 
@@ -171,11 +227,15 @@ def make_paged_decode_fn(ms: T.ModelStructure, pc: ParallelContext, psv):
 def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
                           prompt_len: int):
     """Local exact-length prefill + page scatter: (params, caches, prompt
-    [1, prompt_len], page_ids, slot, key) -> (first_tok [1], caches). The
-    cache emission length rounds up to whole pages; the forward itself is
-    the exact prompt — no padding (the bit-identity contract). Shared by
-    the tp=1 jit and the shard_map wrapper (sp stays off: exact odd-length
-    prompts do not split over ranks)."""
+    [1, prompt_len], page_ids, slot, key) -> (first_tok [1], ok, caches).
+    ``ok`` is the finite guard over the sampled position's logits AND the
+    emitted cache (a poisoned prompt/params corrupts the kv it writes, not
+    just the logits — the guard must trip before those pages are ever
+    donated or decoded from). The cache emission length rounds up to whole
+    pages; the forward itself is the exact prompt — no padding (the
+    bit-identity contract). Shared by the tp=1 jit and the shard_map
+    wrapper (sp stays off: exact odd-length prompts do not split over
+    ranks)."""
     n_pg = -(-prompt_len // psv.page_size)
     emit_len = n_pg * psv.page_size
 
@@ -188,12 +248,13 @@ def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
             lambda c: c.astype(psv.cache_dtype)
             if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
         last = logits[:, prompt_len - 1]
+        ok = _finite_flag(pc, last, *jax.tree.leaves(seq))
         if psv.temperature > 0:
             tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
         else:
             tok0 = E.vocab_parallel_argmax(last, pc)
         caches = PG.scatter_prefill(caches, seq, page_ids, slot)
-        return tok0.astype(jnp.int32), caches
+        return tok0.astype(jnp.int32), ok, caches
 
     return f
 
@@ -221,6 +282,19 @@ class PagedServeConfig:
     steps with a blocked queue head, the youngest running request is
     parked (pages donated/released, tokens kept) and later resumed via
     radix re-link + bit-exact decode replay. 0 keeps PR 2's strict FCFS.
+
+    max_queue: > 0 bounds the SUBMIT queue. A submission against a full
+    queue sheds the queued request with the slackest deadline if the
+    newcomer is strictly more urgent (EXPIRED with ``LoadShedError``),
+    else raises ``QueueFullError`` — overload degrades by policy, never by
+    unbounded memory growth. 0 keeps the queue unbounded.
+    degrade_delta: reserve ``degrade_slots`` slots as a DEGRADED cohort
+    running the same weights re-paired at an aggressive Δ
+    (``degrade_eff_depth`` effective layers; 0 = maximal pairing). When the
+    queue depth reaches ``degrade_queue_depth`` and the main cohort is
+    full, new admissions overflow into the degraded cohort instead of
+    waiting — the paper's retraining-free speed/quality family as an
+    overload valve. tp=1 engines only for now.
     """
     n_slots: int = 8              # concurrent decode slots (fixed batch)
     page_size: int = 16           # tokens per cache page
@@ -232,6 +306,11 @@ class PagedServeConfig:
     eos_token: int = -1           # -1: run every request to max_new
     prefix_cache: bool = False    # radix prefix sharing (CoW pages)
     preempt_after: int = 0        # blocked-head steps before preemption
+    max_queue: int = 0            # bounded submit queue (0 = unbounded)
+    degrade_delta: bool = False   # aggressive-Δ overload cohort
+    degrade_slots: int = 0        # slots reserved for the degraded cohort
+    degrade_queue_depth: int = 1  # queue depth that signals SLO pressure
+    degrade_eff_depth: int = 0    # effective depth of the cohort (0 = max Δ)
 
     @property
     def pages_per_slot(self) -> int:
@@ -241,16 +320,20 @@ class PagedServeConfig:
 class PagedEngine:
     """Continuous-batching serving engine: ``add_request / step / drain``.
 
-    One ``step()`` is: FCFS admission (each admitted request prefills at its
-    exact length and claims its pages), then ONE fixed-shape decode program
-    over all ``n_slots`` slots. Finished requests (EOS / max_new) release
-    their slot and pages the same step, so the next admission reuses them.
+    One ``step()`` is: chaos injection (when armed) -> deadline expiry ->
+    FCFS admission (each admitted request prefills at its exact length and
+    claims its pages; prompts and prefill outputs pass fault guards), then
+    ONE fixed-shape decode program per ACTIVE cohort. Finished requests
+    (EOS / max_new) release their slot and pages the same step, so the next
+    admission reuses them; FAILED/CANCELLED/EXPIRED requests release within
+    the step that terminates them.
 
     Greedy outputs are bit-identical per request to one-shot
     ``generate(params, prompt[None], max_new)`` with ``max_len`` equal to
     this engine's: prefill runs the identical forward at the exact prompt
     length, decode runs the identical per-row math (paged gather + same
-    cores), and every cross-request interaction is row-independent.
+    cores), and every cross-request interaction is row-independent — which
+    is also why failing one slot leaves the survivors' streams untouched.
 
     ``mesh``: run the compiled programs under shard_map on a tp > 1 mesh
     (``ms`` must be built with the matching tp). The page pool shards its
@@ -260,22 +343,94 @@ class PagedEngine:
     suffix-prefill ctx path assumes replicated kv (radix-aware sharded
     serving is a ROADMAP follow-on) — while preemption still works via
     full re-prefill + bit-exact decode replay.
+
+    ``fault_plan``: a ``repro.serve.faults.FaultPlan`` — each step applies
+    that step's scheduled events through the same hooks real faults would
+    take; ``fault_log`` records what actually fired (rid-stamped), making
+    every outcome reproducible by (seed, step).
     """
 
     def __init__(self, params, ms: T.ModelStructure, psv: PagedServeConfig,
                  *, pc: Optional[ParallelContext] = None, key=None,
-                 mesh=None):
-        assert psv.max_len % psv.page_size == 0, (psv.max_len, psv.page_size)
-        assert psv.n_slots >= 1
+                 mesh=None, fault_plan: Optional[F.FaultPlan] = None):
+        # Geometry errors are actionable ValueErrors, not asserts: they are
+        # configuration mistakes a user should be able to fix from the
+        # message alone (validate_paged_support style).
+        if psv.max_len % psv.page_size != 0:
+            raise ValueError(
+                f"max_len={psv.max_len} is not a multiple of "
+                f"page_size={psv.page_size}: the decode step attends over "
+                "exactly pages_per_slot * page_size positions, so a partial "
+                "trailing page would change reduction shapes and break the "
+                "bit-identity contract — pick max_len as a whole number of "
+                "pages")
+        if psv.n_slots < 1:
+            raise ValueError(
+                f"n_slots={psv.n_slots} must be >= 1: the decode program's "
+                "fixed batch is the slot count, and an engine with no slots "
+                "can never admit a request")
+        if psv.max_queue < 0:
+            raise ValueError(f"max_queue={psv.max_queue} must be >= 0 "
+                             "(0 = unbounded)")
+        if psv.degrade_delta:
+            if not 1 <= psv.degrade_slots < psv.n_slots:
+                raise ValueError(
+                    f"degrade_delta needs 1 <= degrade_slots < n_slots "
+                    f"(got degrade_slots={psv.degrade_slots}, "
+                    f"n_slots={psv.n_slots}): the degraded cohort must "
+                    "leave at least one main slot")
+            if mesh is not None:
+                raise ValueError(
+                    "degrade_delta is tp=1-only for now: the degraded "
+                    "cohort would need its own sharded program pair and "
+                    "replanned param placement")
+        elif psv.degrade_slots:
+            raise ValueError(
+                f"degrade_slots={psv.degrade_slots} without degrade_delta: "
+                "reserved degraded slots would simply idle — set "
+                "degrade_delta=True or degrade_slots=0")
         PG.validate_paged_support(ms, psv.max_len)
         self.ms = ms
         self.psv = psv
         self.mesh = mesh
+        self.n_main = psv.n_slots - (psv.degrade_slots
+                                     if psv.degrade_delta else 0)
+        self.n_deg = psv.n_slots - self.n_main
+        # Degraded-cohort model: the SAME weights re-paired under an
+        # aggressive Δ plan (retraining-free — repro.core.lp.replan), built
+        # from the raw host params before any device placement.
+        self.ms_deg = self.params_deg = None
+        if psv.degrade_delta:
+            cfg = ms.cfg
+            if psv.degrade_eff_depth > 0:
+                deg_plan = LP.plan_for_depth(cfg, psv.degrade_eff_depth,
+                                             end=cfg.n_layers)
+            else:
+                deg_plan = LP.plan_range(cfg, 0, cfg.n_layers)
+            if len(deg_plan.pairs) <= len(ms.plan.pairs):
+                raise ValueError(
+                    f"degraded plan pairs {len(deg_plan.pairs)} layers vs "
+                    f"base {len(ms.plan.pairs)}: the degraded cohort must "
+                    "be strictly MORE aggressive than the base plan "
+                    "(lower degrade_eff_depth, or use a shallower base)")
+            segs2, sp2 = LP.replan(cfg, params["segments"], ms.segments,
+                                   deg_plan)
+            self.ms_deg = T.build_structure(cfg, plan=deg_plan, tp=ms.tp)
+            assert tuple(s.group.specs for s in self.ms_deg.segments) == \
+                tuple(s.group.specs for s in segs2)
+            self.params_deg = dict(params, segments=sp2)
         if mesh is not None:
-            assert pc is None, "pc is derived from mesh; pass one or the other"
+            if pc is not None:
+                raise ValueError(
+                    "pass mesh OR pc, not both: with a mesh the engine "
+                    "derives its ParallelContext from the mesh axes")
             self.pc = make_context(mesh, sp=False)
-            assert self.pc.tp_size == ms.tp, (
-                f"mesh model axis ({self.pc.tp_size}) != ms.tp ({ms.tp})")
+            if self.pc.tp_size != ms.tp:
+                raise ValueError(
+                    f"mesh model axis has {self.pc.tp_size} devices but ms "
+                    f"was built with tp={ms.tp}: rebuild the structure with "
+                    f"build_structure(cfg, tp={self.pc.tp_size}) (params "
+                    "must be initialised/loaded at that tp as well)")
             self.params = jax.device_put(params, _tree_shardings(
                 mesh, T.param_pspecs(ms)))
         else:
@@ -290,29 +445,44 @@ class PagedEngine:
             n_slots=psv.n_slots, pool=self.pool, page_size=psv.page_size,
             max_len=psv.max_len,
             prefill_token_budget=psv.prefill_token_budget,
-            prefix_cache=self.prefix, preempt_after=psv.preempt_after)
+            prefix_cache=self.prefix, preempt_after=psv.preempt_after,
+            degrade_slots=self.n_deg)
         if mesh is not None:
             c_abs, c_specs = PG.paged_cache_meta(
-                ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
+                ms, n_slots=self.n_main, n_pages=psv.n_pages,
                 page_size=psv.page_size, dtype=psv.cache_dtype)
             self.caches = jax.tree.map(
                 lambda a, sh: jax.device_put(jnp.zeros(a.shape, a.dtype), sh),
                 c_abs, _tree_shardings(mesh, c_specs))
         else:
             self.caches = PG.init_paged_caches(
-                ms, n_slots=psv.n_slots, n_pages=psv.n_pages,
+                ms, n_slots=self.n_main, n_pages=psv.n_pages,
                 page_size=psv.page_size, dtype=psv.cache_dtype)
+        # The degraded cohort's cache tree spans the SAME page-id space
+        # (one host-side PagePool partitions ids between cohorts by
+        # allocation, not by range) but holds aggressive-plan kv.
+        self.caches_deg = (PG.init_paged_caches(
+            self.ms_deg, n_slots=self.n_deg, n_pages=psv.n_pages,
+            page_size=psv.page_size, dtype=psv.cache_dtype)
+            if self.n_deg else None)
         P_slot = psv.pages_per_slot
-        self.block_tables = np.full((psv.n_slots, P_slot), PG.GARBAGE_PAGE,
+        self.block_tables = np.full((self.n_main, P_slot), PG.GARBAGE_PAGE,
                                     np.int32)
-        self.tok = np.zeros((psv.n_slots,), np.int32)
-        self.pos = np.zeros((psv.n_slots,), np.int32)
+        self.tok = np.zeros((self.n_main,), np.int32)
+        self.pos = np.zeros((self.n_main,), np.int32)
+        self.block_tables_deg = np.full((self.n_deg, P_slot),
+                                        PG.GARBAGE_PAGE, np.int32)
+        self.tok_deg = np.zeros((self.n_deg,), np.int32)
+        self.pos_deg = np.zeros((self.n_deg,), np.int32)
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self.step_count = 0
         self.results: Dict[int, np.ndarray] = {}
         self._requests: Dict[int, Request] = {}
-        self._decode = self._make_decode()
+        self._decode = self._make_decode(COHORT_MAIN)
+        self._decode_deg = (self._make_decode(COHORT_DEGRADED)
+                            if self.n_deg else None)
         self._prefills: Dict[Any, Any] = {}   # program-shape key -> jit fn
+        self._scrubs: Dict[str, Any] = {}     # cohort -> compiled scrub
         # Greedy + fp32 pool => suffix/replay recomputation is bit-exact
         # against the original run; the engine then self-checks the replay.
         self._exact = (psv.temperature == 0.0
@@ -320,7 +490,15 @@ class PagedEngine:
         self.counters = {"prefill_tokens": 0, "hit_tokens": 0,
                          "resume_hit_tokens": 0, "replay_tokens": 0,
                          "full_prefills": 0, "suffix_prefills": 0,
-                         "prefix_hits": 0}
+                         "prefix_hits": 0, "failed": 0, "expired": 0,
+                         "cancelled": 0, "shed": 0, "degraded_admissions": 0}
+        # Chaos state: the plan schedules, the engine applies + logs.
+        self._plan = fault_plan
+        self.fault_log: List[Dict[str, Any]] = []
+        self.fault_counts: Dict[str, int] = {k: 0 for k in F.ALL_FAULT_KINDS}
+        self._poison_slots: set = set()   # slots NaN-poisoned THIS step
+        self._poison_next = 0             # deferred poison_prompt events
+        self._storm_next = 0              # deferred deadline_storm victims
 
     @staticmethod
     def _prefix_eligible(ms: T.ModelStructure) -> bool:
@@ -332,26 +510,58 @@ class PagedEngine:
                    and spec.ffn in ("mlp", None)
                    for seg in ms.segments for spec in seg.group.specs)
 
+    # -- cohort plumbing ------------------------------------------------
+    def _cohort_of_slot(self, slot: int) -> str:
+        return COHORT_MAIN if slot < self.n_main else COHORT_DEGRADED
+
+    def _arrays(self, cohort: str):
+        """(tok, pos, block_tables, slot_base) for a cohort; slot indices
+        into these arrays are ``global_slot - slot_base``."""
+        if cohort == COHORT_MAIN:
+            return self.tok, self.pos, self.block_tables, 0
+        return self.tok_deg, self.pos_deg, self.block_tables_deg, self.n_main
+
+    def _model(self, cohort: str):
+        if cohort == COHORT_MAIN:
+            return self.params, self.ms
+        return self.params_deg, self.ms_deg
+
+    def _get_caches(self, cohort: str):
+        return self.caches if cohort == COHORT_MAIN else self.caches_deg
+
+    def _set_caches(self, cohort: str, val) -> None:
+        if cohort == COHORT_MAIN:
+            self.caches = val
+        else:
+            self.caches_deg = val
+
+    def _decode_fn(self, cohort: str):
+        return self._decode if cohort == COHORT_MAIN else self._decode_deg
+
     # -- compiled programs ---------------------------------------------
-    def _make_decode(self):
+    def _make_decode(self, cohort: str):
+        params_ms = self._model(cohort)[1] if cohort == COHORT_DEGRADED \
+            else self.ms
+        size = self.n_main if cohort == COHORT_MAIN else self.n_deg
         if self.mesh is not None:
             fn, _, _, _ = make_sharded_serve_step(
-                self.ms, self.mesh, None, batch=self.psv.n_slots,
-                paged=self.psv)
+                params_ms, self.mesh, None, batch=size, paged=self.psv)
             return fn
-        local = make_paged_decode_fn(self.ms, self.pc, self.psv)
+        local = make_paged_decode_fn(params_ms, self.pc, self.psv)
         return jax.jit(local, donate_argnums=(1,))
 
-    def _prefill_fn(self, prompt_len: int):
+    def _prefill_fn(self, prompt_len: int, cohort: str):
         """Exact-length prefill + page scatter, compiled once per distinct
-        prompt length (the cache emission length rounds up to whole pages;
-        the forward itself is the exact prompt — no padding)."""
+        (prompt length, cohort) — the cohorts differ in both the model
+        structure (re-paired stack) and the cache tree's slot count."""
+        ms = self._model(cohort)[1]
+        size = self.n_main if cohort == COHORT_MAIN else self.n_deg
         if self.mesh is not None:
             fn, _, _ = make_sharded_prefill(
-                self.ms, self.mesh, None, batch=1, prompt_len=prompt_len,
-                paged=self.psv)
+                ms, self.mesh, None, batch=1, prompt_len=prompt_len,
+                paged=self.psv, paged_slots=size)
             return fn
-        local = make_paged_prefill_fn(self.ms, self.pc, self.psv, prompt_len)
+        local = make_paged_prefill_fn(ms, self.pc, self.psv, prompt_len)
         return jax.jit(local, donate_argnums=(1,))
 
     def _suffix_fn(self, n_ctx_pages: int, suffix_len: int):
@@ -362,7 +572,8 @@ class PagedEngine:
         ``ctx + suffix`` keys — the cold full-prompt program's reduction
         shape for the same row — so greedy outputs stay bit-identical to a
         cold run (fp32 pool). Copy-on-write holds by construction: the
-        program writes only ``sfx_ids`` pages, never ``ctx_ids``.
+        program writes only ``sfx_ids`` pages, never ``ctx_ids``. Main
+        cohort only (the radix tree never holds degraded-plan pages).
         """
         ms, pc, psv = self.ms, self.pc, self.psv
         assert ms.tp == 1, "prefix sharing is tp=1 only (auto-disabled)"
@@ -380,52 +591,273 @@ class PagedEngine:
                 lambda c: c.astype(psv.cache_dtype)
                 if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
             last = logits[:, suffix_len - 1]
+            ok = _finite_flag(pc, last, *jax.tree.leaves(seq))
             if psv.temperature > 0:
                 tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
             else:
                 tok0 = E.vocab_parallel_argmax(last, pc)
             caches = PG.scatter_prefill(caches, seq, sfx_ids, slot)
-            return tok0.astype(jnp.int32), caches
+            return tok0.astype(jnp.int32), ok, caches
 
         return jax.jit(f, donate_argnums=(1,))
 
+    def _scrub_fn(self, cohort: str):
+        """Compiled page/state scrub for one cohort (built lazily — the
+        happy path never needs it). Fixed shapes: the page-id vector is
+        padded with the garbage page."""
+        fn = self._scrubs.get(cohort)
+        if fn is not None:
+            return fn
+        if self.mesh is not None:
+            _, c_specs = PG.paged_cache_meta(
+                self.ms, n_slots=self.n_main, n_pages=self.psv.n_pages,
+                page_size=self.psv.page_size, dtype=self.psv.cache_dtype)
+            wrapped = shard_map(PG.scrub_pages, mesh=self.mesh,
+                                in_specs=(c_specs, P(), P()),
+                                out_specs=c_specs, check_vma=False)
+            fn = jax.jit(wrapped, donate_argnums=(0,))
+        else:
+            fn = jax.jit(PG.scrub_pages, donate_argnums=(0,))
+        self._scrubs[cohort] = fn
+        return fn
+
     # -- public API ----------------------------------------------------
     def add_request(self, prompt, max_new: int,
-                    eos_token: Optional[int] = None) -> int:
-        """Queue a request; returns its id. Fails fast if the request could
-        NEVER fit the pool (otherwise exhaustion just queues it)."""
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        total = prompt.shape[0] + max_new
-        if total > self.psv.max_len:
-            raise ValueError(
-                f"request needs {total} positions > max_len={self.psv.max_len}")
-        need = PG.pages_needed(prompt.shape[0], max_new, self.psv.page_size)
-        if need > self.psv.n_pages - 1:
-            raise ValueError(
-                f"request needs {need} pages > pool capacity "
-                f"{self.psv.n_pages - 1}")
+                    eos_token: Optional[int] = None,
+                    deadline: Optional[int] = None) -> int:
+        """Queue a request; returns its id. Submit-time validation
+        (``Scheduler.submit``) rejects malformed work with typed
+        ``InvalidRequestError``s; the engine adds the vocabulary-range
+        check (only it knows the model) and the bounded-queue policy.
+
+        ``deadline``: ABSOLUTE engine step by which the request must
+        finish; at the first step boundary where ``step_count >= deadline``
+        it is EXPIRED and releases everything. None = no deadline.
+        """
+        arr = np.asarray(prompt)
+        if arr.size and np.issubdtype(arr.dtype, np.integer):
+            vocab = self.ms.cfg.vocab_size
+            if (arr < 0).any() or (arr >= vocab).any():
+                raise InvalidRequestError(
+                    f"prompt holds token ids outside [0, {vocab}): "
+                    f"min={int(arr.min())}, max={int(arr.max())}")
+        if self.psv.max_queue and self.sched.n_queued >= self.psv.max_queue:
+            self._shed_for(deadline)
         eos = self.psv.eos_token if eos_token is None else eos_token
-        r = self.sched.submit(prompt, max_new, eos)
+        r = self.sched.submit(prompt, max_new, eos,
+                              deadline=-1 if deadline is None else deadline)
         self._requests[r.rid] = r
+        # Deferred chaos events that needed a submission to land on.
+        if self._poison_next > 0:
+            self._poison_next -= 1
+            r.prompt = r.prompt.copy()
+            r.prompt[r.rid % r.prompt_len] = self.ms.cfg.vocab_size + 1
+            self._log_fault(F.POISON_PROMPT, rid=r.rid, deferred=True)
+        if self._storm_next > 0:
+            self._storm_next -= 1
+            r.deadline = self.step_count
+            self._log_fault(F.DEADLINE_STORM, rid=r.rid, deferred=True)
         return r.rid
 
-    def _run_prefill(self, r: Request, ctx: int):
+    def cancel(self, rid: int) -> bool:
+        """Client-initiated abort. True when the request was live (now
+        CANCELLED, slot and pages released immediately); False when it had
+        already reached a terminal state (results are whatever it produced
+        first). Unknown rids raise KeyError."""
+        r = self._requests[rid]
+        if r.status in TERMINAL_STATES:
+            return False
+        slot = r.slot
+        self.sched.cancel(r, self.step_count)
+        if slot >= 0:
+            self._clear_slot(slot)
+        self.results[rid] = np.asarray(r.out, np.int32)
+        self.counters["cancelled"] += 1
+        return True
+
+    def _shed_for(self, newcomer_deadline: Optional[int]) -> None:
+        """Bounded-queue policy: the queue is full. Shed the queued request
+        with the SLACKEST deadline if the newcomer is strictly more urgent;
+        otherwise reject the newcomer (``QueueFullError``). No-deadline
+        requests are infinitely slack, so any deadlined newcomer displaces
+        one; a no-deadline newcomer never displaces anything."""
+        inf = float("inf")
+        nd = inf if newcomer_deadline is None else newcomer_deadline
+        victim = max(self.sched.queue,
+                     key=lambda r: (inf if r.deadline < 0 else r.deadline,
+                                    r.rid))
+        vd = inf if victim.deadline < 0 else victim.deadline
+        if nd >= vd:
+            raise QueueFullError(
+                f"queue at max_queue={self.psv.max_queue} and no queued "
+                f"request is slacker than the newcomer (deadline "
+                f"{newcomer_deadline})")
+        self.sched.expire(victim, self.step_count, error=LoadShedError(
+            f"rid={victim.rid} (deadline {victim.deadline}) shed for a "
+            f"more urgent arrival (deadline {newcomer_deadline})"))
+        self.results[victim.rid] = np.asarray(victim.out, np.int32)
+        self.counters["shed"] += 1
+
+    # -- fault containment ---------------------------------------------
+    def _clear_slot(self, slot: int) -> None:
+        tok, pos, bt, lo = self._arrays(self._cohort_of_slot(slot))
+        bt[slot - lo] = PG.GARBAGE_PAGE
+        tok[slot - lo] = 0
+        pos[slot - lo] = 0
+
+    def _scrub_slot(self, r: Request, private: List[int]) -> None:
+        cohort = self._cohort_of_slot(r.slot)
+        _, _, _, lo = self._arrays(cohort)
+        ids = np.full((self.psv.pages_per_slot,), PG.GARBAGE_PAGE, np.int32)
+        ids[:len(private)] = private
+        fn = self._scrub_fn(cohort)
+        self._set_caches(cohort, fn(self._get_caches(cohort),
+                                    jnp.asarray(ids),
+                                    jnp.int32(r.slot - lo)))
+
+    def _fail(self, r: Request, error, *, scrub: bool,
+              stats: Optional[Dict[str, int]] = None) -> None:
+        """Contain a per-request fault: FAILED terminal state, slot row
+        cleared, all pages released this step. ``scrub``: the request may
+        have written non-finite values into its pages — zero its PRIVATE
+        pages before they return to the free list, and purge its own radix
+        donations (defense in depth; see PrefixCache.purge_pages)."""
+        slot = r.slot
+        if slot >= 0 and scrub:
+            private = r.pages[r.n_shared:]
+            if private:
+                self._scrub_slot(r, private)
+        donated = list(r.donated_pages)
+        self.sched.fail(r, self.step_count, error)
+        if slot >= 0:
+            self._clear_slot(slot)
+        if scrub and donated and self.prefix is not None:
+            self.prefix.purge_pages(donated, self.pool)
+        self.results[r.rid] = np.asarray(r.out, np.int32)
+        self.counters["failed"] += 1
+        if stats is not None:
+            stats["failed"] += 1
+
+    def _expire_pass(self, stats: Dict[str, int]) -> None:
+        """Deadlines are honored at step boundaries: any live request whose
+        deadline has passed is EXPIRED and releases everything now."""
+        sc = self.step_count
+        for r in [x for x in list(self.sched.queue)
+                  if 0 <= x.deadline <= sc]:
+            self.sched.expire(r, sc)
+            self.results[r.rid] = np.asarray(r.out, np.int32)
+            self.counters["expired"] += 1
+            stats["expired"] += 1
+        for r in [x for x in list(self.sched.running.values())
+                  if 0 <= x.deadline <= sc]:
+            slot = r.slot
+            self.sched.expire(r, sc)
+            self._clear_slot(slot)
+            self.results[r.rid] = np.asarray(r.out, np.int32)
+            self.counters["expired"] += 1
+            stats["expired"] += 1
+
+    def _validate_block_tables(self, stats: Dict[str, int]) -> None:
+        """Pre-launch guard: every running slot's host block-table row must
+        be exactly its request's pages followed by garbage padding. A
+        mismatch (cosmic ray, buggy host code, injected corruption) would
+        make the decode gather read/write pages the request does not own —
+        caught HERE, it costs one request instead of silently corrupting
+        whichever request owns the foreign page."""
+        P_slot = self.psv.pages_per_slot
+        for slot, r in sorted(self.sched.running.items()):
+            _, _, bt, lo = self._arrays(self._cohort_of_slot(slot))
+            expect = np.full((P_slot,), PG.GARBAGE_PAGE, np.int32)
+            expect[:len(r.pages)] = r.pages
+            if not np.array_equal(bt[slot - lo], expect):
+                self._fail(r, BlockTableCorruptionError(
+                    f"rid={r.rid} slot {slot}: block-table row "
+                    f"{bt[slot - lo].tolist()} != owned pages "
+                    f"{r.pages}"), scrub=False, stats=stats)
+
+    # -- chaos ----------------------------------------------------------
+    def _log_fault(self, kind: str, *, rid: Optional[int] = None,
+                   slot: Optional[int] = None, applied: bool = True,
+                   deferred: bool = False) -> None:
+        self.fault_log.append({
+            "step": self.step_count, "kind": kind, "rid": rid,
+            "slot": slot, "applied": applied, "deferred": deferred})
+        if applied:
+            self.fault_counts[kind] += 1
+
+    def _inject(self) -> None:
+        """Apply this step's scheduled fault events. Victim selection is a
+        pure function of the (deterministic) engine state, so a fixed
+        (seed, workload) reproduces the exact same fault_log and results —
+        the property the chaos gate asserts by running the plan twice."""
+        for ev in self._plan.at(self.step_count):
+            if ev.kind == F.PAGE_ALLOC_FAIL:
+                self.pool.fail_next_allocs(ev.payload)
+                self._log_fault(ev.kind)
+            elif ev.kind == F.NAN_LOGITS:
+                slots = sorted(self.sched.running)
+                if not slots:
+                    self._log_fault(ev.kind, applied=False)
+                    continue
+                slot = slots[ev.index % len(slots)]
+                self._poison_slots.add(slot)
+                self._log_fault(ev.kind, rid=self.sched.running[slot].rid,
+                                slot=slot)
+            elif ev.kind == F.BLOCK_TABLE_CORRUPT:
+                slots = sorted(self.sched.running)
+                if not slots:
+                    self._log_fault(ev.kind, applied=False)
+                    continue
+                slot = slots[ev.index % len(slots)]
+                r = self.sched.running[slot]
+                _, _, bt, lo = self._arrays(self._cohort_of_slot(slot))
+                col = ev.index % self.psv.pages_per_slot
+                bt[slot - lo, col] = (int(bt[slot - lo, col]) + ev.payload) \
+                    % self.psv.n_pages
+                self._log_fault(ev.kind, rid=r.rid, slot=slot)
+            elif ev.kind == F.POISON_PROMPT:
+                queued = [q for q in self.sched.queue]
+                if not queued:
+                    self._poison_next += 1
+                    self._log_fault(ev.kind, applied=False, deferred=True)
+                    continue
+                r = queued[ev.index % len(queued)]
+                r.prompt = r.prompt.copy()
+                r.prompt[ev.index % r.prompt_len] = \
+                    self.ms.cfg.vocab_size + ev.payload
+                self._log_fault(ev.kind, rid=r.rid)
+            elif ev.kind == F.DEADLINE_STORM:
+                queued = [q for q in self.sched.queue][:ev.payload]
+                if not queued:
+                    self._storm_next += ev.payload
+                    self._log_fault(ev.kind, applied=False, deferred=True)
+                    continue
+                for r in queued:
+                    r.deadline = self.step_count
+                    self._log_fault(ev.kind, rid=r.rid)
+
+    # -- per-request device work ----------------------------------------
+    def _run_prefill(self, r: Request, ctx: int) -> Tuple[int, bool]:
         """Stage-1 forward over the unmatched prompt suffix (the full
-        prompt when ctx == 0). Returns the token sampled from the last
-        prompt position's logits."""
+        prompt when ctx == 0). Returns (token sampled from the last prompt
+        position's logits, finite-guard flag)."""
         ps = self.psv.page_size
         Lp = r.prompt_len
         n_pg_prompt = -(-Lp // ps)
+        cohort = r.cohort
+        caches = self._get_caches(cohort)
+        params = self._model(cohort)[0]
+        _, _, _, lo = self._arrays(cohort)
+        slot = jnp.int32(r.slot - lo)
         self._key, sub = jax.random.split(self._key)
         if ctx == 0:
-            key = ("full", Lp)
+            key = ("full", Lp, cohort)
             fn = self._prefills.get(key)
             if fn is None:
-                fn = self._prefills[key] = self._prefill_fn(Lp)
-            tok0, self.caches = fn(
-                self.params, self.caches, jnp.asarray(r.prompt[None]),
-                jnp.asarray(r.pages[:n_pg_prompt], jnp.int32),
-                jnp.int32(r.slot), sub)
+                fn = self._prefills[key] = self._prefill_fn(Lp, cohort)
+            tok0, ok, caches = fn(
+                params, caches, jnp.asarray(r.prompt[None]),
+                jnp.asarray(r.pages[:n_pg_prompt], jnp.int32), slot, sub)
             self.counters["prefill_tokens"] += Lp
             self.counters["full_prefills"] += 1
         else:
@@ -435,16 +867,16 @@ class PagedEngine:
             fn = self._prefills.get(key)
             if fn is None:
                 fn = self._prefills[key] = self._suffix_fn(m, Ls)
-            tok0, self.caches = fn(
-                self.params, self.caches, jnp.asarray(r.prompt[None, ctx:]),
+            tok0, ok, caches = fn(
+                params, caches, jnp.asarray(r.prompt[None, ctx:]),
                 jnp.asarray(r.pages[:m], jnp.int32),
-                jnp.asarray(r.pages[m:n_pg_prompt], jnp.int32),
-                jnp.int32(r.slot), sub)
+                jnp.asarray(r.pages[m:n_pg_prompt], jnp.int32), slot, sub)
             self.counters["prefill_tokens"] += Ls
             self.counters["suffix_prefills"] += 1
-        return int(tok0[0])
+        self._set_caches(cohort, caches)
+        return int(tok0[0]), bool(ok)
 
-    def _replay(self, r: Request, start: int) -> None:
+    def _replay(self, r: Request, start: int) -> bool:
         """Resume catch-up: teacher-force the parked generated tokens whose
         kv fell outside the surviving radix prefix through the REGULAR
         decode program (all other slots masked to the garbage page, their
@@ -452,7 +884,8 @@ class PagedEngine:
         produced it originally — same program, same token, same kv bits —
         so with greedy sampling the replayed prediction must reproduce the
         parked token, which the engine asserts (the continuous form of the
-        preempt-resume bit-identity gate).
+        preempt-resume bit-identity gate). Returns False if the finite
+        guard trips mid-replay (the caller fails the request).
 
         Recurrent state (mamba/rec conv/h) needs explicit protection: the
         masked slots' ATTENTION writes land on the garbage page, but the
@@ -461,51 +894,78 @@ class PagedEngine:
         the state entries before replaying and restores every row except
         the replaying slot's afterwards (their true timeline has no step
         here)."""
-        n_slots = self.psv.n_slots
+        cohort = r.cohort
+        tok_a, pos_a, bt_a, lo = self._arrays(cohort)
+        size = tok_a.shape[0]
+        loc = r.slot - lo
+        decode = self._decode_fn(cohort)
+        params = self._model(cohort)[0]
         Lp = r.prompt_len
         end = Lp + len(r.out) - 1      # exclusive; kv for end-1 is the
         if start >= end:               # resumed decode step's own write
-            return
+            return True
+        caches = self._get_caches(cohort)
         state_saved = [
             {name: np.asarray(v) for name, v in seg.items()
-             if not PG.is_paged_entry(name)} for seg in self.caches]
+             if not PG.is_paged_entry(name)} for seg in caches]
+        no_poison = jnp.zeros((size,), jnp.bool_)
+        survived = True
         for p in range(start, end):
-            tok_v = np.zeros((n_slots,), np.int32)
-            pos_v = np.zeros((n_slots,), np.int32)
-            bt = np.full_like(self.block_tables, PG.GARBAGE_PAGE)
-            tok_v[r.slot] = r.out[p - Lp]
-            pos_v[r.slot] = p
-            bt[r.slot] = self.block_tables[r.slot]
+            tok_v = np.zeros((size,), np.int32)
+            pos_v = np.zeros((size,), np.int32)
+            bt = np.full_like(bt_a, PG.GARBAGE_PAGE)
+            tok_v[loc] = r.out[p - Lp]
+            pos_v[loc] = p
+            bt[loc] = bt_a[loc]
             self._key, sub = jax.random.split(self._key)
-            nxt, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(tok_v),
-                jnp.asarray(pos_v), jnp.asarray(bt), sub)
+            nxt, ok, caches = decode(
+                params, caches, jnp.asarray(tok_v),
+                jnp.asarray(pos_v), jnp.asarray(bt), no_poison, sub)
+            if not bool(np.asarray(ok)[loc]):
+                survived = False
+                break
             if self._exact:
-                got = int(np.asarray(nxt)[r.slot])
+                got = int(np.asarray(nxt)[loc])
                 assert got == r.out[p - Lp + 1], (
                     f"replay divergence at pos {p}: {got} != "
                     f"{r.out[p - Lp + 1]} (rid={r.rid})")
             self.counters["replay_tokens"] += 1
-        for seg, saved in zip(self.caches, state_saved):
+        for seg, saved in zip(caches, state_saved):
             for name, host in saved.items():
-                sl = (slice(None),) * T.cache_batch_axis(name) + (r.slot,)
+                sl = (slice(None),) * T.cache_batch_axis(name) + (loc,)
                 merged = host.copy()
                 merged[sl] = np.asarray(seg[name])[sl]
                 # Re-place at the entry's current sharding: under a mesh the
                 # state entries are model-sharded and a bare jnp.asarray
                 # would silently collapse them onto one device.
                 seg[name] = jax.device_put(merged, seg[name].sharding)
+        self._set_caches(cohort, caches)
+        return survived
 
-    def _start(self, r: Request) -> None:
+    def _start(self, r: Request) -> bool:
         """Bring an admitted request onto its slot: link its block table,
         run the stage-1 prefill (full / suffix / skipped when the radix hit
         covers the whole prompt), and for resumed requests replay the
-        parked generated positions."""
+        parked generated positions. Returns False when a fault guard
+        FAILED the request (admission rolled back: slot and pages already
+        released)."""
+        # Device-boundary prompt guard: submit-time validation ran, but the
+        # prompt may have been corrupted since (the poisoned-prompt chaos
+        # kind models a tokenizer/host bug). An out-of-vocab id would index
+        # the embedding out of range — fail the request, not the engine.
+        vocab = self.ms.cfg.vocab_size
+        if (r.prompt < 0).any() or (r.prompt >= vocab).any():
+            self._fail(r, PoisonedPromptError(
+                f"rid={r.rid}: prompt token ids outside [0, {vocab}) at "
+                f"admission (min={int(r.prompt.min())}, "
+                f"max={int(r.prompt.max())})"), scrub=False)
+            return False
         ps = self.psv.page_size
         ctx = r.n_shared * ps
         Lp = r.prompt_len
         resumed = bool(r.out)
-        row = self.block_tables[r.slot]
+        tok_a, pos_a, bt_a, lo = self._arrays(r.cohort)
+        row = bt_a[r.slot - lo]
         row[:] = PG.GARBAGE_PAGE
         row[:len(r.pages)] = r.pages
         # hit_tokens counts PROMPT tokens served from shared pages on FRESH
@@ -520,7 +980,14 @@ class PagedEngine:
             if ctx:
                 self.counters["prefix_hits"] += 1
         if ctx < Lp:
-            tok0 = self._run_prefill(r, ctx)
+            tok0, ok = self._run_prefill(r, ctx)
+            if not ok:
+                # The prefill may have scattered non-finite kv into the
+                # request's pages before the guard was read — scrub.
+                self._fail(r, NonFiniteLogitsError(
+                    f"rid={r.rid}: non-finite logits/cache in prefill"),
+                    scrub=True)
+                return False
             if not resumed:
                 r.out.append(tok0)
             elif self._exact:
@@ -529,59 +996,102 @@ class PagedEngine:
                 assert tok0 == r.out[0], (tok0, r.out[0], r.rid)
         # Early donation: the prompt pages are complete now — concurrent
         # same-prefix requests admitted from the NEXT step on can share
-        # them without waiting for this request to finish.
+        # them without waiting for this request to finish. (No-op for the
+        # degraded cohort: its pages hold aggressive-plan bits.)
         self.sched.donate_prefilled(r, self.step_count)
         if resumed:
-            self._replay(r, max(Lp, ctx))
-        self.tok[r.slot] = r.out[-1]
-        self.pos[r.slot] = r.pos
+            if not self._replay(r, max(Lp, ctx)):
+                self._fail(r, NonFiniteLogitsError(
+                    f"rid={r.rid}: non-finite logits during decode replay"),
+                    scrub=True)
+                return False
+        tok_a[r.slot - lo] = r.out[-1]
+        pos_a[r.slot - lo] = r.pos
+        return True
 
     def _finish(self, r: Request) -> None:
         slot = r.slot
         self.sched.finish(r, self.step_count)
-        self.block_tables[slot] = PG.GARBAGE_PAGE
-        self.tok[slot] = 0
-        self.pos[slot] = 0
+        self._clear_slot(slot)
         self.results[r.rid] = np.asarray(r.out, np.int32)
 
     def _admit(self, stats: Dict[str, int], *, count_blocked: bool) -> None:
+        degrade = (self.psv.degrade_delta
+                   and self.sched.n_queued >= self.psv.degrade_queue_depth)
         for r in self.sched.admit(self.step_count,
-                                  count_blocked=count_blocked):
-            self._start(r)
+                                  count_blocked=count_blocked,
+                                  degrade=degrade):
+            if r.cohort == COHORT_DEGRADED and not r.preemptions:
+                self.counters["degraded_admissions"] += 1
+            if not self._start(r):
+                stats["failed"] += 1
+                continue
             stats["admitted"] += 1
             if r.done():      # max_new == 1 (or instant EOS) on prefill
                 self._finish(r)
                 stats["finished"] += 1
 
+    def _decode_cohort(self, cohort: str, stats: Dict[str, int]) -> None:
+        tok_a, pos_a, bt_a, lo = self._arrays(cohort)
+        size = tok_a.shape[0]
+        running = {s: r for s, r in self.sched.running.items()
+                   if lo <= s < lo + size}
+        if not running:
+            return
+        poison = np.zeros((size,), bool)
+        for s in self._poison_slots:
+            if lo <= s < lo + size:
+                poison[s - lo] = True
+        self._key, sub = jax.random.split(self._key)
+        nxt, ok, caches = self._decode_fn(cohort)(
+            self._model(cohort)[0], self._get_caches(cohort),
+            jnp.asarray(tok_a), jnp.asarray(pos_a), jnp.asarray(bt_a),
+            jnp.asarray(poison), sub)
+        self._set_caches(cohort, caches)
+        nxt = np.asarray(nxt)
+        ok = np.asarray(ok)
+        for slot, r in sorted(running.items()):
+            loc = slot - lo
+            if not bool(ok[loc]):
+                # Non-finite logits on this row only: the decode step wrote
+                # this slot's kv from finite inputs EXCEPT possibly under
+                # real numeric poison, so scrub its private pages on the
+                # way out; every other row is untouched (row independence).
+                self._fail(r, NonFiniteLogitsError(
+                    f"rid={r.rid}: non-finite logits in decode at step "
+                    f"{self.step_count} (slot {slot})"),
+                    scrub=True, stats=stats)
+                continue
+            r.out.append(int(nxt[loc]))
+            tok_a[loc] = nxt[loc]
+            pos_a[loc] += 1
+            stats["decoded"] += 1
+            if r.done():
+                self._finish(r)
+                stats["finished"] += 1
+
     def step(self) -> Dict[str, int]:
-        """One engine iteration: admission+prefill (with blocked-head
-        preemption when enabled), then one decode program over every slot.
-        Returns counters for the step."""
+        """One engine iteration: chaos injection (when armed) -> deadline
+        expiry -> admission+prefill (with blocked-head preemption when
+        enabled) -> block-table validation -> one decode program per active
+        cohort. Returns counters for the step."""
         stats = {"admitted": 0, "decoded": 0, "finished": 0,
-                 "preempted": 0, "live_pages": 0}
+                 "preempted": 0, "live_pages": 0, "failed": 0, "expired": 0}
+        if self._plan is not None:
+            self._inject()
+        self._expire_pass(stats)
         self._admit(stats, count_blocked=True)
         if self.sched.should_preempt():
             _victim, slot = self.sched.preempt_youngest(self.step_count)
-            self.block_tables[slot] = PG.GARBAGE_PAGE
-            self.tok[slot] = 0
-            self.pos[slot] = 0
+            self._clear_slot(slot)
             stats["preempted"] += 1
             # The freed pages/slot may unblock the head immediately.
             self._admit(stats, count_blocked=False)
-        if self.sched.n_running:
-            self._key, sub = jax.random.split(self._key)
-            nxt, self.caches = self._decode(
-                self.params, self.caches, jnp.asarray(self.tok),
-                jnp.asarray(self.pos), jnp.asarray(self.block_tables), sub)
-            nxt = np.asarray(nxt)
-            for slot, r in list(self.sched.running.items()):
-                r.out.append(int(nxt[slot]))
-                self.tok[slot] = nxt[slot]
-                self.pos[slot] += 1
-                stats["decoded"] += 1
-                if r.done():
-                    self._finish(r)
-                    stats["finished"] += 1
+        self._validate_block_tables(stats)
+        self._decode_cohort(COHORT_MAIN, stats)
+        if self.n_deg:
+            self._decode_cohort(COHORT_DEGRADED, stats)
+        self._poison_slots.clear()
         self.pool.check_balance()
         if self.prefix is not None:
             self.prefix.check_locks()
@@ -590,8 +1100,14 @@ class PagedEngine:
         return stats
 
     def drain(self) -> Dict[int, np.ndarray]:
-        """Step until every submitted request finished; returns
-        {rid: generated tokens}."""
+        """Step until every submitted request reached a TERMINAL state;
+        returns {rid: generated tokens}. Backwards-compatible: the dict
+        maps every rid (including FAILED/CANCELLED/EXPIRED, whose value is
+        the partial output produced before termination) — per-request
+        status is ``engine.request(rid).state`` and the typed error
+        ``engine.request(rid).error``. Cancelling or expiring mid-flight
+        can therefore never hang the drain: terminal requests leave the
+        queue/running sets the step they terminate."""
         while self.sched.n_queued or self.sched.n_running:
             self.step()
         return dict(self.results)
@@ -645,11 +1161,13 @@ def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
 
     ``paged`` threads the continuous-batching engine's pool through the
     same wrapper: the local step becomes the paged decode (params, caches,
-    tok, pos, block_tables, key) with the pool's pspecs from
-    ``paged_cache_meta`` (kv-head axis over "model", everything else
-    replicated) and tok/pos/block tables replicated — host-side scheduling
-    is tp-agnostic, so the ONLY sharded state is the pool itself. ``sv``
-    may be None in that mode; ``batch`` is the slot count.
+    tok, pos, block_tables, poison, key) -> (next_tok, ok, caches) with
+    the pool's pspecs from ``paged_cache_meta`` (kv-head axis over
+    "model", everything else replicated) and tok/pos/block tables/poison
+    replicated — host-side scheduling is tp-agnostic, so the ONLY sharded
+    state is the pool itself; the finite flag ``ok`` is pmax-reduced over
+    tp inside the step so its replicated out-spec holds. ``sv`` may be
+    None in that mode; ``batch`` is the slot count.
     """
     if paged is not None:
         pc = make_context(mesh, sp=False)
@@ -660,8 +1178,8 @@ def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
             page_size=paged.page_size, dtype=paged.cache_dtype)
         wrapped = shard_map(
             local, mesh=mesh,
-            in_specs=(p_specs, c_specs, P(), P(), P(), P()),
-            out_specs=(P(), c_specs),
+            in_specs=(p_specs, c_specs, P(), P(), P(), P(), P()),
+            out_specs=(P(), P(), c_specs),
             check_vma=False)
         return jax.jit(wrapped, donate_argnums=(1,)), c_abs, c_specs, pc
     pc = make_context(mesh, sp=False)
@@ -682,24 +1200,27 @@ def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
 
 def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
                          *, batch: int, prompt_len: int, sp: bool = True,
-                         paged: Optional[PagedServeConfig] = None):
+                         paged: Optional[PagedServeConfig] = None,
+                         paged_slots: Optional[int] = None):
     """jit(shard_map(prefill)) for the ring cache (default), or — with
     ``paged`` — the engine's exact-length prefill + page scatter: the
     forward runs replicated over the sequence (sp off: prompt lengths are
     exact, not tp-multiples), each rank scatters its LOCAL kv-head shard
     of the emitted pages into its pool shard, and page ids/slot stay
-    host-side and tp-agnostic. Returns (fn, cache_pspecs, pc)."""
+    host-side and tp-agnostic. ``paged_slots`` overrides the cache tree's
+    slot count (cohort-partitioned engines build per-cohort trees).
+    Returns (fn, cache_pspecs, pc)."""
     if paged is not None:
         pc = make_context(mesh, sp=False)
         local = make_paged_prefill_fn(ms, pc, paged, prompt_len)
         p_specs = T.param_pspecs(ms)
         _, c_specs = PG.paged_cache_meta(
-            ms, n_slots=paged.n_slots, n_pages=paged.n_pages,
+            ms, n_slots=paged_slots or paged.n_slots, n_pages=paged.n_pages,
             page_size=paged.page_size, dtype=paged.cache_dtype)
         wrapped = shard_map(
             local, mesh=mesh,
             in_specs=(p_specs, c_specs, P(), P(), P(), P()),
-            out_specs=(P(), c_specs),
+            out_specs=(P(), P(), c_specs),
             check_vma=False)
         return jax.jit(wrapped, donate_argnums=(1,)), c_specs, pc
     pc = make_context(mesh, sp=sp)

@@ -181,6 +181,42 @@ def gather_ctx(pool: List[Dict], page_ids) -> List[Dict]:
     return out
 
 
+def scrub_pages(pool: List[Dict], page_ids, slot):
+    """Zero a departing request's pages and its slot-state rows.
+
+    Fault-containment path: when a request FAILS with possibly non-finite
+    cache contents (NaN params/activations during its prefill or decode),
+    its private pages go back to the free list — and a later holder would
+    gather whatever bits were left there. Masking makes stale values
+    *ignored* in the softmax, but NaN is absorbing through masked lanes in
+    some kernel layouts, so the engine scrubs before freeing rather than
+    trusting masks. ``page_ids`` is fixed-shape (padded with
+    ``GARBAGE_PAGE`` — zeroing the garbage page is harmless by definition),
+    so one compiled program serves every failure. ``slot`` additionally
+    clears the non-paged recurrent-state entries (conv/h) at the slot.
+    """
+    out = []
+    for seg in pool:
+        nseg = {}
+        for name, pv in seg.items():
+            ba = T.cache_batch_axis(name)
+            if is_paged_entry(name):
+                n_pg = page_ids.shape[0]
+                ps = pv.shape[ba + 1]
+                z = jnp.zeros((*pv.shape[:ba], n_pg, ps, *pv.shape[ba + 2:]),
+                              pv.dtype)
+                if ba == 2:   # stacked pair entry [count, 2, n_pages, ...]
+                    nseg[name] = pv.at[:, :, page_ids].set(z)
+                else:         # per-layer entry [count, n_pages, ...]
+                    nseg[name] = pv.at[:, page_ids].set(z)
+            else:
+                zs = (*pv.shape[:ba], 1, *pv.shape[ba + 1:])
+                nseg[name] = lax.dynamic_update_slice_in_dim(
+                    pv, jnp.zeros(zs, pv.dtype), slot, axis=ba)
+        out.append(nseg)
+    return out
+
+
 def scatter_prefill(pool: List[Dict], seq: List[Dict], page_ids, slot):
     """Place one request's prefill caches into its pages / state slot.
 

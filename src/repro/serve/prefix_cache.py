@@ -206,6 +206,55 @@ class PrefixCache:
                     break
         return freed
 
+    def purge_pages(self, pages: List[int], pool) -> int:
+        """Fault containment: evict every resident node holding one of
+        ``pages``, together with its WHOLE subtree — a child's kv extend
+        the purged path, so once a page is suspect everything donated
+        beyond it is too. Today's engine only reaches this defensively (a
+        request that FAILS after donating passed the prefill finite guard
+        first, so its donated bits are provably finite); it exists so any
+        future write path that can dirty a donated page has a containment
+        primitive that keeps pool accounting balanced. Subtrees containing
+        a LOCKED node are skipped entirely (running requests hold real
+        references into them; they finish or fail on their own terms).
+        Returns the number of pages freed back to the pool."""
+        suspects = set(pages)
+        if not suspects:
+            return 0
+
+        def subtree_locked(n: RadixNode) -> bool:
+            stack = [n]
+            while stack:
+                m = stack.pop()
+                if m.lock > 0:
+                    return True
+                stack.extend(m.children.values())
+            return False
+
+        # Top-most suspect nodes only: purging one drops its whole subtree.
+        roots: List[RadixNode] = []
+        stack = list(self.root.children.values())
+        while stack:
+            n = stack.pop()
+            if n.page in suspects:
+                roots.append(n)
+            else:
+                stack.extend(n.children.values())
+        freed = 0
+        for n in roots:
+            if subtree_locked(n):
+                continue
+            del n.parent.children[n.chunk]
+            drop = [n]
+            while drop:
+                m = drop.pop()
+                drop.extend(m.children.values())
+                pool.free([m.page])
+                self.n_nodes -= 1
+                self.evicted_pages_total += 1
+                freed += 1
+        return freed
+
     @property
     def resident_pages(self) -> int:
         return self.n_nodes

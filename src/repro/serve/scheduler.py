@@ -36,6 +36,29 @@ but radix-hittable at resume), everything else is released, and it is
 re-queued directly BEHIND the blocked head (re-queueing it at position 0
 would let it re-steal the pages the preemption just freed).
 
+Request lifecycle: ``QUEUED -> RUNNING -> FINISHED`` is the happy path;
+``FAILED`` (fault containment: poisoned prompt, non-finite logits,
+corrupted block table), ``CANCELLED`` (client abort), and ``EXPIRED``
+(deadline passed / load shed) are the abnormal terminals. All three
+abnormal transitions go through one ``_terminalize`` path that releases the
+slot and every page WITHOUT donating to the radix tree (a faulted stream's
+pages are suspect; a cancelled/expired stream's donation windows are
+usually partial anyway), records the typed ``ServeError`` on the request,
+and keeps ``allocated - freed == live_unique`` — crash containment must
+never corrupt accounting. Misuse of ``PagePool`` itself (double-free,
+foreign/garbage page) raises ``PageAccountingError`` BEFORE any state
+mutates, so a caught abuse still leaves ``check_balance()`` green.
+
+Overload degradation (``degrade_slots > 0``): the slot range splits into a
+MAIN cohort ``[0, n_slots - degrade_slots)`` and a DEGRADED cohort that the
+engine runs with a more aggressively paired (higher-Δ, shallower) variant
+of the same weights — the paper's retraining-free depth family as a
+load-shedding alternative. The scheduler only tracks cohort membership:
+a request is pinned to its cohort at FIRST admission (its kv bits are
+plan-specific, so preemption resume must land back in the same cohort) and
+degraded requests never touch the radix tree (pages written under a
+different pairing are not interchangeable with main-cohort pages).
+
 Tensor parallelism never reaches this module: page ids, block tables, slot
 indices and refcounts are logical names for DEVICE-side pages whose kv-head
 axis may be sharded over a mesh (repro.serve.paged_cache), so one scheduler
@@ -47,16 +70,24 @@ decode-replay path.
 """
 from __future__ import annotations
 
-from collections import deque
+from collections import Counter, deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro.serve.faults import (DeadlineExceededError, InvalidRequestError,
+                                PageAccountingError, ServeError)
 from repro.serve.paged_cache import GARBAGE_PAGE, pages_needed
 from repro.serve.prefix_cache import PrefixCache, RadixNode
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
+FAILED, CANCELLED, EXPIRED = "failed", "cancelled", "expired"
+#: States a request never leaves; any transition into one releases its
+#: slot and every page within the same engine step.
+TERMINAL_STATES = frozenset({FINISHED, FAILED, CANCELLED, EXPIRED})
+
+COHORT_MAIN, COHORT_DEGRADED = "main", "degraded"
 
 
 class PagePool:
@@ -68,6 +99,14 @@ class PagePool:
     returns the page to the free list and counts as freed. Releasing a
     shared page twice therefore only recycles it once the LAST holder lets
     go — the double-free safety the property tests pin down.
+
+    Misuse raises ``PageAccountingError`` with the WHOLE batch validated
+    before any refcount moves: catching the error leaves the pool exactly
+    as it was (``check_balance()`` stays green), which is what lets the
+    engine contain a buggy release path to the offending request.
+    ``fail_next_allocs`` is the deterministic-chaos hook: the next n calls
+    to ``alloc`` return None as if the pool were exhausted, exercising the
+    caller's rollback path without actually draining the free list.
     """
 
     def __init__(self, n_pages: int):
@@ -79,6 +118,8 @@ class PagePool:
         self.allocated_total = 0     # fresh allocations (0 -> 1)
         self.freed_total = 0         # true frees (1 -> 0)
         self.shared_total = 0        # extra references taken over lifetime
+        self._fail_next = 0          # chaos: pending injected alloc failures
+        self.alloc_faults = 0        # chaos: refusals actually served
 
     @property
     def n_free(self) -> int:
@@ -96,10 +137,19 @@ class PagePool:
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
 
+    def fail_next_allocs(self, n: int) -> None:
+        """Chaos hook: make the next ``n`` ``alloc`` calls return None
+        (indistinguishable from exhaustion to the caller)."""
+        self._fail_next += n
+
     def alloc(self, n: int) -> Optional[List[int]]:
         """n fresh pages at refcount 1, or None if the pool cannot satisfy
         the request (the caller keeps the request QUEUED — exhaustion
         queues, never OOMs)."""
+        if self._fail_next > 0:
+            self._fail_next -= 1
+            self.alloc_faults += 1
+            return None
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
@@ -108,20 +158,40 @@ class PagePool:
         self.allocated_total += n
         return pages
 
+    def _validate(self, pages: List[int], op: str) -> Counter:
+        """Range/liveness check for a whole batch BEFORE mutating anything.
+        Multiplicity-aware: freeing ``[p, p]`` against refcount 1 is a
+        double-free even though each single free would pass."""
+        counts = Counter(pages)
+        for p, c in counts.items():
+            if not 0 <= p < self.n_pages:
+                raise PageAccountingError(
+                    f"{op} of out-of-range page id {p} (pool has pages "
+                    f"1..{self.n_pages - 1})")
+            if p == GARBAGE_PAGE:
+                raise PageAccountingError(
+                    f"{op} of the reserved garbage page {GARBAGE_PAGE}: it "
+                    "is never allocated or refcounted")
+            if self._ref[p] < c:
+                raise PageAccountingError(
+                    f"{op} of page {p} x{c} exceeds its refcount "
+                    f"{int(self._ref[p])}"
+                    + (" (double-free past zero)" if op == "free" else
+                       " (share of a dead page)"))
+        return counts
+
     def share(self, pages: List[int]) -> None:
         """Add one reference per page; every page must already be live."""
+        self._validate(pages, "share")
         for p in pages:
-            assert p != GARBAGE_PAGE, "garbage page is never refcounted"
-            assert self._ref[p] >= 1, f"share of dead page {p}"
             self._ref[p] += 1
         self.shared_total += len(pages)
 
     def free(self, pages: List[int]) -> None:
         """Drop one reference per page; a last-holder release returns the
         page to the free list and advances ``freed_total``."""
+        self._validate(pages, "free")
         for p in pages:
-            assert p != GARBAGE_PAGE, "garbage page is never allocated"
-            assert self._ref[p] >= 1, f"double-free past zero of page {p}"
             self._ref[p] -= 1
             if self._ref[p] == 0:
                 self._free.append(p)
@@ -145,6 +215,16 @@ class Request:
     links into the radix tree (``shared_path`` holds the matched nodes).
     After a preemption, ``out`` keeps the parked generated tokens and
     admission resumes the request by re-linking/re-computing their kv.
+
+    Lifecycle extensions: ``deadline`` is an ABSOLUTE engine step (-1 =
+    none); the engine expires the request at the first step boundary where
+    ``step_count >= deadline``. ``cohort`` pins the request to the slot
+    cohort of its first admission (main vs degraded-Δ — kv bits are
+    plan-specific, see the module docstring). ``error`` carries the typed
+    ``ServeError`` for FAILED/CANCELLED/EXPIRED terminals.
+    ``donated_pages`` tracks pages whose ownership this request transferred
+    to the radix tree, so fault containment can purge exactly its own
+    donations without touching foreign donors' pages.
     """
 
     rid: int
@@ -160,6 +240,16 @@ class Request:
     admitted_step: int = -1
     finished_step: int = -1
     preemptions: int = 0
+    deadline: int = -1            # absolute engine step; -1 = no deadline
+    cohort: Optional[str] = None  # pinned at first admission
+    error: Optional[ServeError] = None
+    donated_pages: List[int] = field(default_factory=list)
+
+    @property
+    def state(self) -> str:
+        """Public name for the lifecycle state (== ``status``); terminal iff
+        ``state in TERMINAL_STATES``."""
+        return self.status
 
     @property
     def prompt_len(self) -> int:
@@ -189,27 +279,41 @@ class Request:
 
 class Scheduler:
     """FCFS admission with token-budget batching, slot recycling, radix
-    prefix matching, and blocked-head preemption.
+    prefix matching, blocked-head preemption, and typed terminal
+    transitions.
 
     Strict FCFS: the queue head blocks admission when it does not fit
     (head-of-line blocking makes page exhaustion starvation-free: the head
     is guaranteed the next freed pages). With ``preempt_after > 0`` the
     head additionally reclaims pages from the youngest running request
     once it has been blocked that many consecutive admission rounds.
+
+    ``degrade_slots`` reserves the TOP of the slot range as the degraded-Δ
+    cohort: ``admit(..., degrade=True)`` may place an unpinned head there
+    when the main cohort is full (surge capacity at reduced depth); with
+    ``degrade=False`` those slots stay idle rather than silently serving
+    degraded quality.
     """
 
     def __init__(self, *, n_slots: int, pool: PagePool, page_size: int,
                  max_len: int, prefill_token_budget: int = 4096,
                  prefix_cache: Optional[PrefixCache] = None,
-                 preempt_after: int = 0):
+                 preempt_after: int = 0, degrade_slots: int = 0):
+        assert 0 <= degrade_slots < n_slots
         self.pool = pool
         self.page_size = page_size
         self.max_len = max_len
         self.prefill_token_budget = prefill_token_budget
         self.prefix_cache = prefix_cache
         self.preempt_after = preempt_after
+        self.n_slots = n_slots
+        self.n_main = n_slots - degrade_slots
         self.queue: Deque[Request] = deque()
-        self.free_slots: List[int] = list(range(n_slots - 1, -1, -1))
+        # Two free lists, one per cohort; ``free_slots`` keeps its historic
+        # name (and meaning: the MAIN cohort) for external callers.
+        self.free_slots: List[int] = list(range(self.n_main - 1, -1, -1))
+        self.free_slots_deg: List[int] = list(
+            range(n_slots - 1, self.n_main - 1, -1))
         self.running: Dict[int, Request] = {}   # slot -> request
         self.head_blocked = 0                   # consecutive blocked rounds
         self.preemptions_total = 0
@@ -224,20 +328,45 @@ class Scheduler:
     def n_queued(self) -> int:
         return len(self.queue)
 
-    def submit(self, prompt: np.ndarray, max_new: int,
-               eos_token: int = -1) -> Request:
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        assert max_new >= 1
+    def _free_list_for(self, slot: int) -> List[int]:
+        return self.free_slots if slot < self.n_main else self.free_slots_deg
+
+    def submit(self, prompt: np.ndarray, max_new: int, eos_token: int = -1,
+               *, deadline: int = -1) -> Request:
+        """Validate + enqueue. Every rejection is an ``InvalidRequestError``
+        (a ``ValueError``) raised BEFORE the request enters the queue:
+        malformed work must fail at the submit boundary, not deep inside a
+        compiled prefill where the whole engine (and every cohabiting
+        stream) would go down with it."""
+        prompt = np.asarray(prompt)
+        if prompt.size and not np.issubdtype(prompt.dtype, np.integer):
+            raise InvalidRequestError(
+                f"prompt dtype {prompt.dtype} is not an integer type; token "
+                "ids must be integral (floats would be truncated silently)")
+        prompt = prompt.astype(np.int32).reshape(-1)
+        if prompt.shape[0] == 0:
+            raise InvalidRequestError(
+                "empty prompt: prefill needs at least one position to "
+                "sample the first token from")
+        if max_new < 1:
+            raise InvalidRequestError(
+                f"max_new={max_new} must be >= 1 (a request that generates "
+                "nothing has no decode step to produce it)")
         total = prompt.shape[0] + max_new
         if total > self.max_len:
-            # ValueError (not assert): an over-length request would sit in
-            # the queue forever — admit() could never satisfy it.
-            raise ValueError(
+            # An over-length request would sit in the queue forever —
+            # admit() could never satisfy it.
+            raise InvalidRequestError(
                 f"request needs {total} positions > max_len={self.max_len}")
         if pages_needed(prompt.shape[0], max_new,
                         self.page_size) > self.pool.n_pages - 1:
-            raise ValueError("request can never fit the page pool")
-        r = Request(self._next_rid, prompt, max_new, eos_token)
+            raise InvalidRequestError(
+                f"request needs "
+                f"{pages_needed(prompt.shape[0], max_new, self.page_size)} "
+                f"pages > pool capacity {self.pool.n_pages - 1}: it can "
+                "never be admitted")
+        r = Request(self._next_rid, prompt, max_new, eos_token,
+                    deadline=deadline)
         self._next_rid += 1
         self.queue.append(r)
         return r
@@ -285,8 +414,12 @@ class Scheduler:
         return path
 
     def _try_admit_head(self, r: Request, path: List[RadixNode],
-                        step: int) -> bool:
+                        step: int, cohort: str) -> bool:
         """Allocate + link the matched queue head; False when blocked."""
+        free = (self.free_slots if cohort == COHORT_MAIN
+                else self.free_slots_deg)
+        if not free:
+            return False
         need = pages_needed(r.prompt_len, r.max_new, self.page_size) \
             - len(path)
         pages = self.pool.alloc(need)
@@ -303,32 +436,50 @@ class Scheduler:
         r.shared_path = path
         r.n_shared = len(path)
         r.pages = [n.page for n in path] + pages
-        r.slot = self.free_slots.pop()
+        r.slot = free.pop()
         r.status = RUNNING
+        r.cohort = cohort
         r.admitted_step = step
         self.running[r.slot] = r
         return True
 
-    def admit(self, step: int = -1, *, count_blocked: bool = True
-              ) -> List[Request]:
+    def admit(self, step: int = -1, *, count_blocked: bool = True,
+              degrade: bool = False) -> List[Request]:
         """Admit queue-head requests while a slot, pages, and prefill-token
         budget remain. The FIRST admission of a round ignores the token
         budget so a prompt longer than the budget cannot livelock. A
         blocked head bumps ``head_blocked`` (the preemption trigger);
-        any admission resets it."""
+        any admission resets it.
+
+        ``degrade``: the engine's SLO-pressure signal. An UNPINNED head may
+        then take a degraded-cohort slot when the main cohort is full;
+        pinned requests (preemption resumes) always re-enter their own
+        cohort. Degraded admissions skip the radix tree entirely: pages
+        written under the aggressive pairing hold different bits than
+        main-cohort pages for the same tokens.
+        """
         admitted: List[Request] = []
         budget = self.prefill_token_budget
-        while self.queue and self.free_slots:
+        while self.queue and (self.free_slots or self.free_slots_deg):
             r = self.queue[0]
-            path = (self._match_head(r, step)
-                    if self.prefix_cache is not None else [])
+            cohort = r.cohort
+            if cohort is None:
+                if self.free_slots:
+                    cohort = COHORT_MAIN
+                elif degrade and self.free_slots_deg:
+                    cohort = COHORT_DEGRADED
+                else:
+                    cohort = COHORT_MAIN   # blocked: wait for a main slot
+            use_tree = (self.prefix_cache is not None
+                        and cohort == COHORT_MAIN)
+            path = self._match_head(r, step) if use_tree else []
             # Cost this step = tokens actually recomputed (suffix forward
             # rows + decode replay steps), not the full prompt.
             cost = len(r.seq_tokens) - len(path) * self.page_size
             if admitted and cost > budget:
                 break  # prefill/decode interleaving: cap this step's cost
-            if not self._try_admit_head(r, path, step):
-                break  # page exhaustion: r stays queued, retried next step
+            if not self._try_admit_head(r, path, step, cohort):
+                break  # slot/page exhaustion: r stays queued, retried later
             budget -= cost
             admitted.append(r)
         if admitted:
@@ -347,14 +498,15 @@ class Scheduler:
         finish/preempt release uniformly. Pages whose chunk already has an
         incumbent node under a different page id stay private (first donor
         wins; the duplicate is freed at finish)."""
-        if self.prefix_cache is None:
+        if self.prefix_cache is None or r.cohort == COHORT_DEGRADED:
             return
         n_whole = r.prompt_len // self.page_size
         if n_whole <= r.n_shared:
             return
-        self.prefix_cache.insert(
+        transferred = self.prefix_cache.insert(
             r.prompt[:n_whole * self.page_size], r.pages[:n_whole],
             step=step, prompt_len=r.prompt_len)
+        r.donated_pages.extend(transferred)
         # include_decode_written: the re-match only confirms OUR pages (the
         # ext loop drops anything foreign), so reach past flagged nodes.
         path = self.prefix_cache.match(
@@ -386,6 +538,7 @@ class Scheduler:
             transferred = self.prefix_cache.insert(
                 r.seq_tokens[:donate_upto_tokens], donate_pages, step=step,
                 prompt_len=r.prompt_len)
+            r.donated_pages.extend(transferred)
         if r.shared_path:
             self.prefix_cache.release_path(r.shared_path, self.pool)
         keep = set(transferred)
@@ -403,15 +556,54 @@ class Scheduler:
         r.status = FINISHED
         r.finished_step = step
         del self.running[r.slot]
-        self.free_slots.append(r.slot)
+        self._free_list_for(r.slot).append(r.slot)
         # Donate only pages fully covered by the PROMPT (pages containing
         # generated-token kv are per-request: decode wrote them with the
         # full-horizon reduction, so their bits are not what a cold prefill
-        # of a matching prompt would produce).
-        self._release_pages(
-            r, donate_upto_tokens=(r.prompt_len // self.page_size)
-            * self.page_size, step=step)
+        # of a matching prompt would produce). Degraded-cohort pages never
+        # enter the tree (plan-specific bits).
+        donate = ((r.prompt_len // self.page_size) * self.page_size
+                  if r.cohort != COHORT_DEGRADED else 0)
+        self._release_pages(r, donate_upto_tokens=donate, step=step)
         r.slot = -1
+
+    # -- abnormal terminals --------------------------------------------
+    def _terminalize(self, r: Request, status: str, step: int,
+                     error: Optional[ServeError]) -> None:
+        """One path for FAILED/CANCELLED/EXPIRED: leave queue or running
+        set, release the slot and EVERY page (no radix donation — partial
+        or suspect streams do not seed the tree), record the typed error.
+        Runs entirely host-side within the current engine step, which is
+        what makes 'terminal transition releases everything within one
+        step' an invariant rather than an eventual property."""
+        if r.status in TERMINAL_STATES:
+            raise ServeError(
+                f"rid={r.rid} is already terminal ({r.status}); terminal "
+                "states are final")
+        if r.status == QUEUED:
+            self.queue.remove(r)
+        else:   # RUNNING
+            del self.running[r.slot]
+            self._free_list_for(r.slot).append(r.slot)
+            self._release_pages(r, donate_upto_tokens=0, step=step)
+            r.slot = -1
+        r.status = status
+        r.error = error
+        r.finished_step = step
+
+    def fail(self, r: Request, step: int,
+             error: Optional[ServeError] = None) -> None:
+        """Fault containment: the request is FAILED with ``error``."""
+        self._terminalize(r, FAILED, step, error)
+
+    def cancel(self, r: Request, step: int,
+               error: Optional[ServeError] = None) -> None:
+        self._terminalize(r, CANCELLED, step, error)
+
+    def expire(self, r: Request, step: int,
+               error: Optional[ServeError] = None) -> None:
+        self._terminalize(r, EXPIRED, step, error or DeadlineExceededError(
+            f"rid={r.rid}: deadline {r.deadline} passed at step {step}"))
 
     # -- preemption ----------------------------------------------------
     def should_preempt(self) -> bool:
@@ -425,21 +617,23 @@ class Scheduler:
         recover, and decode replay is bit-exact against its own pages),
         release the rest, and re-queue it directly behind the blocked head.
         Returns ``(victim, freed_slot)`` so the engine can clear the
-        slot's device-side rows."""
+        slot's device-side rows. Degraded-cohort victims donate nothing
+        (their pages hold aggressive-plan bits) and stay pinned to the
+        degraded cohort for resume."""
         assert self.running
         victim = max(self.running.values(),
                      key=lambda r: (r.admitted_step, r.rid))
         slot = victim.slot
         del self.running[victim.slot]
-        self.free_slots.append(victim.slot)
+        self._free_list_for(victim.slot).append(victim.slot)
         victim.slot = -1
         victim.status = QUEUED
         victim.preemptions += 1
         self.preemptions_total += 1
         written = victim.prompt_len + len(victim.out) - 1
-        self._release_pages(
-            victim, donate_upto_tokens=(written // self.page_size)
-            * self.page_size, step=step)
+        donate = ((written // self.page_size) * self.page_size
+                  if victim.cohort != COHORT_DEGRADED else 0)
+        self._release_pages(victim, donate_upto_tokens=donate, step=step)
         if self.queue:
             self.queue.insert(1, victim)
         else:

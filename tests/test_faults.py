@@ -1,0 +1,255 @@
+"""Fault isolation + deterministic chaos primitives.
+
+A fault hitting one request may never perturb another: the victim lands in
+a typed terminal state, its slot and pages come back, and every survivor's
+token stream stays bit-identical to an undisturbed run. FaultPlan draws its
+whole event schedule from one seed so any chaos outcome replays exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.serve import (ALL_FAULT_KINDS, FAILED, FINISHED,
+                         BlockTableCorruptionError, FaultPlan,
+                         NonFiniteLogitsError, PageAccountingError,
+                         PagedEngine, PagedServeConfig, PagePool,
+                         PoisonedPromptError, PrefixCache, ServeConfig,
+                         generate)
+from repro.serve import paged_cache as PG
+
+from _helpers import tiny
+
+PC = ParallelContext()
+KEY = jax.random.PRNGKey(0)
+
+
+def _build(n_layers=2):
+    cfg = tiny(n_layers=n_layers)
+    ms = T.build_structure(cfg, tp=1)
+    return cfg, ms, T.init_params(ms, KEY)
+
+
+def _psv(**kw):
+    base = dict(n_slots=2, page_size=8, n_pages=9, max_len=32,
+                cache_dtype=jnp.float32)
+    base.update(kw)
+    return PagedServeConfig(**base)
+
+
+def _one_shot(params, ms, prompt, n_new):
+    sv = ServeConfig(max_len=32, temperature=0.0, cache_dtype=jnp.float32)
+    return np.asarray(generate(params, jnp.asarray(prompt)[None], n_new,
+                               ms=ms, pc=PC, sv=sv)[0])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: the whole schedule is a pure function of the seed
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_deterministic_and_well_formed():
+    a, b = FaultPlan(3, n_steps=100), FaultPlan(3, n_steps=100)
+    assert a.events == b.events and len(a) == len(b) > 0
+    assert FaultPlan(4, n_steps=100).events != a.events
+    kinds = {e.kind for e in a.events}
+    assert kinds == set(ALL_FAULT_KINDS)       # every kind scheduled
+    for e in a.events:
+        assert 5 <= e.step < 100               # inside [start, n_steps)
+    # at(step) is a pure lookup over the same events.
+    from_at = [e for s in range(100) for e in a.at(s)]
+    assert sorted(from_at, key=lambda e: (e.step, e.kind, e.index)) == \
+        sorted(a.events, key=lambda e: (e.step, e.kind, e.index))
+
+
+def test_fault_plan_rejects_bad_config():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan(0, kinds=("not_a_kind",))
+    with pytest.raises(ValueError, match="horizon"):
+        FaultPlan(0, n_steps=6, per_kind=5, start=5)  # 1 step, 5 draws
+
+
+# ---------------------------------------------------------------------------
+# PagePool abuse: typed, pre-mutation, balance stays green
+# ---------------------------------------------------------------------------
+
+def test_pool_double_free_is_typed_and_non_destructive():
+    pool = PagePool(4)
+    (p,) = pool.alloc(1)
+    pool.free([p])
+    with pytest.raises(PageAccountingError, match="double-free past zero"):
+        pool.free([p])
+    pool.check_balance()                       # abuse mutated NOTHING
+    assert pool.n_free == 3
+
+
+def test_pool_rejects_foreign_and_garbage_pages():
+    pool = PagePool(4)
+    with pytest.raises(PageAccountingError, match="out-of-range"):
+        pool.free([99])
+    with pytest.raises(PageAccountingError, match="garbage page"):
+        pool.share([PG.GARBAGE_PAGE])
+    pool.check_balance()
+
+
+def test_pool_batch_abuse_is_atomic():
+    # A batch mixing valid and invalid refs must mutate nothing at all:
+    # validation is multiplicity-aware and runs before any refcount moves.
+    pool = PagePool(4)
+    (p,) = pool.alloc(1)                       # refcount 1
+    with pytest.raises(PageAccountingError, match="exceeds its refcount"):
+        pool.free([p, p])                      # x2 against refcount 1
+    assert pool.refcount(p) == 1               # the valid half not applied
+    pool.check_balance()
+
+
+def test_pool_alloc_fault_injection_counts_and_recovers():
+    pool = PagePool(4)
+    pool.fail_next_allocs(2)
+    assert pool.alloc(1) is None and pool.alloc(1) is None
+    assert pool.alloc_faults == 2
+    got = pool.alloc(2)                        # recovered
+    assert got is not None and len(got) == 2
+    pool.check_balance()
+
+
+def test_engine_rides_through_alloc_failure():
+    # A refused allocation leaves the request QUEUED (admission rolls
+    # back), accounting balanced, and the eventual run bit-identical.
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv(n_slots=1, n_pages=5))
+    prompt = np.asarray(jax.random.randint(KEY, (8,), 0, cfg.vocab_size))
+    rid = eng.add_request(prompt, 8)
+    eng.pool.fail_next_allocs(1)
+    eng.step()
+    assert eng.pool.alloc_faults == 1
+    assert eng.sched.n_running == 0 and eng.sched.n_queued == 1
+    res = eng.drain()
+    assert eng.request(rid).state == FINISHED
+    assert (res[rid] == _one_shot(params, ms, prompt, 8)).all()
+    assert eng.pool.live == 0
+
+
+# ---------------------------------------------------------------------------
+# NaN containment: victim fails typed, survivor stays bit-identical
+# ---------------------------------------------------------------------------
+
+def test_nan_poisoned_slot_fails_survivor_bit_identical():
+    cfg, ms, params = _build()
+    key = jax.random.PRNGKey(5)
+    pa = np.asarray(jax.random.randint(jax.random.fold_in(key, 0), (8,),
+                                       0, cfg.vocab_size))
+    pb = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (8,),
+                                       0, cfg.vocab_size))
+
+    eng = PagedEngine(params, ms, _psv())
+    ra, rb = eng.add_request(pa, 12), eng.add_request(pb, 12)
+    eng.step()                                 # both running
+    eng.step()
+    victim = eng.request(ra)
+    eng._poison_slots.add(victim.slot)         # what NAN_LOGITS injects
+    eng.step()
+    assert victim.state == FAILED
+    assert isinstance(victim.error, NonFiniteLogitsError)
+    eng.pool.check_balance()
+
+    res = eng.drain()
+    assert eng.request(rb).state == FINISHED
+    assert (res[rb] == _one_shot(params, ms, pb, 12)).all()
+    # The victim's pre-fault tokens are the true greedy prefix.
+    ref_a = _one_shot(params, ms, pa, 12)
+    assert (res[ra] == ref_a[:len(res[ra])]).all()
+    assert len(res[ra]) < 12
+
+    # The poisoned slot is clean for reuse: a new request through the SAME
+    # engine (and likely the same slot) still matches one-shot.
+    rc = eng.add_request(pa, 12)
+    res2 = eng.drain()
+    assert (res2[rc] == ref_a).all()
+    assert eng.pool.live == 0
+
+
+def test_block_table_corruption_detected_and_contained():
+    cfg, ms, params = _build()
+    key = jax.random.PRNGKey(6)
+    pa = np.asarray(jax.random.randint(jax.random.fold_in(key, 0), (8,),
+                                       0, cfg.vocab_size))
+    pb = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (8,),
+                                       0, cfg.vocab_size))
+    eng = PagedEngine(params, ms, _psv())
+    ra, rb = eng.add_request(pa, 12), eng.add_request(pb, 12)
+    eng.step()
+    victim = eng.request(ra)
+    # What BLOCK_TABLE_CORRUPT injects: a host-side row no longer matching
+    # the scheduler's page ownership record.
+    eng.block_tables[victim.slot, 0] = (eng.block_tables[victim.slot, 0]
+                                        + 1) % eng.psv.n_pages
+    eng.step()                                 # validation pass catches it
+    assert victim.state == FAILED
+    assert isinstance(victim.error, BlockTableCorruptionError)
+    eng.pool.check_balance()
+    res = eng.drain()
+    assert eng.request(rb).state == FINISHED
+    assert (res[rb] == _one_shot(params, ms, pb, 12)).all()
+    assert eng.pool.live == 0
+
+
+def test_poisoned_prompt_fails_at_prefill_not_the_engine():
+    cfg, ms, params = _build()
+    key = jax.random.PRNGKey(8)
+    pa = np.asarray(jax.random.randint(jax.random.fold_in(key, 0), (8,),
+                                       0, cfg.vocab_size))
+    pb = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (8,),
+                                       0, cfg.vocab_size))
+    eng = PagedEngine(params, ms, _psv())
+    ra = eng.add_request(pa, 8)
+    rb = eng.add_request(pb, 8)
+    # What POISON_PROMPT injects: corrupt the QUEUED copy after the submit
+    # boundary already validated it (an embed-table OOB read otherwise).
+    victim = eng.request(ra)
+    victim.prompt = victim.prompt.copy()
+    victim.prompt[3] = cfg.vocab_size + 2
+    res = eng.drain()
+    assert eng.request(ra).state == FAILED
+    assert isinstance(eng.request(ra).error, PoisonedPromptError)
+    assert len(res[ra]) == 0
+    assert eng.request(rb).state == FINISHED
+    assert (res[rb] == _one_shot(params, ms, pb, 8)).all()
+    assert eng.pool.live == 0
+
+
+# ---------------------------------------------------------------------------
+# Radix containment: purge_pages drops suspect subtrees, skips locked ones
+# ---------------------------------------------------------------------------
+
+def test_purge_pages_drops_subtree_and_refunds_pool():
+    ps = 2
+    pool = PagePool(8)
+    tree = PrefixCache(ps)
+    toks = np.arange(6, dtype=np.int32)        # 3 chunks
+    pages = list(pool.alloc(3))
+    assert tree.insert(toks, pages, step=0) == pages
+    assert tree.resident_pages == 3
+    # Purging the MIDDLE page drops it and everything donated beyond it.
+    freed = tree.purge_pages([pages[1]], pool)
+    assert freed == 2 and tree.resident_pages == 1
+    pool.check_balance()
+    assert pool.live == 1                      # only the untainted root
+
+
+def test_purge_pages_skips_locked_subtrees():
+    ps = 2
+    pool = PagePool(8)
+    tree = PrefixCache(ps)
+    toks = np.arange(4, dtype=np.int32)        # 2 chunks
+    pages = list(pool.alloc(2))
+    tree.insert(toks, pages, step=0)
+    path = tree.match(toks, max_pages=2, step=1)
+    tree.lock_path(path, pool, step=1)         # a running request's pins
+    assert tree.purge_pages([pages[0]], pool) == 0
+    assert tree.resident_pages == 2            # untouched while pinned
+    tree.release_path(path, pool)
+    assert tree.purge_pages([pages[0]], pool) == 2
+    assert pool.live == 0
+    pool.check_balance()

@@ -1,0 +1,139 @@
+"""Graceful overload degradation: bounded queue, deadline-aware shedding,
+and the aggressive-Δ degraded cohort.
+
+Under overload the engine degrades BY POLICY — typed shed errors and a
+deeper-merged (cheaper) model for overflow admissions — never by crash or
+unbounded queue growth. Degraded admissions trade depth for capacity, not
+correctness: their streams must be bit-identical to a fixed aggressive-Δ
+engine built from the same weights by ``LP.replan``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lp import LPPlan, plan_for_depth, plan_range, replan
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.serve import (COHORT_DEGRADED, COHORT_MAIN, EXPIRED, FINISHED,
+                         LoadShedError, PagedEngine, PagedServeConfig,
+                         QueueFullError, ServeConfig, generate)
+
+from _helpers import tiny
+
+PC = ParallelContext()
+KEY = jax.random.PRNGKey(0)
+
+
+def _one_shot(params, ms, prompt, n_new):
+    sv = ServeConfig(max_len=32, temperature=0.0, cache_dtype=jnp.float32)
+    return np.asarray(generate(params, jnp.asarray(prompt)[None], n_new,
+                               ms=ms, pc=PC, sv=sv)[0])
+
+
+def test_bounded_queue_sheds_by_deadline_slack():
+    cfg = tiny(n_layers=2)
+    ms = T.build_structure(cfg, tp=1)
+    params = T.init_params(ms, KEY)
+    psv = PagedServeConfig(n_slots=1, page_size=8, n_pages=9, max_len=32,
+                           cache_dtype=jnp.float32, max_queue=2)
+    eng = PagedEngine(params, ms, psv)
+    key = jax.random.PRNGKey(3)
+    pr = [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (8,),
+                                        0, cfg.vocab_size)) for i in range(5)]
+    r0 = eng.add_request(pr[0], 8, deadline=100)   # fills the queue (cap 2)
+    r1 = eng.add_request(pr[1], 8, deadline=100)
+
+    # A no-deadline newcomer is infinitely slack — it never displaces a
+    # deadlined request: typed rejection, queue EXACTLY as it was.
+    with pytest.raises(QueueFullError):
+        eng.add_request(pr[2], 8)
+    assert eng.sched.n_queued == 2
+
+    # A strictly-more-urgent newcomer displaces the slackest queued
+    # request, which lands EXPIRED with a typed LoadShedError — not
+    # silently dropped.
+    r3 = eng.add_request(pr[3], 8, deadline=50)
+    assert eng.sched.n_queued == 2             # cap never exceeded
+    shed = [r for r in (r0, r1) if eng.request(r).state == EXPIRED]
+    assert len(shed) == 1
+    assert isinstance(eng.request(shed[0]).error, LoadShedError)
+    assert eng.counters["shed"] == 1
+
+    # An EQUALLY urgent newcomer (same deadline as the slackest) does not
+    # displace: shedding requires STRICTLY more urgency.
+    with pytest.raises(QueueFullError):
+        eng.add_request(pr[4], 8, deadline=100)
+
+    res = eng.drain()
+    assert eng.sched.n_queued == 0
+    survivors = [r for r in (r0, r1, r3) if r not in shed]
+    for rid in survivors:
+        assert eng.request(rid).state == FINISHED
+    i = {r0: 0, r1: 1, r3: 3}
+    for rid in survivors:
+        assert (res[rid] == _one_shot(params, ms, pr[i[rid]], 8)).all()
+    assert eng.pool.live == 0
+
+
+def test_degraded_cohort_bit_identical_to_fixed_delta_engine():
+    # Base: 4 layers, 1 pair merged (eff depth 3). Degraded cohort: eff
+    # depth 2 (2 pairs) — same weights, re-paired retraining-free.
+    cfg = tiny(n_layers=4)
+    base_plan = LPPlan(plan_range(cfg, 0, 4).pairs[:1])
+    ms = T.build_structure(cfg, plan=base_plan, tp=1)
+    params = T.init_params(ms, KEY)
+    psv = PagedServeConfig(n_slots=2, page_size=8, n_pages=17, max_len=32,
+                           cache_dtype=jnp.float32, degrade_delta=True,
+                           degrade_slots=1, degrade_queue_depth=1,
+                           degrade_eff_depth=2)
+    eng = PagedEngine(params, ms, psv)
+    key = jax.random.PRNGKey(4)
+    pr = [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (8,),
+                                        0, cfg.vocab_size)) for i in range(3)]
+    rids = [eng.add_request(p, 8) for p in pr]
+    res = eng.drain()
+    for rid in rids:
+        assert eng.request(rid).state == FINISHED
+
+    # With 1 main slot and a 3-deep backlog, the overflow admission went
+    # to the degraded cohort (pressure >= degrade_queue_depth).
+    cohorts = [eng.request(r).cohort for r in rids]
+    assert COHORT_DEGRADED in cohorts and COHORT_MAIN in cohorts
+    assert eng.counters["degraded_admissions"] == cohorts.count(
+        COHORT_DEGRADED)
+
+    # Main-cohort streams match the BASE model; degraded streams match the
+    # fixed aggressive-Δ model built from the SAME weights via replan.
+    deg_plan = plan_for_depth(cfg, 2, end=4)
+    _, seg_params = replan(cfg, params["segments"], ms.segments, deg_plan)
+    ms_deg = T.build_structure(cfg, plan=deg_plan, tp=1)
+    params_deg = dict(params, segments=seg_params)
+    for rid, prompt in zip(rids, pr):
+        ref_ms, ref_p = ((ms_deg, params_deg)
+                         if eng.request(rid).cohort == COHORT_DEGRADED
+                         else (ms, params))
+        assert (res[rid] == _one_shot(ref_p, ref_ms, prompt, 8)).all(), rid
+    assert eng.pool.live == 0
+    eng.pool.check_balance()
+
+
+def test_degraded_cohort_only_under_pressure():
+    # No backlog -> every admission stays on the main cohort even with
+    # degrade_delta configured: degradation is an overload response, not a
+    # default.
+    cfg = tiny(n_layers=4)
+    base_plan = LPPlan(plan_range(cfg, 0, 4).pairs[:1])
+    ms = T.build_structure(cfg, plan=base_plan, tp=1)
+    params = T.init_params(ms, KEY)
+    psv = PagedServeConfig(n_slots=3, page_size=8, n_pages=13, max_len=32,
+                           cache_dtype=jnp.float32, degrade_delta=True,
+                           degrade_slots=1, degrade_queue_depth=2,
+                           degrade_eff_depth=2)
+    eng = PagedEngine(params, ms, psv)
+    prompt = np.asarray(jax.random.randint(KEY, (8,), 0, cfg.vocab_size))
+    rid = eng.add_request(prompt, 8)
+    res = eng.drain()
+    assert eng.request(rid).cohort == COHORT_MAIN
+    assert eng.counters["degraded_admissions"] == 0
+    assert (res[rid] == _one_shot(params, ms, prompt, 8)).all()

@@ -1,0 +1,247 @@
+"""Request lifecycle hardening: typed terminal states, cancel(), deadlines,
+drain semantics, and actionable configuration/submit validation.
+
+Every per-request failure path must land the request in a TYPED terminal
+state (failed / cancelled / expired) carrying a ServeError, release its
+slot and pages within one step, and leave every cohabiting request's
+output bit-identical to an undisturbed run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lp import plan_range
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.serve import (CANCELLED, EXPIRED, FINISHED, QUEUED,
+                         DeadlineExceededError, InvalidRequestError,
+                         PagedEngine, PagedServeConfig, PagePool, Scheduler,
+                         ServeConfig, ServeError, generate)
+
+from _helpers import tiny
+
+PC = ParallelContext()
+KEY = jax.random.PRNGKey(0)
+
+
+def _build(n_layers=2, plan=None):
+    cfg = tiny(n_layers=n_layers)
+    ms = T.build_structure(cfg, plan=plan, tp=1)
+    return cfg, ms, T.init_params(ms, KEY)
+
+
+def _psv(**kw):
+    base = dict(n_slots=2, page_size=8, n_pages=9, max_len=32,
+                cache_dtype=jnp.float32)
+    base.update(kw)
+    return PagedServeConfig(**base)
+
+
+def _one_shot(params, ms, prompt, n_new):
+    sv = ServeConfig(max_len=32, temperature=0.0, cache_dtype=jnp.float32)
+    return np.asarray(generate(params, jnp.asarray(prompt)[None], n_new,
+                               ms=ms, pc=PC, sv=sv)[0])
+
+
+# ---------------------------------------------------------------------------
+# Constructor validation: every geometry mistake is an actionable ValueError
+# ---------------------------------------------------------------------------
+
+def test_init_rejects_unaligned_max_len():
+    _, ms, params = _build()
+    with pytest.raises(ValueError, match="not a multiple of"):
+        PagedEngine(params, ms, _psv(max_len=20, page_size=8))
+
+
+def test_init_rejects_empty_slot_count():
+    _, ms, params = _build()
+    with pytest.raises(ValueError, match="n_slots=0 must be >= 1"):
+        PagedEngine(params, ms, _psv(n_slots=0))
+
+
+def test_init_rejects_negative_max_queue():
+    _, ms, params = _build()
+    with pytest.raises(ValueError, match="max_queue=-1 must be >= 0"):
+        PagedEngine(params, ms, _psv(max_queue=-1))
+
+
+def test_init_rejects_degrade_slots_without_degrade_delta():
+    _, ms, params = _build()
+    with pytest.raises(ValueError, match="without degrade_delta"):
+        PagedEngine(params, ms, _psv(degrade_slots=1))
+
+
+@pytest.mark.parametrize("slots", [0, 2])
+def test_init_rejects_degrade_slots_out_of_range(slots):
+    # The degraded cohort must leave >= 1 main slot and hold >= 1 slot.
+    _, ms, params = _build()
+    with pytest.raises(ValueError, match="1 <= degrade_slots < n_slots"):
+        PagedEngine(params, ms,
+                    _psv(degrade_delta=True, degrade_slots=slots))
+
+
+def test_init_rejects_degrade_plan_no_deeper_than_base():
+    # Base already maximally paired: the "degraded" cohort would run the
+    # SAME depth — a config bug, not a capacity knob.
+    cfg = tiny(n_layers=2)
+    _, ms, params = _build(plan=plan_range(cfg, 0, 2))
+    with pytest.raises(ValueError, match="degraded plan pairs"):
+        PagedEngine(params, ms,
+                    _psv(n_slots=3, degrade_delta=True, degrade_slots=1))
+
+
+# ---------------------------------------------------------------------------
+# Submit validation: malformed work fails AT THE BOUNDARY, typed, pre-queue
+# ---------------------------------------------------------------------------
+
+def _sched(n_slots=2, n_pages=9):
+    return Scheduler(n_slots=n_slots, pool=PagePool(n_pages), page_size=8,
+                     max_len=32)
+
+
+def test_submit_rejects_empty_prompt():
+    s = _sched()
+    with pytest.raises(InvalidRequestError, match="empty prompt"):
+        s.submit(np.zeros(0, np.int32), 4)
+    assert s.n_queued == 0
+
+
+def test_submit_rejects_non_integer_prompt():
+    s = _sched()
+    with pytest.raises(InvalidRequestError, match="not an integer type"):
+        s.submit(np.zeros(4, np.float32), 4)
+    assert s.n_queued == 0
+
+
+def test_submit_rejects_non_positive_max_new():
+    s = _sched()
+    with pytest.raises(InvalidRequestError, match="max_new=0 must be >= 1"):
+        s.submit(np.zeros(4, np.int32), 0)
+    assert s.n_queued == 0
+
+
+def test_submit_rejects_over_length_request():
+    s = _sched()
+    with pytest.raises(InvalidRequestError, match="positions > max_len"):
+        s.submit(np.zeros(30, np.int32), 4)
+    assert s.n_queued == 0
+
+
+def test_submit_rejects_request_larger_than_pool():
+    # 17 positions -> 3 pages > the 2-page pool: could never be admitted.
+    s = _sched(n_pages=3)
+    with pytest.raises(InvalidRequestError, match="pool capacity"):
+        s.submit(np.zeros(10, np.int32), 7)
+    assert s.n_queued == 0
+
+
+def test_submit_errors_are_value_errors():
+    # Back-compat: callers that caught ValueError keep working.
+    s = _sched()
+    with pytest.raises(ValueError):
+        s.submit(np.zeros(0, np.int32), 4)
+    assert issubclass(InvalidRequestError, ServeError)
+
+
+def test_add_request_rejects_out_of_vocab_tokens():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv())
+    bad = np.array([0, cfg.vocab_size + 7], np.int32)
+    with pytest.raises(InvalidRequestError, match="outside \\[0,"):
+        eng.add_request(bad, 4)
+    assert eng.sched.n_queued == 0
+
+
+# ---------------------------------------------------------------------------
+# Terminal transitions: cancel / expire release everything within one step
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_and_running():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv())
+    key = jax.random.PRNGKey(7)
+    pr = [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (8,),
+                                        0, cfg.vocab_size)) for i in range(3)]
+    r0, r1 = eng.add_request(pr[0], 8), eng.add_request(pr[1], 8)
+    r2 = eng.add_request(pr[2], 8)            # 2 slots -> r2 queues
+    eng.step()
+    assert eng.request(r2).state == QUEUED
+
+    # Cancel the queued request: no pages were ever held.
+    assert eng.cancel(r2) is True
+    assert eng.request(r2).state == CANCELLED
+    assert len(eng.results[r2]) == 0
+
+    # Cancel a running request: slot + pages released immediately.
+    live_before = eng.pool.live
+    assert eng.cancel(r1) is True
+    assert eng.request(r1).state == CANCELLED
+    assert eng.pool.live < live_before
+    eng.pool.check_balance()
+    assert eng.cancel(r1) is False            # already terminal: no-op
+
+    res = eng.drain()
+    assert eng.request(r0).state == FINISHED
+    assert (res[r0] == _one_shot(params, ms, pr[0], 8)).all()
+    assert eng.counters["cancelled"] == 2
+    assert eng.pool.live == 0
+
+
+def test_running_request_expires_at_deadline_and_releases():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv())
+    prompt = np.asarray(jax.random.randint(KEY, (8,), 0, cfg.vocab_size))
+    rid = eng.add_request(prompt, 16, deadline=2)
+    eng.step()                                # admitted, decoding
+    assert eng.pool.live > 0
+    while eng.request(rid).state not in (EXPIRED, FINISHED):
+        eng.step()
+    r = eng.request(rid)
+    assert r.state == EXPIRED
+    assert isinstance(r.error, DeadlineExceededError)
+    assert r.finished_step <= r.deadline + 1  # released within one step
+    assert eng.pool.live == 0
+    eng.pool.check_balance()
+    assert eng.counters["expired"] == 1
+    # The partial stream it DID produce is the true greedy prefix.
+    ref = _one_shot(params, ms, prompt, 16)
+    assert (eng.results[rid] == ref[:len(eng.results[rid])]).all()
+
+
+def test_queued_request_expiry_leaves_survivor_bit_identical():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv(n_slots=1, n_pages=5))
+    key = jax.random.PRNGKey(9)
+    pa = np.asarray(jax.random.randint(jax.random.fold_in(key, 0), (8,),
+                                       0, cfg.vocab_size))
+    pb = np.asarray(jax.random.randint(jax.random.fold_in(key, 1), (8,),
+                                       0, cfg.vocab_size))
+    ra = eng.add_request(pa, 12)
+    rb = eng.add_request(pb, 12, deadline=3)  # 1 slot: expires in queue
+    res = eng.drain()
+    assert eng.request(rb).state == EXPIRED
+    assert len(res[rb]) == 0
+    assert eng.request(ra).state == FINISHED
+    assert (res[ra] == _one_shot(params, ms, pa, 12)).all()
+    assert eng.pool.live == 0
+
+
+def test_drain_reports_per_request_terminal_status():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv())
+    key = jax.random.PRNGKey(11)
+    pr = [np.asarray(jax.random.randint(jax.random.fold_in(key, i), (8,),
+                                        0, cfg.vocab_size)) for i in range(3)]
+    r0 = eng.add_request(pr[0], 8)
+    r1 = eng.add_request(pr[1], 8)
+    r2 = eng.add_request(pr[2], 8, deadline=1)
+    eng.step()
+    eng.cancel(r1)
+    res = eng.drain()                         # must not hang on the victims
+    states = {r0: FINISHED, r1: CANCELLED, r2: EXPIRED}
+    for rid, want in states.items():
+        assert eng.request(rid).state == want, rid
+        assert rid in res                     # victims keep partial output
+    assert (res[r0] == _one_shot(params, ms, pr[0], 8)).all()
+    assert eng.pool.live == 0
