@@ -11,6 +11,13 @@ page pool, and finish independently. Reported per run:
   LP speedup          — tokens/s of the LP-paired model over vanilla (the
                         paper's decode win, now measured under serving load)
 
+Latency/TTFT/occupancy/prefix numbers all come from
+``engine.metrics_snapshot()`` — the telemetry subsystem's span-derived
+percentiles — not from benchmark-side timestamp dicts. The serve-structural
+gate runs the retired host-side bookkeeping ONE more time alongside and
+asserts the snapshot agrees (``_drive(..., legacy_check=True)``), which is
+what licensed deleting it everywhere else.
+
 ``--shared-prefix`` switches to deployment-shaped traffic: N request
 families share a per-family system prompt (whole cache pages), exercising
 the radix prefix cache — additionally reported are the prefix hit rate,
@@ -35,6 +42,16 @@ asserts the subsystem's invariants instead:
   (e) every prefix-hit request bit-identical to one-shot generate();
   (f) a preempted-then-resumed request bit-identical to its uninterrupted
       run (the engine also self-checks every replayed token).
+``--structural`` also gates the telemetry subsystem (PR 7):
+  (p) telemetry-on vs telemetry-off: identical greedy streams, identical
+      step/page accounting, identical counters and compile events — the
+      registry is pure host bookkeeping and observing a run may never
+      change it (launch counts are a per-PROGRAM property gated in (a);
+      telemetry never enters a traced function, so they cannot move);
+  (q) the telemetry-derived latency/TTFT/occupancy agree with the retired
+      host-side bookkeeping (one-time legacy cross-check);
+  (r) ``engine.dump_trace`` writes valid Chrome trace_event JSON
+      (results/trace_structural.json, uploaded as a CI artifact).
 ``--structural --mesh 1x2`` (the sharded-structural CI gate, needs
 XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the tp>1 half:
   (g) launches == groups and scatters == 2*groups in the SHARD_MAP'd
@@ -54,7 +71,10 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the tp>1 half:
       expired / cancelled) carrying a ServeError;
   (m) surviving requests are bit-identical to the same workload on a
       faults-disabled engine (per-request fault isolation);
-  (n) the whole soak replays exactly from the same --seed;
+  (n) the whole soak replays exactly from the same --seed — including its
+      TELEMETRY: the two runs' wall-stripped Chrome traces are
+      byte-identical (the trace is evidence, not noise), and the soak's
+      trace lands in results/trace_chaos.json;
   (o) under sustained overload the bounded submit queue never exceeds
       max_queue, shedding is deadline-aware, and the aggressive-Δ degraded
       cohort is bit-identical to a fixed-Δ engine re-paired by LP.replan.
@@ -67,6 +87,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import time
 
 import jax
@@ -84,8 +105,8 @@ from repro.parallel.context import ParallelContext
 from repro.serve import (ALL_FAULT_KINDS, CANCELLED, COHORT_DEGRADED,
                          EXPIRED, FAILED, FINISHED, TERMINAL_STATES,
                          FaultPlan, PagedEngine, PagedServeConfig,
-                         QueueFullError, ServeConfig, generate,
-                         sharded_generate)
+                         QueueFullError, ServeConfig, dumps_trace, generate,
+                         sharded_generate, validate_trace)
 from repro.serve import paged_cache as PG
 from repro.serve.engine import make_sharded_serve_step
 
@@ -121,9 +142,38 @@ def _build(n_pairs: int, tp: int = 1):
     return cfg, ms, T.init_params(ms, jax.random.PRNGKey(0))
 
 
+# BENCH_serve.json key contract: successive PRs compare these sections
+# across runs, so a silently renamed/dropped metric breaks the trajectory
+# the artifact exists for. _bench_summary re-validates the WHOLE file on
+# every fold and fails on drift (unknown section, missing required key).
+BENCH_DRIVE_KEYS = frozenset({"tok_per_s", "lat_p50_ms", "lat_p99_ms",
+                              "ttft_p50_ms", "ttft_p99_ms"})
+BENCH_CHAOS_KEYS = frozenset({"soak_steps", "faults_applied", "survivors",
+                              "overload"})
+
+
+def _check_bench_schema(data: dict) -> None:
+    for section, payload in data.items():
+        if re.fullmatch(r"tp\d+", section):
+            required = BENCH_DRIVE_KEYS
+        elif section == "shared_prefix":
+            required = BENCH_DRIVE_KEYS | {"hit_rate"}
+        elif section == "chaos":
+            required = BENCH_CHAOS_KEYS
+        else:
+            raise AssertionError(
+                f"BENCH_serve.json schema drift: unknown section "
+                f"{section!r} (known: tpN / shared_prefix / chaos)")
+        missing = required - payload.keys()
+        assert not missing, (
+            f"BENCH_serve.json schema drift: section {section!r} lost "
+            f"required keys {sorted(missing)}")
+
+
 def _bench_summary(section: str, payload: dict) -> str:
     """Fold one run's headline numbers into BENCH_serve.json (read-modify-
-    write): the per-PR perf trajectory CI uploads as an artifact."""
+    write): the per-PR perf trajectory CI uploads as an artifact. Every
+    fold re-validates the file against the key contract above."""
     path = os.path.join(C.RESULTS, "BENCH_serve.json")
     os.makedirs(C.RESULTS, exist_ok=True)
     data = {}
@@ -131,6 +181,7 @@ def _bench_summary(section: str, payload: dict) -> str:
         with open(path) as f:
             data = json.load(f)
     data[section] = payload
+    _check_bench_schema(data)
     with open(path, "w") as f:
         json.dump(data, f, indent=1, sort_keys=True)
     return path
@@ -142,6 +193,29 @@ def _drive_summary(m: dict, **extra) -> dict:
            "ttft_p99_ms": m["ttft_p99_ms"]}
     out.update(extra)
     return out
+
+
+def _snapshot_summary(snap: dict) -> dict:
+    """The step-denominated telemetry slice folded into BENCH_serve.json:
+    deterministic per-seed, so PRs can diff it exactly (unlike wall ms)."""
+    lat = snap["latency"]
+    return {"ttft_steps_p50": lat["ttft_steps_p50"],
+            "e2e_steps_p50": lat["e2e_steps_p50"],
+            "e2e_steps_p99": lat["e2e_steps_p99"],
+            "compiles_total": snap["compiles_total"],
+            "requests": snap["requests"]}
+
+
+def _dump_run_artifacts(eng: PagedEngine, tag: str) -> str:
+    """Write the run's Chrome trace + metrics snapshot under results/ (CI
+    uploads results/*.json); validates the trace before returning it."""
+    os.makedirs(C.RESULTS, exist_ok=True)
+    trace_path = eng.dump_trace(os.path.join(C.RESULTS, f"trace_{tag}.json"))
+    with open(trace_path) as f:
+        validate_trace(json.load(f))
+    with open(os.path.join(C.RESULTS, f"metrics_{tag}.json"), "w") as f:
+        json.dump(eng.metrics_snapshot(), f, indent=1, sort_keys=True)
+    return trace_path
 
 
 def _workload(cfg, n_requests: int, rate: float, seed: int = 17):
@@ -184,58 +258,90 @@ def _shared_prefix_workload(cfg, rate: float, seed: int = 17):
     return reqs
 
 
-def _drive(eng: PagedEngine, reqs):
-    """Run the arrival schedule to drain; returns per-request metrics
-    (latency + TTFT percentiles, throughput, occupancy)."""
-    submit_t, first_t, finish_t, rids = {}, {}, {}, []
-    occupancy = []
+def _drive(eng: PagedEngine, reqs, *, legacy_check: bool = False):
+    """Run the arrival schedule to drain; per-request metrics (latency +
+    TTFT percentiles, occupancy) come from ``engine.metrics_snapshot()``
+    — the span-derived telemetry path. ``legacy_check=True`` ALSO runs
+    the retired host-side timestamp bookkeeping and asserts the snapshot
+    agrees (gate (q); the serve-structural run flips it once)."""
+    legacy = ({"submit": {}, "first": {}, "finish": {}, "occ": []}
+              if legacy_check else None)
+    rids = []
     nxt = 0
     t0 = time.perf_counter()
     while nxt < len(reqs) or eng.sched.n_queued or eng.sched.n_running:
         while nxt < len(reqs) and reqs[nxt][0] <= eng.step_count:
             _, prompt, max_new = reqs[nxt]
             rid = eng.add_request(prompt, max_new)
-            submit_t[rid] = time.perf_counter()
             rids.append(rid)
+            if legacy is not None:
+                legacy["submit"][rid] = time.perf_counter()
             nxt += 1
-        done_before = set(eng.results)
+        done_before = set(eng.results) if legacy is not None else ()
         eng.step()
-        occupancy.append(eng.occupancy)
-        now = time.perf_counter()
-        for rid in rids:
-            if rid not in first_t and len(eng.request(rid).out) > 0:
-                first_t[rid] = now
-        for rid in set(eng.results) - done_before:
-            finish_t[rid] = now
+        if legacy is not None:
+            legacy["occ"].append(eng.occupancy)
+            now = time.perf_counter()
+            for rid in rids:
+                if rid not in legacy["first"] and \
+                        len(eng.request(rid).out) > 0:
+                    legacy["first"][rid] = now
+            for rid in set(eng.results) - done_before:
+                legacy["finish"][rid] = now
     wall = time.perf_counter() - t0
     tokens = sum(len(eng.results[r]) for r in rids)
-    lat = np.array([finish_t[r] - submit_t[r] for r in rids])
-    ttft = np.array([first_t[r] - submit_t[r] for r in rids])
-    return {
+    snap = eng.metrics_snapshot()
+    lat = snap["latency"]["wall"]
+    occ = snap.get("occupancy", {"mean": 0.0, "max": 0.0})
+    m = {
         "wall_s": round(wall, 3),
         "tokens": int(tokens),
         "tok_per_s": round(tokens / wall, 1),
-        "lat_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 1),
-        "lat_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 1),
-        "ttft_p50_ms": round(float(np.percentile(ttft, 50)) * 1e3, 1),
-        "ttft_p99_ms": round(float(np.percentile(ttft, 99)) * 1e3, 1),
-        "occ_mean": round(float(np.mean(occupancy)), 3),
-        "occ_max": round(float(np.max(occupancy)), 3),
+        "lat_p50_ms": lat["lat_p50_ms"],
+        "lat_p99_ms": lat["lat_p99_ms"],
+        "ttft_p50_ms": lat["ttft_p50_ms"],
+        "ttft_p99_ms": lat["ttft_p99_ms"],
+        "occ_mean": occ["mean"],
+        "occ_max": occ["max"],
         "steps": eng.step_count,
     }
+    if legacy is not None:
+        _assert_legacy_agreement(m, legacy, rids)
+    return m
+
+
+def _assert_legacy_agreement(m: dict, legacy: dict, rids) -> None:
+    """Gate (q): the telemetry percentiles vs the pre-telemetry host-side
+    bookkeeping. The two stamp the SAME engine step from opposite sides of
+    a few Python statements (telemetry inside submit/step, the legacy loop
+    right after), so wall values agree to well under the 10 ms tolerance;
+    occupancy uses the identical per-step pool reads and must agree to
+    rounding."""
+    lat = np.array([legacy["finish"][r] - legacy["submit"][r] for r in rids])
+    ttft = np.array([legacy["first"][r] - legacy["submit"][r] for r in rids])
+    ref = {
+        "lat_p50_ms": float(np.percentile(lat, 50)) * 1e3,
+        "lat_p99_ms": float(np.percentile(lat, 99)) * 1e3,
+        "ttft_p50_ms": float(np.percentile(ttft, 50)) * 1e3,
+        "ttft_p99_ms": float(np.percentile(ttft, 99)) * 1e3,
+    }
+    for k, v in ref.items():
+        assert abs(m[k] - v) <= 10.0, ("telemetry vs legacy", k, m[k], v)
+    assert abs(m["occ_mean"] - float(np.mean(legacy["occ"]))) <= 1e-3
+    assert abs(m["occ_max"] - float(np.max(legacy["occ"]))) <= 1e-3
 
 
 def _prefix_stats(eng: PagedEngine) -> dict:
-    c = eng.counters
-    served = c["hit_tokens"] + c["prefill_tokens"]
+    snap = eng.metrics_snapshot()
+    c = snap["counters"]
     return {
         "prefill_tokens": c["prefill_tokens"],
         "hit_tokens": c["hit_tokens"],
         "resume_hit_tokens": c["resume_hit_tokens"],
         "replay_tokens": c["replay_tokens"],
         "prefix_hits": c["prefix_hits"],
-        "hit_rate": round(c["hit_tokens"] / served, 3) if served else 0.0,
-        "preemptions": eng.sched.preemptions_total,
+        "hit_rate": snap["prefix"]["hit_rate"],
+        "preemptions": snap["preemptions"],
     }
 
 
@@ -290,7 +396,7 @@ def structural() -> dict:
                            cache_dtype=jnp.float32)
     eng = PagedEngine(params, ms, psv)
     reqs = _workload(cfg, 12, rate=4.0)
-    m = _drive(eng, reqs)
+    m = _drive(eng, reqs, legacy_check=True)   # (q) once, here
     assert eng.pool.live == 0
     assert eng.pool.allocated_total == eng.pool.freed_total > 0
     sv = ServeConfig(max_len=MAX_LEN, temperature=0.0,
@@ -299,11 +405,38 @@ def structural() -> dict:
         ref = np.asarray(generate(params, jnp.asarray(prompt)[None],
                                   max_new, ms=ms, pc=PC, sv=sv)[0])
         assert (eng.results[rid] == ref).all(), rid
+
+    # (p) telemetry-off run of the SAME workload: observing the engine may
+    # never change it. Greedy streams, step count, page accounting,
+    # counters and compile events must all be identical — launch counts
+    # cannot move because telemetry never enters a traced program (the
+    # per-program gate (a) above counts the only programs there are).
+    psv_off = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                               n_pages=N_PAGES, max_len=MAX_LEN,
+                               cache_dtype=jnp.float32, telemetry=False)
+    eng_off = PagedEngine(params, ms, psv_off)
+    _drive(eng_off, reqs)
+    assert eng_off.step_count == eng.step_count
+    assert sorted(eng_off.results) == sorted(eng.results)
+    for rid in eng.results:
+        assert (eng_off.results[rid] == eng.results[rid]).all(), rid
+    assert eng_off.pool.allocated_total == eng.pool.allocated_total
+    assert eng_off.pool.freed_total == eng.pool.freed_total
+    assert dict(eng_off.counters) == dict(eng.counters)
+    assert eng_off.telemetry.compiles == eng.telemetry.compiles
+    assert not eng_off.telemetry.spans          # the only thing that moved
+
+    # (r) valid Chrome trace + metrics snapshot as CI artifacts.
+    trace_path = _dump_run_artifacts(eng, "structural")
+    snap = eng.metrics_snapshot()
     print("structural OK:", rows,
-          f"| {len(reqs)} staggered requests bit-identical, "
-          f"pages alloc={eng.pool.allocated_total} freed={eng.pool.freed_total}")
-    _bench_summary("tp1", _drive_summary(m))
-    return {"rows": rows, "drive": m}
+          f"| {len(reqs)} staggered requests bit-identical "
+          f"(telemetry on == off), "
+          f"pages alloc={eng.pool.allocated_total} "
+          f"freed={eng.pool.freed_total} | trace -> {trace_path}")
+    _bench_summary("tp1", _drive_summary(
+        m, telemetry=_snapshot_summary(snap)))
+    return {"rows": rows, "drive": m, "telemetry": _snapshot_summary(snap)}
 
 
 # ---------------------------------------------------------------------------
@@ -461,8 +594,11 @@ def structural_shared_prefix(seed: int = 17) -> dict:
     out = {"drive": m, "prefix": stats,
            "preemptions": eng_p.sched.preemptions_total,
            "replay_tokens": eng_p.counters["replay_tokens"]}
+    _dump_run_artifacts(eng, "prefix")
     _bench_summary("shared_prefix",
-                   _drive_summary(m, hit_rate=stats["hit_rate"]))
+                   _drive_summary(m, hit_rate=stats["hit_rate"],
+                                  telemetry=_snapshot_summary(
+                                      eng.metrics_snapshot())))
     print(f"prefix-structural OK: hit_rate={stats['hit_rate']} "
           f"hits={stats['prefix_hits']} "
           f"prefill={stats['prefill_tokens']} saved={stats['hit_tokens']} | "
@@ -581,7 +717,10 @@ def structural_chaos(seed: int = 0) -> dict:
     for rid in survivors:
         assert (eng1.results[rid] == eng0.results[rid]).all(), rid
 
-    # (n) determinism: fresh plan, fresh engine, identical everything.
+    # (n) determinism: fresh plan, fresh engine, identical everything —
+    # including telemetry: the wall-stripped Chrome traces (every span,
+    # gauge sample, fault instant, step-stamped) must be BYTE-identical,
+    # and the soak's trace/metrics land in results/ as CI artifacts.
     eng2 = PagedEngine(params, ms, psv, fault_plan=FaultPlan(
         seed, n_steps=CHAOS_STEPS))
     rids2, _ = _chaos_drive(eng2, reqs, cancel_step=CHAOS_CANCEL_STEP)
@@ -590,6 +729,10 @@ def structural_chaos(seed: int = 0) -> dict:
     for rid in rids1:
         assert eng2.request(rid).state == eng1.request(rid).state, rid
         assert (eng2.results[rid] == eng1.results[rid]).all(), rid
+    t1 = dumps_trace(eng1.telemetry, n_slots=N_SLOTS, wall=False)
+    assert t1 == dumps_trace(eng2.telemetry, n_slots=N_SLOTS, wall=False), \
+        "same-seed chaos runs produced different wall-stripped traces"
+    trace_path = _dump_run_artifacts(eng1, "chaos")
 
     # (o) sustained overload: bounded queue + degraded cohort.
     cap = 4
@@ -650,8 +793,9 @@ def structural_chaos(seed: int = 0) -> dict:
     print(f"chaos-structural OK: {eng1.step_count}-step soak, faults "
           f"{applied} (+{eng1.pool.alloc_faults} alloc refusals) | "
           f"{len(survivors)} survivors bit-identical, victims "
-          f"{out['victims']} | deterministic replay exact | overload: "
-          f"queue<= {cap} held, shed={shed}, "
+          f"{out['victims']} | deterministic replay exact "
+          f"(wall-stripped traces byte-identical -> {trace_path}) | "
+          f"overload: queue<= {cap} held, shed={shed}, "
           f"{len(deg_done)} degraded requests bit-identical to the "
           f"fixed-Δ reference (depth {ms.effective_depth}->"
           f"{DEG_EFF_DEPTH})")
@@ -663,13 +807,15 @@ def structural_chaos(seed: int = 0) -> dict:
 # ---------------------------------------------------------------------------
 
 def _reset_after_warm(eng: PagedEngine):
-    """Zero everything the measured run reports (results, clock, engine
-    counters, preemption count) so warmup activity never leaks into it."""
+    """Zero everything the measured run reports (results, clock, every
+    telemetry channel, preemption count) so warmup activity never leaks
+    into it. ``telemetry.reset()`` replaces the per-dict zeroing the
+    pre-telemetry benchmark did — counters, spans, gauges, histograms,
+    step wall marks all drop through the one registry."""
     eng.results.clear()
     eng.step_count = 0
     eng.sched.preemptions_total = 0
-    for k in eng.counters:
-        eng.counters[k] = 0
+    eng.telemetry.reset()
 
 
 def _warm(eng: PagedEngine, lens):

@@ -88,6 +88,23 @@ def main() -> None:
     ap.add_argument("--degrade-eff-depth", type=int, default=0,
                     help="(--degrade-delta) effective depth of the "
                          "degraded cohort (0 = maximal pairing)")
+    ap.add_argument("--trace-out", default="",
+                    help="(--continuous) write the run's Chrome/Perfetto "
+                         "trace_event JSON here (open in chrome://tracing "
+                         "or ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="",
+                    help="(--continuous) write the run's metrics snapshot "
+                         "here; a .prom suffix writes Prometheus text "
+                         "instead of JSON")
+    ap.add_argument("--telemetry", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="(--continuous) retain spans/gauge series for "
+                         "traces (--no-telemetry caps memory on long "
+                         "soaks; counters and faults stay live)")
+    ap.add_argument("--profile-decode", action="store_true",
+                    help="(--continuous) bracket each decode launch in a "
+                         "jax.profiler StepTraceAnnotation (only useful "
+                         "under an active jax profiler session)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -115,7 +132,11 @@ def main() -> None:
             max_queue=args.max_queue,
             degrade_delta=args.degrade_delta,
             degrade_slots=deg_slots,
-            degrade_eff_depth=args.degrade_eff_depth)
+            degrade_eff_depth=args.degrade_eff_depth,
+            telemetry=args.telemetry,
+            profile_decode=args.profile_decode)
+        if args.trace_out and not args.telemetry:
+            ap.error("--trace-out needs telemetry (drop --no-telemetry)")
         eng = PagedEngine(params, ms, psv, mesh=mesh)
         key = jax.random.PRNGKey(1)
         # A shared head (page-aligned) + per-request tails: realistic
@@ -162,6 +183,18 @@ def main() -> None:
             print(f"lifecycle: failed={c['failed']} expired={c['expired']} "
                   f"shed={c['shed']} rejected={rejected} "
                   f"degraded={c['degraded_admissions']}")
+        if args.trace_out:
+            print("trace:", eng.dump_trace(args.trace_out))
+        if args.metrics_out:
+            if args.metrics_out.endswith(".prom"):
+                with open(args.metrics_out, "w") as f:
+                    f.write(eng.metrics_text())
+            else:
+                import json
+                with open(args.metrics_out, "w") as f:
+                    json.dump(eng.metrics_snapshot(), f, indent=1,
+                              sort_keys=True)
+            print("metrics:", args.metrics_out)
         print("sample:", res[0][:16].tolist())
         return
     sv = ServeConfig(max_len=args.prompt_len + args.new_tokens + 8,

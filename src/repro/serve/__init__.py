@@ -24,6 +24,22 @@ from repro.serve.faults import (  # noqa: F401
     PoisonedPromptError,
     QueueFullError,
     ServeError,
+    error_kind,
+)
+from repro.serve.telemetry import (  # noqa: F401
+    DEFAULT_BUCKETS,
+    Histogram,
+    RequestSpan,
+    SpanEvent,
+    SpanStateError,
+    Telemetry,
+)
+from repro.serve.trace import (  # noqa: F401
+    build_trace,
+    dumps_trace,
+    strip_wall,
+    validate_trace,
+    write_trace,
 )
 from repro.serve.prefix_cache import (  # noqa: F401
     PrefixCache,

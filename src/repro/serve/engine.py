@@ -74,6 +74,7 @@ gate). Prefix sharing auto-disables under tp > 1 for now.
 """
 from __future__ import annotations
 
+import contextlib
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
@@ -100,6 +101,8 @@ from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (COHORT_DEGRADED, COHORT_MAIN,
                                    TERMINAL_STATES, PagePool, Request,
                                    Scheduler)
+from repro.serve.telemetry import (DECODE, PREFILL, REPLAY, Telemetry)
+from repro.serve.trace import write_trace
 
 PyTree = Any
 
@@ -311,6 +314,15 @@ class PagedServeConfig:
     degrade_slots: int = 0        # slots reserved for the degraded cohort
     degrade_queue_depth: int = 1  # queue depth that signals SLO pressure
     degrade_eff_depth: int = 0    # effective depth of the cohort (0 = max Δ)
+    # telemetry=False drops span/gauge-series/wall retention for unbounded
+    # soaks; counters, compile events and the fault log stay live (engine
+    # semantics read them). Telemetry never adds device launches and never
+    # changes outputs — the serve-structural gate runs a workload both ways
+    # and asserts bit-identity. profile_decode brackets each cohort's
+    # decode launch in a jax.profiler StepTraceAnnotation (needs an active
+    # jax.profiler trace to matter; off the hot path by default).
+    telemetry: bool = True        # retain spans/gauge series/wall marks
+    profile_decode: bool = False  # jax.profiler annotation around decode
 
     @property
     def pages_per_slot(self) -> int:
@@ -436,8 +448,17 @@ class PagedEngine:
         else:
             self.pc = pc if pc is not None else ParallelContext()
             self.params = params
+        # ONE instrumented path for every engine event: counters, spans,
+        # gauges, compile events and fault records all live here (host-side
+        # only — telemetry never adds device launches). Must exist before
+        # the scheduler (span emission) and the compiled programs (compile
+        # events).
+        self.telemetry = Telemetry(enabled=psv.telemetry)
+        self.telemetry.seed_counters(self.COUNTER_KEYS)
+        self.telemetry.fault_counts.update(
+            {k: 0 for k in F.ALL_FAULT_KINDS})
         self.pool = PagePool(psv.n_pages)
-        self.prefix = (PrefixCache(psv.page_size)
+        self.prefix = (PrefixCache(psv.page_size, telemetry=self.telemetry)
                        if psv.prefix_cache and ms.tp == 1
                        and self._prefix_eligible(ms)
                        else None)
@@ -446,7 +467,7 @@ class PagedEngine:
             max_len=psv.max_len,
             prefill_token_budget=psv.prefill_token_budget,
             prefix_cache=self.prefix, preempt_after=psv.preempt_after,
-            degrade_slots=self.n_deg)
+            degrade_slots=self.n_deg, telemetry=self.telemetry)
         if mesh is not None:
             c_abs, c_specs = PG.paged_cache_meta(
                 ms, n_slots=self.n_main, n_pages=psv.n_pages,
@@ -487,18 +508,36 @@ class PagedEngine:
         # against the original run; the engine then self-checks the replay.
         self._exact = (psv.temperature == 0.0
                        and psv.cache_dtype == jnp.float32)
-        self.counters = {"prefill_tokens": 0, "hit_tokens": 0,
-                         "resume_hit_tokens": 0, "replay_tokens": 0,
-                         "full_prefills": 0, "suffix_prefills": 0,
-                         "prefix_hits": 0, "failed": 0, "expired": 0,
-                         "cancelled": 0, "shed": 0, "degraded_admissions": 0}
         # Chaos state: the plan schedules, the engine applies + logs.
         self._plan = fault_plan
-        self.fault_log: List[Dict[str, Any]] = []
-        self.fault_counts: Dict[str, int] = {k: 0 for k in F.ALL_FAULT_KINDS}
         self._poison_slots: set = set()   # slots NaN-poisoned THIS step
         self._poison_next = 0             # deferred poison_prompt events
         self._storm_next = 0              # deferred deadline_storm victims
+
+    #: Every monotone engine counter, pre-registered at 0. Per-step
+    #: ``step()`` stats are DELTAS of the lifecycle subset over the step —
+    #: one increment site per event, no parallel stats threading.
+    COUNTER_KEYS = (
+        "prefill_tokens", "hit_tokens", "resume_hit_tokens",
+        "replay_tokens", "full_prefills", "suffix_prefills", "prefix_hits",
+        "submitted", "admitted", "decoded", "finished", "preempted",
+        "failed", "expired", "cancelled", "shed", "degraded_admissions")
+    #: The subset ``step()`` reports as per-step deltas.
+    STEP_STAT_KEYS = ("admitted", "decoded", "finished", "preempted",
+                      "failed", "expired")
+
+    @property
+    def counters(self) -> Dict[str, int]:
+        """Monotone event counters (the live Telemetry dict)."""
+        return self.telemetry.counters
+
+    @property
+    def fault_log(self) -> List[Dict[str, Any]]:
+        return self.telemetry.fault_log
+
+    @property
+    def fault_counts(self) -> Dict[str, int]:
+        return self.telemetry.fault_counts
 
     @staticmethod
     def _prefix_eligible(ms: T.ModelStructure) -> bool:
@@ -543,6 +582,7 @@ class PagedEngine:
         params_ms = self._model(cohort)[1] if cohort == COHORT_DEGRADED \
             else self.ms
         size = self.n_main if cohort == COHORT_MAIN else self.n_deg
+        self.telemetry.compile_event(cohort, "decode", size)
         if self.mesh is not None:
             fn, _, _, _ = make_sharded_serve_step(
                 params_ms, self.mesh, None, batch=size, paged=self.psv)
@@ -556,6 +596,7 @@ class PagedEngine:
         structure (re-paired stack) and the cache tree's slot count."""
         ms = self._model(cohort)[1]
         size = self.n_main if cohort == COHORT_MAIN else self.n_deg
+        self.telemetry.compile_event(cohort, "prefill_full", prompt_len)
         if self.mesh is not None:
             fn, _, _ = make_sharded_prefill(
                 ms, self.mesh, None, batch=1, prompt_len=prompt_len,
@@ -575,6 +616,8 @@ class PagedEngine:
         program writes only ``sfx_ids`` pages, never ``ctx_ids``. Main
         cohort only (the radix tree never holds degraded-plan pages).
         """
+        self.telemetry.compile_event(COHORT_MAIN, "prefill_suffix",
+                                     (n_ctx_pages, suffix_len))
         ms, pc, psv = self.ms, self.pc, self.psv
         assert ms.tp == 1, "prefix sharing is tp=1 only (auto-disabled)"
         ps = psv.page_size
@@ -608,6 +651,8 @@ class PagedEngine:
         fn = self._scrubs.get(cohort)
         if fn is not None:
             return fn
+        self.telemetry.compile_event(cohort, "scrub",
+                                     self.psv.pages_per_slot)
         if self.mesh is not None:
             _, c_specs = PG.paged_cache_meta(
                 self.ms, n_slots=self.n_main, n_pages=self.psv.n_pages,
@@ -645,7 +690,8 @@ class PagedEngine:
             self._shed_for(deadline)
         eos = self.psv.eos_token if eos_token is None else eos_token
         r = self.sched.submit(prompt, max_new, eos,
-                              deadline=-1 if deadline is None else deadline)
+                              deadline=-1 if deadline is None else deadline,
+                              step=self.step_count)
         self._requests[r.rid] = r
         # Deferred chaos events that needed a submission to land on.
         if self._poison_next > 0:
@@ -672,7 +718,6 @@ class PagedEngine:
         if slot >= 0:
             self._clear_slot(slot)
         self.results[rid] = np.asarray(r.out, np.int32)
-        self.counters["cancelled"] += 1
         return True
 
     def _shed_for(self, newcomer_deadline: Optional[int]) -> None:
@@ -696,7 +741,6 @@ class PagedEngine:
             f"rid={victim.rid} (deadline {victim.deadline}) shed for a "
             f"more urgent arrival (deadline {newcomer_deadline})"))
         self.results[victim.rid] = np.asarray(victim.out, np.int32)
-        self.counters["shed"] += 1
 
     # -- fault containment ---------------------------------------------
     def _clear_slot(self, slot: int) -> None:
@@ -715,13 +759,14 @@ class PagedEngine:
                                     jnp.asarray(ids),
                                     jnp.int32(r.slot - lo)))
 
-    def _fail(self, r: Request, error, *, scrub: bool,
-              stats: Optional[Dict[str, int]] = None) -> None:
+    def _fail(self, r: Request, error, *, scrub: bool) -> None:
         """Contain a per-request fault: FAILED terminal state, slot row
-        cleared, all pages released this step. ``scrub``: the request may
-        have written non-finite values into its pages — zero its PRIVATE
-        pages before they return to the free list, and purge its own radix
-        donations (defense in depth; see PrefixCache.purge_pages)."""
+        cleared, all pages released this step. The FAILED transition (and
+        its counter) is the scheduler's ``fail`` — one increment site.
+        ``scrub``: the request may have written non-finite values into its
+        pages — zero its PRIVATE pages before they return to the free
+        list, and purge its own radix donations (defense in depth; see
+        PrefixCache.purge_pages)."""
         slot = r.slot
         if slot >= 0 and scrub:
             private = r.pages[r.n_shared:]
@@ -734,11 +779,8 @@ class PagedEngine:
         if scrub and donated and self.prefix is not None:
             self.prefix.purge_pages(donated, self.pool)
         self.results[r.rid] = np.asarray(r.out, np.int32)
-        self.counters["failed"] += 1
-        if stats is not None:
-            stats["failed"] += 1
 
-    def _expire_pass(self, stats: Dict[str, int]) -> None:
+    def _expire_pass(self) -> None:
         """Deadlines are honored at step boundaries: any live request whose
         deadline has passed is EXPIRED and releases everything now."""
         sc = self.step_count
@@ -746,18 +788,14 @@ class PagedEngine:
                   if 0 <= x.deadline <= sc]:
             self.sched.expire(r, sc)
             self.results[r.rid] = np.asarray(r.out, np.int32)
-            self.counters["expired"] += 1
-            stats["expired"] += 1
         for r in [x for x in list(self.sched.running.values())
                   if 0 <= x.deadline <= sc]:
             slot = r.slot
             self.sched.expire(r, sc)
             self._clear_slot(slot)
             self.results[r.rid] = np.asarray(r.out, np.int32)
-            self.counters["expired"] += 1
-            stats["expired"] += 1
 
-    def _validate_block_tables(self, stats: Dict[str, int]) -> None:
+    def _validate_block_tables(self) -> None:
         """Pre-launch guard: every running slot's host block-table row must
         be exactly its request's pages followed by garbage padding. A
         mismatch (cosmic ray, buggy host code, injected corruption) would
@@ -773,17 +811,14 @@ class PagedEngine:
                 self._fail(r, BlockTableCorruptionError(
                     f"rid={r.rid} slot {slot}: block-table row "
                     f"{bt[slot - lo].tolist()} != owned pages "
-                    f"{r.pages}"), scrub=False, stats=stats)
+                    f"{r.pages}"), scrub=False)
 
     # -- chaos ----------------------------------------------------------
     def _log_fault(self, kind: str, *, rid: Optional[int] = None,
                    slot: Optional[int] = None, applied: bool = True,
                    deferred: bool = False) -> None:
-        self.fault_log.append({
-            "step": self.step_count, "kind": kind, "rid": rid,
-            "slot": slot, "applied": applied, "deferred": deferred})
-        if applied:
-            self.fault_counts[kind] += 1
+        self.telemetry.fault(self.step_count, kind, rid=rid, slot=slot,
+                             applied=applied, deferred=deferred)
 
     def _inject(self) -> None:
         """Apply this step's scheduled fault events. Victim selection is a
@@ -904,6 +939,8 @@ class PagedEngine:
         end = Lp + len(r.out) - 1      # exclusive; kv for end-1 is the
         if start >= end:               # resumed decode step's own write
             return True
+        self.telemetry.span_event(r.rid, REPLAY, self.step_count,
+                                  tokens=end - start)
         caches = self._get_caches(cohort)
         state_saved = [
             {name: np.asarray(v) for name, v in seg.items()
@@ -980,6 +1017,10 @@ class PagedEngine:
             if ctx:
                 self.counters["prefix_hits"] += 1
         if ctx < Lp:
+            self.telemetry.span_event(
+                r.rid, PREFILL, self.step_count,
+                kind="full" if ctx == 0 else "suffix",
+                hit_tokens=ctx, tokens=Lp - ctx)
             tok0, ok = self._run_prefill(r, ctx)
             if not ok:
                 # The prefill may have scattered non-finite kv into the
@@ -990,6 +1031,7 @@ class PagedEngine:
                 return False
             if not resumed:
                 r.out.append(tok0)
+                self.telemetry.first_token(r.rid, self.step_count)
             elif self._exact:
                 # Same program + same inputs as the original prefill: the
                 # re-sampled first token must reproduce the parked one.
@@ -1015,7 +1057,7 @@ class PagedEngine:
         self._clear_slot(slot)
         self.results[r.rid] = np.asarray(r.out, np.int32)
 
-    def _admit(self, stats: Dict[str, int], *, count_blocked: bool) -> None:
+    def _admit(self, *, count_blocked: bool) -> None:
         degrade = (self.psv.degrade_delta
                    and self.sched.n_queued >= self.psv.degrade_queue_depth)
         for r in self.sched.admit(self.step_count,
@@ -1024,14 +1066,17 @@ class PagedEngine:
             if r.cohort == COHORT_DEGRADED and not r.preemptions:
                 self.counters["degraded_admissions"] += 1
             if not self._start(r):
-                stats["failed"] += 1
                 continue
-            stats["admitted"] += 1
+            # "admitted" counts requests that SURVIVED admission (slot
+            # linked, prefill guards passed) — a request failed by a guard
+            # inside _start counts under "failed" only.
+            self.counters["admitted"] += 1
             if r.done():      # max_new == 1 (or instant EOS) on prefill
                 self._finish(r)
-                stats["finished"] += 1
+            else:
+                self.telemetry.span_event(r.rid, DECODE, self.step_count)
 
-    def _decode_cohort(self, cohort: str, stats: Dict[str, int]) -> None:
+    def _decode_cohort(self, cohort: str) -> None:
         tok_a, pos_a, bt_a, lo = self._arrays(cohort)
         size = tok_a.shape[0]
         running = {s: r for s, r in self.sched.running.items()
@@ -1043,10 +1088,14 @@ class PagedEngine:
             if lo <= s < lo + size:
                 poison[s - lo] = True
         self._key, sub = jax.random.split(self._key)
-        nxt, ok, caches = self._decode_fn(cohort)(
-            self._model(cohort)[0], self._get_caches(cohort),
-            jnp.asarray(tok_a), jnp.asarray(pos_a), jnp.asarray(bt_a),
-            jnp.asarray(poison), sub)
+        prof = (jax.profiler.StepTraceAnnotation(
+                    f"paged_decode_{cohort}", step_num=self.step_count)
+                if self.psv.profile_decode else contextlib.nullcontext())
+        with prof:
+            nxt, ok, caches = self._decode_fn(cohort)(
+                self._model(cohort)[0], self._get_caches(cohort),
+                jnp.asarray(tok_a), jnp.asarray(pos_a), jnp.asarray(bt_a),
+                jnp.asarray(poison), sub)
         self._set_caches(cohort, caches)
         nxt = np.asarray(nxt)
         ok = np.asarray(ok)
@@ -1060,43 +1109,73 @@ class PagedEngine:
                 self._fail(r, NonFiniteLogitsError(
                     f"rid={r.rid}: non-finite logits in decode at step "
                     f"{self.step_count} (slot {slot})"),
-                    scrub=True, stats=stats)
+                    scrub=True)
                 continue
             r.out.append(int(nxt[loc]))
             tok_a[loc] = nxt[loc]
             pos_a[loc] += 1
-            stats["decoded"] += 1
+            self.counters["decoded"] += 1
             if r.done():
                 self._finish(r)
-                stats["finished"] += 1
+
+    def _step_gauges(self, hit0: int, faults0: Dict[str, int]) -> None:
+        """Per-step gauge samples, taken AFTER the step's work: queue
+        depth, pool live/free/refcount-shared pages, per-step radix hit
+        tokens (fresh + resume), per-cohort slot occupancy, and faults by
+        kind (only steps where a kind fired emit a sample). All pure host
+        reads — no device work."""
+        tel, sc = self.telemetry, self.step_count
+        tel.gauge("queue_depth", sc, self.sched.n_queued)
+        tel.gauge("pages_live", sc, self.pool.live)
+        tel.gauge("pages_free", sc, self.pool.n_free)
+        tel.gauge("pages_shared", sc, self.pool.shared)
+        tel.gauge("hit_tokens_step", sc,
+                  tel.counters["hit_tokens"]
+                  + tel.counters["resume_hit_tokens"] - hit0)
+        n_run_main = sum(1 for s in self.sched.running if s < self.n_main)
+        tel.gauge(f"slots_live/{COHORT_MAIN}", sc, n_run_main)
+        if self.n_deg:
+            tel.gauge(f"slots_live/{COHORT_DEGRADED}", sc,
+                      self.sched.n_running - n_run_main)
+        for kind, n in tel.fault_counts.items():
+            d = n - faults0.get(kind, 0)
+            if d:
+                tel.gauge(f"faults/{kind}", sc, d)
 
     def step(self) -> Dict[str, int]:
         """One engine iteration: chaos injection (when armed) -> deadline
         expiry -> admission+prefill (with blocked-head preemption when
         enabled) -> block-table validation -> one decode program per active
-        cohort. Returns counters for the step."""
-        stats = {"admitted": 0, "decoded": 0, "finished": 0,
-                 "preempted": 0, "live_pages": 0, "failed": 0, "expired": 0}
+        cohort. Returns the step's lifecycle event counts — computed as
+        telemetry counter DELTAS over the step, so there is exactly one
+        increment site per event and the per-step view can never drift
+        from the monotone totals."""
+        tel = self.telemetry
+        before = {k: tel.counters[k] for k in self.STEP_STAT_KEYS}
+        hit0 = tel.counters["hit_tokens"] + tel.counters["resume_hit_tokens"]
+        faults0 = dict(tel.fault_counts)
         if self._plan is not None:
             self._inject()
-        self._expire_pass(stats)
-        self._admit(stats, count_blocked=True)
+        self._expire_pass()
+        self._admit(count_blocked=True)
         if self.sched.should_preempt():
             _victim, slot = self.sched.preempt_youngest(self.step_count)
             self._clear_slot(slot)
-            stats["preempted"] += 1
             # The freed pages/slot may unblock the head immediately.
-            self._admit(stats, count_blocked=False)
-        self._validate_block_tables(stats)
-        self._decode_cohort(COHORT_MAIN, stats)
+            self._admit(count_blocked=False)
+        self._validate_block_tables()
+        self._decode_cohort(COHORT_MAIN)
         if self.n_deg:
-            self._decode_cohort(COHORT_DEGRADED, stats)
+            self._decode_cohort(COHORT_DEGRADED)
         self._poison_slots.clear()
         self.pool.check_balance()
         if self.prefix is not None:
             self.prefix.check_locks()
-        stats["live_pages"] = self.pool.live
+        self._step_gauges(hit0, faults0)
+        tel.mark_step(self.step_count)
         self.step_count += 1
+        stats = {k: tel.counters[k] - before[k] for k in self.STEP_STAT_KEYS}
+        stats["live_pages"] = self.pool.live
         return stats
 
     def drain(self) -> Dict[int, np.ndarray]:
@@ -1119,6 +1198,44 @@ class PagedEngine:
 
     def request(self, rid: int) -> Request:
         return self._requests[rid]
+
+    # -- telemetry exporters -------------------------------------------
+    def metrics_snapshot(self) -> Dict[str, Any]:
+        """JSON-able metrics snapshot: counters, last-value gauges,
+        histograms, compile events, fault counts, request-state census,
+        span-derived latency (step percentiles + ``wall`` ms annotations),
+        prefix hit rate, pool accounting, and pool-occupancy series stats.
+        Everything outside ``wall*`` keys is a pure function of the
+        step-denominated event stream (same-seed runs snapshot
+        identically once wall fields are stripped)."""
+        snap = self.telemetry.snapshot(step=self.step_count)
+        snap["pool"] = {
+            "allocated_total": self.pool.allocated_total,
+            "freed_total": self.pool.freed_total,
+            "shared_total": self.pool.shared_total,
+            "alloc_faults": self.pool.alloc_faults,
+            "live": self.pool.live,
+        }
+        cap = max(self.psv.n_pages - 1, 1)
+        series = self.telemetry.gauge_series.get("pages_live", [])
+        if series:
+            vals = [v for _, v in series]
+            snap["occupancy"] = {
+                "mean": round(sum(vals) / len(vals) / cap, 3),
+                "max": round(max(vals) / cap, 3),
+            }
+        snap["preemptions"] = self.sched.preemptions_total
+        return snap
+
+    def metrics_text(self) -> str:
+        """Prometheus-style text exposition of the scalar channels."""
+        return self.telemetry.prom_text()
+
+    def dump_trace(self, path: str) -> str:
+        """Write the Chrome/Perfetto ``trace_event`` JSON for this run
+        (repro.serve.trace). Needs spans/gauge series, so the engine must
+        run with ``telemetry=True`` (the default)."""
+        return write_trace(self.telemetry, path, n_slots=self.psv.n_slots)
 
 
 # ---------------------------------------------------------------------------

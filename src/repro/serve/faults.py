@@ -53,7 +53,7 @@ __all__ = [
     "ServeError", "InvalidRequestError", "QueueFullError", "LoadShedError",
     "PageAccountingError", "NonFiniteLogitsError",
     "BlockTableCorruptionError", "PoisonedPromptError",
-    "DeadlineExceededError",
+    "DeadlineExceededError", "error_kind",
     "PAGE_ALLOC_FAIL", "NAN_LOGITS", "BLOCK_TABLE_CORRUPT", "POISON_PROMPT",
     "DEADLINE_STORM", "ALL_FAULT_KINDS", "FaultEvent", "FaultPlan",
 ]
@@ -109,6 +109,14 @@ class PoisonedPromptError(ServeError):
 
 class DeadlineExceededError(ServeError):
     """The request's deadline passed a step boundary before it finished."""
+
+
+def error_kind(error: Optional[BaseException]) -> Optional[str]:
+    """Stable telemetry label for an error: the taxonomy class name (e.g.
+    ``"LoadShedError"``), or None. Class names — not ``str(error)`` — so
+    span/trace annotations stay deterministic across runs whose messages
+    embed run-dependent ids."""
+    return None if error is None else type(error).__name__
 
 
 # ---------------------------------------------------------------------------

@@ -71,16 +71,24 @@ class RadixNode:
 class PrefixCache:
     """Radix tree of whole-page prompt chunks -> resident cache pages."""
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int, *, telemetry=None):
         assert page_size >= 1
         self.page_size = page_size
         self.root = RadixNode(chunk=(), page=-1)   # sentinel, never evicted
         self.n_nodes = 0
         # Monotone lifetime counters (admission-confirmed hit stats live on
         # the ENGINE's counters dict — match() also runs speculatively, so
-        # counting hits here would inflate them).
+        # counting hits here would inflate them). ``telemetry`` (a
+        # repro.serve.telemetry.Telemetry, kept duck-typed to avoid an
+        # import cycle) mirrors them as radix_inserted_pages /
+        # radix_evicted_pages so one snapshot carries the tree's churn.
         self.inserted_pages_total = 0
         self.evicted_pages_total = 0
+        self._tel = telemetry
+
+    def _inc(self, name: str) -> None:
+        if self._tel is not None:
+            self._tel.inc(name)
 
     # -- matching ------------------------------------------------------
     def _chunks(self, tokens: np.ndarray):
@@ -162,6 +170,7 @@ class PrefixCache:
                 node.children[chunk] = child
                 self.n_nodes += 1
                 self.inserted_pages_total += 1
+                self._inc("radix_inserted_pages")
                 transferred.append(pages[i])
             elif child.page != pages[i]:
                 break
@@ -201,6 +210,7 @@ class PrefixCache:
                 del n.parent.children[n.chunk]
                 self.n_nodes -= 1
                 self.evicted_pages_total += 1
+                self._inc("radix_evicted_pages")
                 freed += 1
                 if freed >= n_pages:
                     break
@@ -252,6 +262,7 @@ class PrefixCache:
                 pool.free([m.page])
                 self.n_nodes -= 1
                 self.evicted_pages_total += 1
+                self._inc("radix_evicted_pages")
                 freed += 1
         return freed
 

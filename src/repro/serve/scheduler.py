@@ -77,9 +77,12 @@ from typing import Deque, Dict, List, Optional
 import numpy as np
 
 from repro.serve.faults import (DeadlineExceededError, InvalidRequestError,
-                                PageAccountingError, ServeError)
+                                LoadShedError, PageAccountingError,
+                                ServeError, error_kind)
 from repro.serve.paged_cache import GARBAGE_PAGE, pages_needed
 from repro.serve.prefix_cache import PrefixCache, RadixNode
+from repro.serve.telemetry import (ADMITTED, PREEMPTED, SUBMITTED,
+                                   Telemetry)
 
 QUEUED, RUNNING, FINISHED = "queued", "running", "finished"
 FAILED, CANCELLED, EXPIRED = "failed", "cancelled", "expired"
@@ -133,6 +136,12 @@ class PagePool:
 
     # Alias making call sites that care about the invariant read naturally.
     live_unique = live
+
+    @property
+    def shared(self) -> int:
+        """Live pages with more than one holder (refcount > 1) — the
+        telemetry gauge for how much of the pool is radix/CoW-shared."""
+        return int((self._ref > 1).sum())
 
     def refcount(self, page: int) -> int:
         return int(self._ref[page])
@@ -298,8 +307,10 @@ class Scheduler:
     def __init__(self, *, n_slots: int, pool: PagePool, page_size: int,
                  max_len: int, prefill_token_budget: int = 4096,
                  prefix_cache: Optional[PrefixCache] = None,
-                 preempt_after: int = 0, degrade_slots: int = 0):
+                 preempt_after: int = 0, degrade_slots: int = 0,
+                 telemetry: Optional[Telemetry] = None):
         assert 0 <= degrade_slots < n_slots
+        self.telemetry = telemetry
         self.pool = pool
         self.page_size = page_size
         self.max_len = max_len
@@ -331,8 +342,17 @@ class Scheduler:
     def _free_list_for(self, slot: int) -> List[int]:
         return self.free_slots if slot < self.n_main else self.free_slots_deg
 
+    # -- telemetry plumbing (no-ops without a registry) -----------------
+    def _emit(self, r: Request, state: str, step: int, **attrs) -> None:
+        if self.telemetry is not None:
+            self.telemetry.span_event(r.rid, state, step, **attrs)
+
+    def _count(self, name: str) -> None:
+        if self.telemetry is not None:
+            self.telemetry.inc(name)
+
     def submit(self, prompt: np.ndarray, max_new: int, eos_token: int = -1,
-               *, deadline: int = -1) -> Request:
+               *, deadline: int = -1, step: int = 0) -> Request:
         """Validate + enqueue. Every rejection is an ``InvalidRequestError``
         (a ``ValueError``) raised BEFORE the request enters the queue:
         malformed work must fail at the submit boundary, not deep inside a
@@ -369,6 +389,10 @@ class Scheduler:
                     deadline=deadline)
         self._next_rid += 1
         self.queue.append(r)
+        self._count("submitted")
+        self._emit(r, SUBMITTED, step, prompt_len=r.prompt_len,
+                   max_new=max_new, deadline=deadline)
+        self._emit(r, QUEUED, step)
         return r
 
     # -- prefix matching ----------------------------------------------
@@ -441,6 +465,8 @@ class Scheduler:
         r.cohort = cohort
         r.admitted_step = step
         self.running[r.slot] = r
+        self._emit(r, ADMITTED, step, slot=r.slot, cohort=cohort,
+                   n_shared=r.n_shared, resumed=bool(r.out))
         return True
 
     def admit(self, step: int = -1, *, count_blocked: bool = True,
@@ -555,6 +581,8 @@ class Scheduler:
         assert r.status == RUNNING
         r.status = FINISHED
         r.finished_step = step
+        self._count("finished")
+        self._emit(r, FINISHED, step, n_out=len(r.out))
         del self.running[r.slot]
         self._free_list_for(r.slot).append(r.slot)
         # Donate only pages fully covered by the PROMPT (pages containing
@@ -590,6 +618,12 @@ class Scheduler:
         r.status = status
         r.error = error
         r.finished_step = step
+        # One increment site per terminal event. A load-shed victim is
+        # EXPIRED with a LoadShedError and counts under "shed", never
+        # "expired" — shedding is queue policy, not a deadline overrun.
+        shed = status == EXPIRED and isinstance(error, LoadShedError)
+        self._count("shed" if shed else status)
+        self._emit(r, status, step, error=error_kind(error), shed=shed)
 
     def fail(self, r: Request, step: int,
              error: Optional[ServeError] = None) -> None:
@@ -626,6 +660,10 @@ class Scheduler:
         slot = victim.slot
         del self.running[victim.slot]
         self._free_list_for(victim.slot).append(victim.slot)
+        self._count("preempted")
+        self._emit(victim, PREEMPTED, step, slot=victim.slot,
+                   n_out=len(victim.out))
+        self._emit(victim, QUEUED, step)
         victim.slot = -1
         victim.status = QUEUED
         victim.preemptions += 1

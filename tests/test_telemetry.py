@@ -1,0 +1,249 @@
+"""Serve telemetry: span legality, histograms, exporters, determinism.
+
+The registry is pure host bookkeeping, so observing a run may never change
+it (on/off bit-identity), and because every record is step-denominated the
+whole event stream of a seeded chaos run must replay byte-identically once
+wall-clock annotations are stripped. Spans are driven by the ENGINE through
+a validating state machine — an illegal transition is engine corruption and
+raises, it is never recorded.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.model import transformer as T
+from repro.serve import (FINISHED, FaultPlan, Histogram, PagedEngine,
+                         PagedServeConfig, RequestSpan, SpanStateError,
+                         Telemetry, dumps_trace, strip_wall, validate_trace)
+from repro.serve.telemetry import (ADMITTED, DECODE, PREEMPTED, PREFILL,
+                                   QUEUED, SPAN_TERMINAL, SUBMITTED)
+
+from _helpers import tiny
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _build(n_layers=2):
+    cfg = tiny(n_layers=n_layers)
+    ms = T.build_structure(cfg, tp=1)
+    return cfg, ms, T.init_params(ms, KEY)
+
+
+def _psv(**kw):
+    base = dict(n_slots=2, page_size=8, n_pages=9, max_len=32,
+                cache_dtype=jnp.float32)
+    base.update(kw)
+    return PagedServeConfig(**base)
+
+
+def _prompt(i, length, vocab):
+    return np.asarray(jax.random.randint(jax.random.fold_in(KEY, i),
+                                         (length,), 0, vocab))
+
+
+# ---------------------------------------------------------------------------
+# Span state machine
+# ---------------------------------------------------------------------------
+
+def test_span_legal_lifecycle_with_preemption_cycle():
+    s = RequestSpan(rid=7)
+    s.transition(SUBMITTED, 0, prompt_len=8)
+    s.transition(QUEUED, 0)
+    s.transition(ADMITTED, 1, slot=0, cohort="main")
+    s.transition(PREFILL, 1, kind="full", hit_tokens=0, tokens=8)
+    s.transition(DECODE, 1)
+    s.transition(PREEMPTED, 3, slot=0)
+    s.transition(QUEUED, 3)
+    s.transition(ADMITTED, 5, slot=1, cohort="main")
+    s.transition(DECODE, 5)
+    s.transition(FINISHED, 9, n_out=4)
+    assert s.state == FINISHED and s.state in SPAN_TERMINAL
+    assert s.submit_step == 0 and s.terminal_step == 9
+    assert s.cohort == "main"
+    assert [e.step for e in s.events_of(ADMITTED)] == [1, 5]
+    assert s.events_of(PREFILL)[0].attrs["kind"] == "full"
+
+
+def test_span_rejects_decode_before_admission():
+    s = RequestSpan(rid=1)
+    s.transition(SUBMITTED, 0)
+    s.transition(QUEUED, 0)
+    with pytest.raises(SpanStateError, match="queued -> decode"):
+        s.transition(DECODE, 1)
+
+
+def test_span_terminal_states_are_absorbing():
+    s = RequestSpan(rid=2)
+    for state, step in ((SUBMITTED, 0), (QUEUED, 0), (ADMITTED, 1),
+                        (DECODE, 1), (FINISHED, 4)):
+        s.transition(state, step)
+    with pytest.raises(SpanStateError, match="finished ->"):
+        s.transition(QUEUED, 5)
+
+
+def test_span_must_open_with_submitted_and_requeue_after_preempt():
+    with pytest.raises(SpanStateError, match="must open"):
+        RequestSpan(rid=3).transition(QUEUED, 0)
+    s = RequestSpan(rid=4)
+    for state, step in ((SUBMITTED, 0), (QUEUED, 0), (ADMITTED, 1),
+                        (DECODE, 1), (PREEMPTED, 2)):
+        s.transition(state, step)
+    with pytest.raises(SpanStateError, match="preempted -> admitted"):
+        s.transition(ADMITTED, 3)       # must pass through QUEUED first
+
+
+# ---------------------------------------------------------------------------
+# Histogram: Prometheus le (upper-inclusive) bucket semantics
+# ---------------------------------------------------------------------------
+
+def test_histogram_bucket_edges_are_upper_inclusive():
+    h = Histogram(edges=(1, 2, 4, 8))
+    for v in (0, 1):            # both <= 1 -> first bucket
+        h.observe(v)
+    h.observe(2)                # == edge -> bucket of that edge
+    h.observe(3)                # 2 < v <= 4
+    h.observe(8)                # == last finite edge
+    h.observe(9)                # overflow -> +Inf bucket
+    assert h.counts == [2, 1, 1, 1, 1]
+    assert sum(h.counts) == h.count == 6
+    assert h.sum == 23.0
+    d = h.as_dict()
+    assert d["edges"] == [1, 2, 4, 8] and len(d["counts"]) == 5
+
+
+def test_histogram_percentile_reports_bucket_upper_edge():
+    h = Histogram(edges=(1, 2, 4, 8))
+    for v in (1, 1, 2, 4, 100):
+        h.observe(v)
+    assert h.percentile(50) == 2.0
+    assert h.percentile(100) == 8.0     # overflow reports last finite edge
+    assert Histogram(edges=(1,)).percentile(50) == 0.0   # empty
+
+
+# ---------------------------------------------------------------------------
+# Registry behavior
+# ---------------------------------------------------------------------------
+
+def test_disabled_telemetry_keeps_scalars_drops_growing_channels():
+    tel = Telemetry(enabled=False)
+    tel.inc("decoded", 3)
+    tel.compile_event("main", "decode", 2)
+    tel.fault(4, "nan_logits", rid=1, slot=0)
+    tel.observe("e2e_steps", 5)
+    tel.gauge("queue_depth", 1, 2)
+    tel.span_event(0, SUBMITTED, 0)
+    tel.mark_step(1)
+    # Scalars live (the engine's stats deltas and chaos gates read them)…
+    assert tel.counters["decoded"] == 3
+    assert tel.compiles == {("main", "decode", 2): 1}
+    assert tel.fault_counts == {"nan_logits": 1} and len(tel.fault_log) == 1
+    assert tel.hists["e2e_steps"].count == 1
+    assert tel.gauge_last["queue_depth"] == 2
+    # …growing channels dropped.
+    assert not tel.spans and not tel.gauge_series and not tel.step_wall
+
+
+def test_reset_zeros_in_place_keeping_key_sets():
+    tel = Telemetry()
+    tel.seed_counters(["decoded", "finished"])
+    tel.inc("decoded", 5)
+    tel.fault(1, "nan_logits")
+    tel.span_event(0, SUBMITTED, 0)
+    tel.gauge("queue_depth", 0, 1)
+    tel.reset()
+    assert tel.counters == {"decoded": 0, "finished": 0}
+    assert tel.fault_counts == {"nan_logits": 0} and not tel.fault_log
+    assert not tel.spans and not tel.gauge_series and not tel.hists
+
+
+# ---------------------------------------------------------------------------
+# Engine-driven telemetry
+# ---------------------------------------------------------------------------
+
+def test_engine_spans_snapshot_and_trace():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv())
+    rids = [eng.add_request(_prompt(i, 8, cfg.vocab_size), 4)
+            for i in range(3)]        # 3 requests, 2 slots -> staggered
+    eng.drain()
+    for rid in rids:
+        span = eng.telemetry.span(rid)
+        assert span.state == FINISHED
+        assert span.first_token_step >= span.events_of(ADMITTED)[0].step
+        assert span.events_of(PREFILL)[0].attrs["kind"] == "full"
+    snap = eng.metrics_snapshot()
+    assert snap["requests"] == {"finished": 3}
+    assert snap["counters"]["submitted"] == snap["counters"]["finished"] == 3
+    assert snap["counters"]["decoded"] == 9          # 3 x (4 - 1 prefill tok)
+    assert snap["histograms"]["e2e_steps"]["count"] == 3
+    assert "serve_finished_total 3" in eng.metrics_text()
+    trace = json.loads(dumps_trace(eng.telemetry, n_slots=2))
+    validate_trace(trace)
+    names = {e["name"] for e in trace["traceEvents"]}
+    assert {"queue_depth", "pages_live"} <= names
+    cats = {e.get("cat") for e in trace["traceEvents"]}
+    assert {"slot", "request", "lifecycle"} <= cats
+
+
+def test_compile_counter_pins_prefill_compiles_to_distinct_lengths():
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv())
+    for i, L in enumerate((8, 16, 8, 16, 8)):   # two DISTINCT lengths
+        eng.add_request(_prompt(i, L, cfg.vocab_size), 2)
+    eng.drain()
+    prefills = {k: n for k, n in eng.telemetry.compiles.items()
+                if k[1] == "prefill_full"}
+    assert prefills == {("main", "prefill_full", 8): 1,
+                        ("main", "prefill_full", 16): 1}
+    assert eng.telemetry.compiles[("main", "decode", 2)] == 1
+
+
+def test_telemetry_on_off_runs_are_bit_identical():
+    cfg, ms, params = _build()
+    prompts = [(_prompt(i, 8, cfg.vocab_size), 4) for i in range(3)]
+    engines = [PagedEngine(params, ms, _psv(telemetry=on))
+               for on in (True, False)]
+    for eng in engines:
+        for p, n in prompts:
+            eng.add_request(p, n)
+        eng.drain()
+    on, off = engines
+    assert sorted(on.results) == sorted(off.results)
+    for rid in on.results:
+        assert (on.results[rid] == off.results[rid]).all(), rid
+    assert dict(on.counters) == dict(off.counters)
+    assert on.telemetry.compiles == off.telemetry.compiles
+    assert on.telemetry.spans and not off.telemetry.spans
+
+
+def test_same_seed_chaos_traces_are_byte_identical():
+    cfg, ms, params = _build()
+    prompts = [(_prompt(i, 8, cfg.vocab_size), 4) for i in range(4)]
+
+    def soak():
+        eng = PagedEngine(params, ms, _psv(),
+                          fault_plan=FaultPlan(0, n_steps=12, per_kind=1))
+        for p, n in prompts:
+            eng.add_request(p, n)
+        while eng.sched.n_queued or eng.sched.n_running:
+            eng.step()
+            assert eng.step_count < 100
+        return eng
+
+    a, b = soak(), soak()
+    assert a.fault_log == b.fault_log and a.fault_log
+    ta = dumps_trace(a.telemetry, n_slots=2, wall=False)
+    assert ta == dumps_trace(b.telemetry, n_slots=2, wall=False)
+    # wall fields exist with wall=True and strip_wall removes every one.
+    doc = json.loads(dumps_trace(a.telemetry, n_slots=2, wall=True))
+
+    def has_wall(o):
+        if isinstance(o, dict):
+            return any(k.startswith("wall") or has_wall(v)
+                       for k, v in o.items())
+        return isinstance(o, list) and any(has_wall(v) for v in o)
+
+    assert has_wall(doc) and not has_wall(strip_wall(doc))
