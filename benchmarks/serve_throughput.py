@@ -79,6 +79,28 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the tp>1 half:
       max_queue, shedding is deadline-aware, and the aggressive-Δ degraded
       cohort is bit-identical to a fixed-Δ engine re-paired by LP.replan.
 
+``--structural --spec-k K`` (the spec-structural CI gate) runs the
+self-speculative decoding half:
+  (s) the VERIFY program is the regular paged decode program at batch
+      n_slots*(K+1) — widening the batch adds ZERO launches (still one
+      fused attention launch + 2 cache writes per paired phase), and the
+      DRAFT program over the re-paired shallow structure keeps the
+      per-pair launch savings of (a);
+  (t) with RAW random weights (draft/full greedy agreement is chance
+      level, so rejection + rewind are hammered) the speculative engine's
+      greedy streams are BIT-IDENTICAL to the plain engine's under >= 8
+      staggered concurrent requests, draft/verify/reject counters
+      reconcile (draft_steps == K * verify_steps), exactly ONE verify
+      program is ever compiled (launches-per-verify == 1), and page
+      accounting balances through every rewind;
+  (u) with segment-scaled weights (emulating a trained model's shallow/
+      full agreement) the SAME bit-identity holds while accepted-tokens-
+      per-verify > 1 and net tok/s >= the non-speculative engine on the
+      same warmed workload;
+  (v) the acceptance stats land in BENCH_serve.json ("spec" section) and
+      the run's trace (results/trace_spec.json) carries per-slot
+      ``spec:accepted/probed`` slices.
+
 Every structural run also folds its throughput/latency numbers into
 ``benchmarks/results/BENCH_serve.json`` so successive PRs leave a
 comparable perf trajectory (uploaded as a CI artifact).
@@ -103,9 +125,10 @@ from repro.model import attention as A
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
 from repro.serve import (ALL_FAULT_KINDS, CANCELLED, COHORT_DEGRADED,
-                         EXPIRED, FAILED, FINISHED, TERMINAL_STATES,
-                         FaultPlan, PagedEngine, PagedServeConfig,
-                         QueueFullError, ServeConfig, dumps_trace, generate,
+                         COHORT_SPEC_DRAFT, COHORT_SPEC_VERIFY, EXPIRED,
+                         FAILED, FINISHED, TERMINAL_STATES, FaultPlan,
+                         PagedEngine, PagedServeConfig, QueueFullError,
+                         ServeConfig, dumps_trace, generate,
                          sharded_generate, validate_trace)
 from repro.serve import paged_cache as PG
 from repro.serve.engine import make_sharded_serve_step
@@ -150,6 +173,9 @@ BENCH_DRIVE_KEYS = frozenset({"tok_per_s", "lat_p50_ms", "lat_p99_ms",
                               "ttft_p50_ms", "ttft_p99_ms"})
 BENCH_CHAOS_KEYS = frozenset({"soak_steps", "faults_applied", "survivors",
                               "overload"})
+BENCH_SPEC_KEYS = frozenset({"spec_k", "draft_eff_depth",
+                             "accept_per_verify", "accept_rate",
+                             "spec_tok_per_s", "base_tok_per_s"})
 
 
 def _check_bench_schema(data: dict) -> None:
@@ -160,10 +186,12 @@ def _check_bench_schema(data: dict) -> None:
             required = BENCH_DRIVE_KEYS | {"hit_rate"}
         elif section == "chaos":
             required = BENCH_CHAOS_KEYS
+        elif section == "spec":
+            required = BENCH_DRIVE_KEYS | BENCH_SPEC_KEYS
         else:
             raise AssertionError(
                 f"BENCH_serve.json schema drift: unknown section "
-                f"{section!r} (known: tpN / shared_prefix / chaos)")
+                f"{section!r} (known: tpN / shared_prefix / chaos / spec)")
         missing = required - payload.keys()
         assert not missing, (
             f"BENCH_serve.json schema drift: section {section!r} lost "
@@ -803,6 +831,142 @@ def structural_chaos(seed: int = 0) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Speculative structural gate (self-speculative decoding)
+# ---------------------------------------------------------------------------
+
+SPEC_K = 3           # draft tokens per verify in the spec-structural gate
+SPEC_HOT_SCALE = 0.1  # segment scale emulating trained-model agreement
+
+
+def _scaled_params(params, scale: float):
+    """Shrink every segment weight by ``scale``: the shallow re-paired
+    draft and the full-depth verify then agree greedily almost everywhere
+    — the trained-model regime the acceptance gate needs, without real
+    weights (the paper's premise is that TRAINED deep halves barely move
+    the residual stream; raw PRNG weights agree only at chance level, so
+    they exercise the rejection/rewind path instead)."""
+    return dict(params, segments=jax.tree.map(lambda x: x * scale,
+                                              params["segments"]))
+
+
+def structural_spec(spec_k: int = SPEC_K, seed: int = 17) -> dict:
+    """The spec-structural CI gate — module docstring items (s)-(v)."""
+    assert spec_k >= 1, spec_k
+
+    # (s) program shapes. The verifier IS the regular paged decode program
+    # at batch n_slots*(k+1): widening the batch may not add a single
+    # launch (one fused attention launch + 2 cache writes per paired
+    # phase). The drafter is the same program over the re-paired shallow
+    # structure at the main batch, keeping the per-pair savings of (a).
+    _, ms_base = _structure(0)            # base engine: vanilla full depth
+    launches, writes = _launch_and_write_counts(ms_base,
+                                               N_SLOTS * (spec_k + 1))
+    assert launches == N_LAYERS, (launches, N_LAYERS)
+    assert writes == 2 * N_LAYERS, (writes, N_LAYERS)
+    _, ms_draft = _structure(N_LAYERS // 2)   # == draft_plan_for(Δ=0)
+    d_groups = N_LAYERS - N_LAYERS // 2
+    d_launches, d_writes = _launch_and_write_counts(ms_draft, N_SLOTS)
+    assert d_launches == d_groups and d_writes == 2 * d_groups, (
+        d_launches, d_writes, d_groups)
+
+    cfg, ms, params = _build(0)
+    psv_plain = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                                 n_pages=N_PAGES, max_len=MAX_LEN,
+                                 cache_dtype=jnp.float32)
+    psv_spec = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                                n_pages=N_PAGES, max_len=MAX_LEN,
+                                cache_dtype=jnp.float32, spec_k=spec_k)
+    reqs = _workload(cfg, 12, rate=4.0, seed=seed)
+
+    # (t) RAW random weights: chance-level draft agreement, so this half
+    # hammers rejection + rewind — and the streams must STILL be
+    # bit-identical to the plain engine (speculation is a schedule change,
+    # never a model change).
+    eng_p = PagedEngine(params, ms, psv_plain)
+    _drive(eng_p, reqs)
+    eng_s = PagedEngine(params, ms, psv_spec)
+    _drive(eng_s, reqs)
+    for rid in sorted(eng_p.results):
+        assert (eng_s.results[rid] == eng_p.results[rid]).all(), rid
+    c = eng_s.counters
+    assert c["verify_steps"] > 0, dict(c)
+    assert c["draft_steps"] == spec_k * c["verify_steps"], dict(c)
+    assert c["spec_rejected"] > 0, dict(c)    # raw weights DO reject...
+    assert c["spec_rewound"] > 0, dict(c)     # ...and rejections rewind
+    # launches-per-verify == 1: exactly one verify program exists,
+    # compiled once at the wide batch (and one shallow draft program).
+    comp = eng_s.telemetry.compiles
+    assert comp[(COHORT_SPEC_VERIFY, "decode",
+                 N_SLOTS * (spec_k + 1))] == 1, comp
+    assert comp[(COHORT_SPEC_DRAFT, "decode", N_SLOTS)] == 1, comp
+    # Rewind page accounting: both trees drained, pool balanced (also
+    # self-checked inside every engine.step).
+    assert eng_s.pool.live == 0 and eng_p.pool.live == 0
+    assert eng_s.pool.allocated_total == eng_s.pool.freed_total > 0
+    eng_s.pool.check_balance()
+    raw = {"counters": {k: c[k] for k in ("draft_steps", "verify_steps",
+                                          "spec_accepted", "spec_rejected",
+                                          "spec_rewound", "decoded")},
+           "accept_per_verify":
+               eng_s.metrics_snapshot()["spec"]["accept_per_verify"]}
+
+    # (u) trained-model agreement regime: scaled segments make the draft
+    # agree with full depth, so acceptance must actually PAY — accepted
+    # tokens per verify > 1 and net tok/s at or above the non-speculative
+    # engine on the same workload (both engines warmed first so XLA
+    # compile time stays out of the clock).
+    params_hot = _scaled_params(params, SPEC_HOT_SCALE)
+    # Decode-heavy variant of the workload (each request decodes to its
+    # slot horizon): speculation pays a one-off draft prefill per
+    # admission, so the win lives in the decode phase — the 16-token
+    # smoke requests above never amortize it on this host-dispatch-bound
+    # smoke model.
+    reqs_long = [(a, p, MAX_LEN - len(p)) for a, p, _ in reqs]
+    eng_hp = PagedEngine(params_hot, ms, psv_plain)
+    _warm(eng_hp, PROMPT_LENS)
+    m_base = _drive(eng_hp, reqs_long)
+    eng_hs = PagedEngine(params_hot, ms, psv_spec)
+    _warm(eng_hs, PROMPT_LENS)
+    m_spec = _drive(eng_hs, reqs_long)
+    for rid in sorted(eng_hp.results):
+        assert (eng_hs.results[rid] == eng_hp.results[rid]).all(), rid
+    snap = eng_hs.metrics_snapshot()
+    spec = snap["spec"]
+    assert spec["accept_per_verify"] > 1.0, spec
+    assert eng_hs.counters["spec_accepted"] > 0
+    # Fewer engine steps is the deterministic form of the win; wall tok/s
+    # is the deployment-facing form BENCH_serve.json tracks.
+    assert eng_hs.step_count < eng_hp.step_count, (
+        eng_hs.step_count, eng_hp.step_count)
+    assert m_spec["tok_per_s"] >= m_base["tok_per_s"], (m_spec, m_base)
+
+    # (v) artifacts + the BENCH_serve.json "spec" section.
+    trace_path = _dump_run_artifacts(eng_hs, "spec")
+    _bench_summary("spec", _drive_summary(
+        m_spec, spec_k=spec_k, draft_eff_depth=spec["draft_eff_depth"],
+        accept_per_verify=spec["accept_per_verify"],
+        accept_rate=spec["accept_rate"],
+        spec_tok_per_s=m_spec["tok_per_s"],
+        base_tok_per_s=m_base["tok_per_s"],
+        telemetry=_snapshot_summary(snap)))
+    out = {"spec_k": spec_k, "raw": raw,
+           "hot": {"spec": spec, "drive": m_spec, "base_drive": m_base,
+                   "speedup": round(m_spec["tok_per_s"]
+                                    / m_base["tok_per_s"], 3)}}
+    C.save_result("serve_throughput_spec", {"structural": out})
+    print(f"spec-structural OK (k={spec_k}): verify launches==groups at "
+          f"batch {N_SLOTS * (spec_k + 1)} | raw weights: "
+          f"{raw['counters']['spec_rejected']} rejected / "
+          f"{raw['counters']['spec_rewound']} rewound, bit-identical | "
+          f"scaled weights: accept/verify="
+          f"{spec['accept_per_verify']} accept_rate={spec['accept_rate']} "
+          f"tok/s {m_spec['tok_per_s']} vs base {m_base['tok_per_s']} "
+          f"({out['hot']['speedup']}x), bit-identical | "
+          f"trace -> {trace_path}")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Wall-clock serving runs
 # ---------------------------------------------------------------------------
 
@@ -852,18 +1016,23 @@ def _warm_shared(eng: PagedEngine, cfg, seed: int):
 def run(structural_only: bool = False, *, n_requests: int = 32,
         rate: float = 2.0, shared_prefix: bool = False, seed: int = 17,
         preempt_after: int = 0, pages: int = 0, mesh: str = "",
-        chaos: bool = False):
+        chaos: bool = False, spec_k: int = 0):
     n_pages = pages if pages > 0 else N_PAGES
     if chaos:
         # --chaos is its own CI step (chaos-structural): the soak + overload
         # gate is deterministic in --seed, so it always runs structural.
         return structural_chaos(seed)
+    if spec_k and not structural_only:
+        raise SystemExit("--spec-k is a structural gate; add --structural")
     if structural_only:
-        # --structural, --structural --shared-prefix and --structural
-        # --mesh AxB are SEPARATE CI steps; each gates only its own half so
-        # no job pays another's assertions twice.
+        # --structural, --structural --shared-prefix, --structural
+        # --mesh AxB and --structural --spec-k K are SEPARATE CI steps;
+        # each gates only its own half so no job pays another's
+        # assertions twice.
         if mesh:
             return structural_sharded(mesh, seed)
+        if spec_k:
+            return structural_spec(spec_k, seed)
         res = (structural_shared_prefix(seed) if shared_prefix
                else structural())
         C.save_result("serve_throughput", {"structural": res})
@@ -959,8 +1128,14 @@ if __name__ == "__main__":
                          "shard_map with tp=M (needs XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8); with "
                          "--structural this is the sharded-structural gate")
+    ap.add_argument("--spec-k", type=int, default=0, dest="spec_k",
+                    help="with --structural: the spec-structural gate — "
+                         "self-speculative engine drafting K tokens per "
+                         "full-depth verify; gates bit-identity vs the "
+                         "plain engine in both agreement regimes, "
+                         "acceptance/rewind accounting, and net tok/s")
     args = ap.parse_args()
     run(structural_only=args.structural, n_requests=args.requests,
         rate=args.rate, shared_prefix=args.shared_prefix, seed=args.seed,
         preempt_after=args.preempt_after, pages=args.pages, mesh=args.mesh,
-        chaos=args.chaos)
+        chaos=args.chaos, spec_k=args.spec_k)

@@ -88,6 +88,15 @@ def main() -> None:
     ap.add_argument("--degrade-eff-depth", type=int, default=0,
                     help="(--degrade-delta) effective depth of the "
                          "degraded cohort (0 = maximal pairing)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="(--continuous) self-speculative decoding: draft "
+                         "this many greedy tokens per step with the same "
+                         "weights re-paired at an aggressive Δ, verify "
+                         "them in one full-depth launch (greedy-only, "
+                         "tp=1; 0 = off)")
+    ap.add_argument("--spec-delta", type=int, default=0,
+                    help="(--spec-k) drafter effective depth (0 = maximal "
+                         "pairing)")
     ap.add_argument("--trace-out", default="",
                     help="(--continuous) write the run's Chrome/Perfetto "
                          "trace_event JSON here (open in chrome://tracing "
@@ -133,6 +142,8 @@ def main() -> None:
             degrade_delta=args.degrade_delta,
             degrade_slots=deg_slots,
             degrade_eff_depth=args.degrade_eff_depth,
+            spec_k=args.spec_k,
+            spec_delta=args.spec_delta,
             telemetry=args.telemetry,
             profile_decode=args.profile_decode)
         if args.trace_out and not args.telemetry:
@@ -178,6 +189,15 @@ def main() -> None:
               f"prefill_toks={c['prefill_tokens']} "
               f"hit_toks={c['hit_tokens']} "
               f"preemptions={eng.sched.preemptions_total}")
+        if eng.spec_k:
+            v = c["verify_steps"]
+            probed = c["spec_accepted"] + c["spec_rejected"]
+            print(f"speculative: k={eng.spec_k} "
+                  f"draft_depth={eng.ms_draft.effective_depth} "
+                  f"verifies={v} drafts={c['draft_steps']} "
+                  f"accept_rate="
+                  f"{c['spec_accepted'] / max(probed, 1):.2f} "
+                  f"rewound={c['spec_rewound']}")
         if (c["failed"] or c["expired"] or c["shed"] or rejected
                 or c["degraded_admissions"]):
             print(f"lifecycle: failed={c['failed']} expired={c['expired']} "

@@ -59,3 +59,19 @@ from repro.serve.scheduler import (  # noqa: F401
     Request,
     Scheduler,
 )
+from repro.serve.speculative import (  # noqa: F401
+    COHORT_SPEC_DRAFT,
+    COHORT_SPEC_VERIFY,
+    SpecEpisode,
+    accept_length,
+    build_draft_step,
+    build_verify_batch,
+    commit_tokens,
+    draft_plan_for,
+    spec_eligible,
+    stale_span,
+)
+from repro.serve.paged_cache import (  # noqa: F401
+    rewind_plan,
+    rewind_tokens,
+)

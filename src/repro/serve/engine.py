@@ -75,6 +75,7 @@ gate). Prefix sharing auto-disables under tp > 1 for now.
 from __future__ import annotations
 
 import contextlib
+import warnings
 from dataclasses import dataclass
 from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
@@ -93,6 +94,7 @@ from repro.model import transformer as T
 from repro.parallel.context import ParallelContext, make_context
 from repro.serve import faults as F
 from repro.serve import paged_cache as PG
+from repro.serve import speculative as SP
 from repro.serve.faults import (BlockTableCorruptionError,
                                 DeadlineExceededError, InvalidRequestError,
                                 LoadShedError, NonFiniteLogitsError,
@@ -227,6 +229,71 @@ def make_paged_decode_fn(ms: T.ModelStructure, pc: ParallelContext, psv):
     return f
 
 
+def make_spec_step_fn(ms_draft: T.ModelStructure, ms: T.ModelStructure,
+                      pc: ParallelContext, psv, k: int):
+    """Fused speculative step: (params_draft, params, caches_draft,
+    caches, tok, pos, bt, poison, remaining, key) -> (drafts [k, n],
+    yhat [n*(k+1)], ok [n*(k+1)], caches_draft, caches).
+
+    One compiled program runs the whole episode: ``k`` shallow greedy
+    draft steps (the device-side twin of ``speculative.
+    build_draft_step`` — same activity mask, same garbage-page masking
+    for rows whose commit budget ends mid-episode), the probe-row
+    packing (twin of ``speculative.build_verify_batch``), and the ONE
+    full-depth verify at batch ``n*(k+1)``. Host-side acceptance is the
+    only thing left outside.
+
+    Fusing matters for throughput: a (k+1)-launch python loop pays the
+    per-launch dispatch + device sync k+1 times per speculative step —
+    most of a smoke-scale step's wall time, and k avoidable device
+    round-trips per step on real accelerators. Bit-identity is
+    unaffected: the draft and verify BODIES are the unchanged paged
+    decode programs, executed in the same order on the same operands.
+    Draft rows are never poisoned and their finite flags are ignored
+    (garbage proposals are simply refused by the verify, whose own
+    per-row ``ok`` guard is returned)."""
+    draft = make_paged_decode_fn(ms_draft, pc, psv)
+    verify = make_paged_decode_fn(ms, pc, psv)
+
+    def f(params_draft, params, caches_draft, caches, tok, pos, bt,
+          poison, remaining, key):
+        keys = jax.random.split(key, k + 1)
+        n = tok.shape[0]
+        no_poison = jnp.zeros((n,), jnp.bool_)
+        garbage = jnp.full_like(bt, PG.GARBAGE_PAGE)
+        prev = tok
+        drafts = []
+        for j in range(k):
+            act = (remaining >= 0) & (j <= remaining)
+            tok_j = jnp.where(act, prev, 0)
+            pos_j = jnp.where(act, pos + j, 0)
+            bt_j = jnp.where(act[:, None], bt, garbage)
+            d, _, caches_draft = draft(params_draft, caches_draft, tok_j,
+                                       pos_j, bt_j, no_poison, keys[j])
+            drafts.append(d)
+            prev = d
+        drafts = jnp.stack(drafts)
+        rows = n * (k + 1)
+        base = jnp.arange(n) * (k + 1)
+        tok_v = jnp.zeros((rows,), jnp.int32)
+        pos_v = jnp.zeros((rows,), jnp.int32)
+        bt_v = jnp.full((rows, bt.shape[1]), PG.GARBAGE_PAGE, jnp.int32)
+        poison_v = jnp.zeros((rows,), jnp.bool_)
+        for j in range(k + 1):
+            act = (remaining >= 0) & (j <= remaining)
+            u = tok if j == 0 else drafts[j - 1]
+            tok_v = tok_v.at[base + j].set(jnp.where(act, u, 0))
+            pos_v = pos_v.at[base + j].set(jnp.where(act, pos + j, 0))
+            bt_v = bt_v.at[base + j].set(jnp.where(act[:, None], bt,
+                                                   garbage))
+            poison_v = poison_v.at[base + j].set(poison & act)
+        yhat, ok, caches = verify(params, caches, tok_v, pos_v, bt_v,
+                                  poison_v, keys[k])
+        return drafts, yhat, ok, caches_draft, caches
+
+    return f
+
+
 def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
                           prompt_len: int):
     """Local exact-length prefill + page scatter: (params, caches, prompt
@@ -298,6 +365,19 @@ class PagedServeConfig:
     full, new admissions overflow into the degraded cohort instead of
     waiting — the paper's retraining-free speed/quality family as an
     overload valve. tp=1 engines only for now.
+    spec_k: > 0 turns on SELF-SPECULATIVE decoding (serve.speculative):
+    each step drafts ``spec_k`` greedy tokens per running slot with the
+    same weights re-paired at an aggressive Δ (``spec_delta`` effective
+    layers, 0 = maximal pairing), then verifies all of them in ONE
+    full-depth launch of the regular decode program at batch
+    ``n_main * (spec_k + 1)`` — accepting the longest matched draft
+    prefix plus the verifier's bonus token, and un-writing rejected
+    positions from both cache trees. Greedy output streams stay
+    BIT-IDENTICAL to the non-speculative engine (every committed token is
+    a full-depth argmax over a committed history); acceptance only moves
+    throughput. Greedy-only, tp=1, attention-only models (auto-disables
+    with a warning for recurrent mixers), exclusive with degrade_delta
+    for now.
     """
     n_slots: int = 8              # concurrent decode slots (fixed batch)
     page_size: int = 16           # tokens per cache page
@@ -314,6 +394,8 @@ class PagedServeConfig:
     degrade_slots: int = 0        # slots reserved for the degraded cohort
     degrade_queue_depth: int = 1  # queue depth that signals SLO pressure
     degrade_eff_depth: int = 0    # effective depth of the cohort (0 = max Δ)
+    spec_k: int = 0               # speculative draft length (0 = off)
+    spec_delta: int = 0           # drafter effective depth (0 = max Δ)
     # telemetry=False drops span/gauge-series/wall retention for unbounded
     # soaks; counters, compile events and the fault log stay live (engine
     # semantics read them). Telemetry never adds device launches and never
@@ -401,6 +483,30 @@ class PagedEngine:
                 f"degrade_slots={psv.degrade_slots} without degrade_delta: "
                 "reserved degraded slots would simply idle — set "
                 "degrade_delta=True or degrade_slots=0")
+        if psv.spec_k < 0:
+            raise ValueError(f"spec_k={psv.spec_k} must be >= 0 (0 = off)")
+        if psv.spec_k:
+            if psv.temperature > 0:
+                raise ValueError(
+                    "spec_k needs temperature=0.0: acceptance compares "
+                    "greedy argmax ids — sampled verification would need "
+                    "rejection sampling over full logit distributions, "
+                    "which the vocab-parallel sampler never materialises")
+            if mesh is not None:
+                raise ValueError(
+                    "spec_k is tp=1-only for now: the draft and wide "
+                    "verify programs need their own sharded wrappers and "
+                    "replanned param placement")
+            if psv.degrade_delta:
+                raise ValueError(
+                    "spec_k is exclusive with degrade_delta for now: the "
+                    "speculative controller drives the main cohort, and "
+                    "composing it with a degraded cohort needs a draft "
+                    "tree per cohort — pick one overload strategy")
+        elif psv.spec_delta:
+            raise ValueError(
+                f"spec_delta={psv.spec_delta} without spec_k: set "
+                "spec_k >= 1 to enable speculative decoding")
         PG.validate_paged_support(ms, psv.max_len)
         self.ms = ms
         self.psv = psv
@@ -431,6 +537,32 @@ class PagedEngine:
             assert tuple(s.group.specs for s in self.ms_deg.segments) == \
                 tuple(s.group.specs for s in segs2)
             self.params_deg = dict(params, segments=sp2)
+        # Speculative drafter: the SAME weights re-paired at an aggressive
+        # Δ (serve.speculative) — the paper's shallow configuration as a
+        # free draft model. Eligibility-gated like the prefix cache:
+        # recurrent mixers auto-disable with a warning instead of erroring,
+        # and the engine then behaves exactly as spec_k=0 (bit-identical —
+        # the fallback test pins it).
+        self.spec_k = psv.spec_k
+        self.ms_draft = self.params_draft = None
+        if self.spec_k and not SP.spec_eligible(ms):
+            warnings.warn(
+                f"{ms.cfg.name}: speculative decoding auto-disabled — "
+                "recurrent mixer state (mamba conv/h, RG-LRU h) advances "
+                "on every launch and has no per-position representation "
+                "to rewind (per-draft-step state snapshots are a "
+                "follow-on); serving continues non-speculatively",
+                stacklevel=2)
+            self.spec_k = 0
+        if self.spec_k:
+            cfg = ms.cfg
+            spec_plan = SP.draft_plan_for(cfg, ms.plan, psv.spec_delta)
+            segs2, sp2 = LP.replan(cfg, params["segments"], ms.segments,
+                                   spec_plan)
+            self.ms_draft = T.build_structure(cfg, plan=spec_plan, tp=ms.tp)
+            assert tuple(s.group.specs for s in self.ms_draft.segments) == \
+                tuple(s.group.specs for s in segs2)
+            self.params_draft = dict(params, segments=sp2)
         if mesh is not None:
             if pc is not None:
                 raise ValueError(
@@ -486,6 +618,15 @@ class PagedEngine:
             self.ms_deg, n_slots=self.n_deg, n_pages=psv.n_pages,
             page_size=psv.page_size, dtype=psv.cache_dtype)
             if self.n_deg else None)
+        # The drafter's cache tree spans the SAME page-id space as the
+        # main tree (one block table serves both); it holds
+        # aggressive-plan kv that only ever feeds draft proposals — the
+        # verify launch reads the MAIN tree, so draft bits can move
+        # acceptance but never committed output.
+        self.caches_draft = (PG.init_paged_caches(
+            self.ms_draft, n_slots=self.n_main, n_pages=psv.n_pages,
+            page_size=psv.page_size, dtype=psv.cache_dtype)
+            if self.spec_k else None)
         P_slot = psv.pages_per_slot
         self.block_tables = np.full((self.n_main, P_slot), PG.GARBAGE_PAGE,
                                     np.int32)
@@ -502,6 +643,26 @@ class PagedEngine:
         self._decode = self._make_decode(COHORT_MAIN)
         self._decode_deg = (self._make_decode(COHORT_DEGRADED)
                             if self.n_deg else None)
+        self._spec_step = None
+        self._decode_draft = None             # lazy: resume catch-up only
+        self._rewind = None                   # lazy compiled rewind
+        if self.spec_k:
+            # ONE fused program holds both speculative bodies: the
+            # k-step draft episode at the aggressive plan (batch n_main)
+            # and the verifier — which IS the regular decode program at
+            # a wider batch: n_main * (spec_k + 1) probe rows through
+            # the same body the main cohort compiles at n_main (row
+            # independence is what makes the wide launch bit-equal to
+            # sequential steps). One compile event per body.
+            self.telemetry.compile_event(SP.COHORT_SPEC_DRAFT, "decode",
+                                         self.n_main)
+            self.telemetry.compile_event(
+                SP.COHORT_SPEC_VERIFY, "decode",
+                self.n_main * (self.spec_k + 1))
+            self._spec_step = jax.jit(
+                make_spec_step_fn(self.ms_draft, ms, self.pc, psv,
+                                  self.spec_k),
+                donate_argnums=(2, 3))
         self._prefills: Dict[Any, Any] = {}   # program-shape key -> jit fn
         self._scrubs: Dict[str, Any] = {}     # cohort -> compiled scrub
         # Greedy + fp32 pool => suffix/replay recomputation is bit-exact
@@ -521,7 +682,9 @@ class PagedEngine:
         "prefill_tokens", "hit_tokens", "resume_hit_tokens",
         "replay_tokens", "full_prefills", "suffix_prefills", "prefix_hits",
         "submitted", "admitted", "decoded", "finished", "preempted",
-        "failed", "expired", "cancelled", "shed", "degraded_admissions")
+        "failed", "expired", "cancelled", "shed", "degraded_admissions",
+        "draft_steps", "verify_steps", "spec_accepted", "spec_rejected",
+        "spec_rewound")
     #: The subset ``step()`` reports as per-step deltas.
     STEP_STAT_KEYS = ("admitted", "decoded", "finished", "preempted",
                       "failed", "expired")
@@ -644,6 +807,27 @@ class PagedEngine:
 
         return jax.jit(f, donate_argnums=(1,))
 
+    def _draft_decode_fn(self):
+        """Single-step draft decode, compiled lazily — only the resume
+        catch-up path needs it (the decode phase runs the fused
+        ``_draft_episode`` program instead)."""
+        if self._decode_draft is None:
+            self.telemetry.compile_event(SP.COHORT_SPEC_DRAFT,
+                                         "decode_catchup", self.n_main)
+            self._decode_draft = jax.jit(
+                make_paged_decode_fn(self.ms_draft, self.pc, self.psv),
+                donate_argnums=(1,))
+        return self._decode_draft
+
+    def _spec_prefill_fn(self, prompt_len: int):
+        """Draft-tree prefill at the aggressive plan, compiled once per
+        distinct prompt length (tp=1 only — spec_k validation)."""
+        self.telemetry.compile_event(SP.COHORT_SPEC_DRAFT, "prefill_full",
+                                     prompt_len)
+        local = make_paged_prefill_fn(self.ms_draft, self.pc, self.psv,
+                                      prompt_len)
+        return jax.jit(local, donate_argnums=(1,))
+
     def _scrub_fn(self, cohort: str):
         """Compiled page/state scrub for one cohort (built lazily — the
         happy path never needs it). Fixed shapes: the page-id vector is
@@ -758,6 +942,13 @@ class PagedEngine:
         self._set_caches(cohort, fn(self._get_caches(cohort),
                                     jnp.asarray(ids),
                                     jnp.int32(r.slot - lo)))
+        if self.spec_k and cohort == COHORT_MAIN:
+            # The draft tree scattered the same (possibly poisoned)
+            # request's kv into the same page ids — scrub it too before
+            # the pages return to the free list.
+            fn = self._scrub_fn(SP.COHORT_SPEC_DRAFT)
+            self.caches_draft = fn(self.caches_draft, jnp.asarray(ids),
+                                   jnp.int32(r.slot - lo))
 
     def _fail(self, r: Request, error, *, scrub: bool) -> None:
         """Contain a per-request fault: FAILED terminal state, slot row
@@ -979,6 +1170,52 @@ class PagedEngine:
         self._set_caches(cohort, caches)
         return survived
 
+    def _spec_prime(self, r: Request) -> None:
+        """Warm the DRAFT cache tree for a freshly-started request: a full
+        prompt prefill at the aggressive plan, then teacher-forced
+        catch-up over any parked generated tokens (the resume path).
+
+        Always the FULL prompt, even on a radix hit: draft kv has no page
+        representation in the radix tree (its bits are plan-specific), but
+        re-deriving it over shared pages is idempotent — same tokens at
+        the same positions produce the same draft bits — which is why
+        speculation composes with the prefix cache. Quality-only work:
+        the verify launch reads the MAIN tree, so nothing here can move
+        committed output, and the finite guards are ignored for the same
+        reason (non-finite draft kv yields garbage proposals the verifier
+        simply refuses)."""
+        ps = self.psv.page_size
+        Lp = r.prompt_len
+        _, _, bt_a, lo = self._arrays(COHORT_MAIN)
+        loc = r.slot - lo
+        key = ("spec_full", Lp)
+        fn = self._prefills.get(key)
+        if fn is None:
+            fn = self._prefills[key] = self._spec_prefill_fn(Lp)
+        self._key, sub = jax.random.split(self._key)
+        _, _, self.caches_draft = fn(
+            self.params_draft, self.caches_draft,
+            jnp.asarray(r.prompt[None]),
+            jnp.asarray(r.pages[:-(-Lp // ps)], jnp.int32),
+            jnp.int32(loc), sub)
+        # Resume catch-up: feed each parked token at its position through
+        # the draft program (single active row, garbage-masked peers —
+        # the _replay pattern), outputs ignored. No state snapshots
+        # needed: speculation is attention-only.
+        size = bt_a.shape[0]
+        no_poison = jnp.zeros((size,), jnp.bool_)
+        for p in range(Lp, Lp + len(r.out) - 1):
+            tok_v = np.zeros((size,), np.int32)
+            pos_v = np.zeros((size,), np.int32)
+            bt = np.full_like(bt_a, PG.GARBAGE_PAGE)
+            tok_v[loc] = r.out[p - Lp]
+            pos_v[loc] = p
+            bt[loc] = bt_a[loc]
+            self._key, sub = jax.random.split(self._key)
+            _, _, self.caches_draft = self._draft_decode_fn()(
+                self.params_draft, self.caches_draft, jnp.asarray(tok_v),
+                jnp.asarray(pos_v), jnp.asarray(bt), no_poison, sub)
+
     def _start(self, r: Request) -> bool:
         """Bring an admitted request onto its slot: link its block table,
         run the stage-1 prefill (full / suffix / skipped when the radix hit
@@ -1047,6 +1284,8 @@ class PagedEngine:
                     f"rid={r.rid}: non-finite logits during decode replay"),
                     scrub=True)
                 return False
+        if self.spec_k:
+            self._spec_prime(r)
         tok_a[r.slot - lo] = r.out[-1]
         pos_a[r.slot - lo] = r.pos
         return True
@@ -1118,6 +1357,118 @@ class PagedEngine:
             if r.done():
                 self._finish(r)
 
+    def _rewind_pages(self, pairs: List[Tuple[int, int]]) -> None:
+        """Un-write rejected speculative positions in BOTH cache trees.
+        Fixed shape: at most ``n_main * spec_k`` positions can reject per
+        step, padded with ``(GARBAGE_PAGE, 0)`` (paged_cache.rewind_tokens)
+        so one compiled program per tree serves every episode."""
+        cap = self.n_main * self.spec_k
+        assert len(pairs) <= cap, (len(pairs), cap)
+        pages = np.zeros((cap,), np.int32)
+        offs = np.zeros((cap,), np.int32)
+        for i, (p, o) in enumerate(pairs):
+            pages[i], offs[i] = p, o
+        if self._rewind is None:
+            self.telemetry.compile_event(SP.COHORT_SPEC_VERIFY, "rewind",
+                                         cap)
+            self._rewind = jax.jit(PG.rewind_tokens, donate_argnums=(0,))
+        pg, of = jnp.asarray(pages), jnp.asarray(offs)
+        self.caches = self._rewind(self.caches, pg, of)
+        self.caches_draft = self._rewind(self.caches_draft, pg, of)
+
+    def _decode_spec(self) -> None:
+        """Speculative main-cohort step: ONE fused ``spec_k``-step draft
+        episode launch at the aggressive plan, ONE full-depth verify
+        launch at batch
+        ``n_main * (spec_k + 1)``, host-side acceptance, then an un-write
+        of every rejected position (serve.speculative has the math and
+        the soundness argument). Replaces ``_decode_cohort(COHORT_MAIN)``
+        when spec_k > 0; greedy streams are bit-identical to it because
+        every committed token is a full-depth argmax over an
+        exactly-committed history computed by the same decode body."""
+        tok_a, pos_a, bt_a, lo = self._arrays(COHORT_MAIN)
+        size = tok_a.shape[0]
+        running = {s: r for s, r in self.sched.running.items()
+                   if lo <= s < lo + size}
+        if not running:
+            return
+        k = self.spec_k
+        remaining = np.full((size,), -1, np.int64)
+        for s, r in running.items():
+            remaining[s - lo] = r.max_new - len(r.out)
+        poison = np.zeros((size,), bool)
+        for s in self._poison_slots:
+            if lo <= s < lo + size:
+                poison[s - lo] = True
+        # One fused launch runs the whole episode: k greedy draft
+        # proposals per slot at the aggressive plan (each internal step
+        # feeds the previous proposal at the next position), the probe-
+        # row packing, and every slot's k+1 rows through ONE regular
+        # full-depth decode (launches-per-verify == 1 — the
+        # spec-structural gate). make_spec_step_fn is the device-side
+        # twin of speculative.build_draft_step/build_verify_batch.
+        # Draft rows are never poisoned — poison targets the slot's
+        # COMMITTED stream, which only the verify rows can move.
+        self._key, sub = jax.random.split(self._key)
+        prof = (jax.profiler.StepTraceAnnotation(
+                    "paged_decode_spec_step", step_num=self.step_count)
+                if self.psv.profile_decode else contextlib.nullcontext())
+        with prof:
+            d, yhat, ok, self.caches_draft, self.caches = self._spec_step(
+                self.params_draft, self.params, self.caches_draft,
+                self.caches, jnp.asarray(tok_a), jnp.asarray(pos_a),
+                jnp.asarray(bt_a), jnp.asarray(poison),
+                jnp.asarray(remaining.astype(np.int32)), sub)
+        drafts = np.asarray(d)
+        self.counters["draft_steps"] += k
+        self.counters["verify_steps"] += 1
+        yhat = np.asarray(yhat).reshape(size, k + 1)
+        okm = np.asarray(ok).reshape(size, k + 1)
+        zero_pairs: List[Tuple[int, int]] = []
+        for slot, r in sorted(running.items()):
+            loc = slot - lo
+            rem = int(remaining[loc])
+            j_hi = min(k, rem)
+            if not okm[loc, :j_hi + 1].all():
+                # Any live probe row non-finite fails the slot (the
+                # non-spec engine's containment semantics: a poisoned
+                # slot emits no token); peers are untouched by row
+                # independence. Scrub covers the draft tree too.
+                self._fail(r, NonFiniteLogitsError(
+                    f"rid={r.rid}: non-finite logits in speculative "
+                    f"verify at step {self.step_count} (slot {slot})"),
+                    scrub=True)
+                continue
+            p0 = int(pos_a[loc])
+            a_max = min(k, rem - 1)
+            a = SP.accept_length(drafts[:, loc], yhat[loc], a_max)
+            self.counters["spec_accepted"] += a
+            self.counters["spec_rejected"] += a_max - a
+            committed = 0
+            for t in SP.commit_tokens(drafts[:, loc], yhat[loc], a):
+                r.out.append(t)
+                committed += 1
+                self.counters["decoded"] += 1
+                if r.done():     # EOS can cut inside the accepted run
+                    break
+            self.telemetry.observe("spec_accept", committed)
+            self.telemetry.spec_episode(self.step_count, slot, r.rid,
+                                        probed=a_max, accepted=a,
+                                        committed=committed)
+            if r.done():
+                self._finish(r)
+                continue
+            tok_a[loc] = r.out[-1]
+            pos_a[loc] = r.pos
+            start, stop = SP.stale_span(p0, a, j_hi)
+            if start < stop:
+                zero_pairs += PG.rewind_plan(
+                    r.pages, r.n_shared, start, stop,
+                    self.psv.page_size)[0]
+        if zero_pairs:
+            self._rewind_pages(zero_pairs)
+            self.counters["spec_rewound"] += len(zero_pairs)
+
     def _step_gauges(self, hit0: int, faults0: Dict[str, int]) -> None:
         """Per-step gauge samples, taken AFTER the step's work: queue
         depth, pool live/free/refcount-shared pages, per-step radix hit
@@ -1164,7 +1515,10 @@ class PagedEngine:
             # The freed pages/slot may unblock the head immediately.
             self._admit(count_blocked=False)
         self._validate_block_tables()
-        self._decode_cohort(COHORT_MAIN)
+        if self.spec_k:
+            self._decode_spec()
+        else:
+            self._decode_cohort(COHORT_MAIN)
         if self.n_deg:
             self._decode_cohort(COHORT_DEGRADED)
         self._poison_slots.clear()
@@ -1225,6 +1579,22 @@ class PagedEngine:
                 "max": round(max(vals) / cap, 3),
             }
         snap["preemptions"] = self.sched.preemptions_total
+        if self.spec_k:
+            c = self.telemetry.counters
+            probed = c["spec_accepted"] + c["spec_rejected"]
+            # One histogram observation per slot per verify = one episode;
+            # its mean is committed tokens per full-depth verification of
+            # a slot — the speedup lever (> 1 means each full-depth pass
+            # commits more than a one-token step would).
+            h = self.telemetry.hists.get("spec_accept")
+            snap["spec"] = {
+                "k": self.spec_k,
+                "draft_eff_depth": self.ms_draft.effective_depth,
+                "accept_per_verify": round(h.sum / h.count, 3)
+                                     if h and h.count else 0.0,
+                "accept_rate": round(c["spec_accepted"] / probed, 3)
+                               if probed else 0.0,
+            }
         return snap
 
     def metrics_text(self) -> str:

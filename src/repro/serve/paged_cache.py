@@ -254,3 +254,77 @@ def scatter_prefill(pool: List[Dict], seq: List[Dict], page_ids, slot):
                     pv, sv.astype(pv.dtype), slot, axis=ba)
         out.append(nseg)
     return out
+
+
+def rewind_tokens(pool: List[Dict], page_ids, offsets):
+    """Un-write single token positions: zero ``(page_ids[i], offsets[i])``
+    across every paged entry (both halves of a stacked pair at once).
+
+    Speculative-decoding rewind path: rejected draft tokens left kv at
+    positions past the slot's committed horizon. Those bits can never be
+    *read* wrong — every decode launch scatters a row's kv before any row
+    gathers, and per-row masks hide positions beyond each row's own
+    ``pos`` — but the pool contract that pages hold only committed-token
+    kv is what prefix sharing and the accounting audits lean on, so the
+    engine restores it eagerly. Fixed-shape like ``scrub_pages``: pad the
+    pair lists with ``(GARBAGE_PAGE, 0)`` (zeroing the garbage page is
+    harmless by definition; duplicate pairs all write the same zero), so
+    one compiled program serves every episode. Slot-state entries are left
+    alone — speculation is attention-only (see serve.speculative).
+    """
+    out = []
+    for seg in pool:
+        nseg = {}
+        for name, pv in seg.items():
+            ba = T.cache_batch_axis(name)
+            if is_paged_entry(name):
+                n = page_ids.shape[0]
+                z = jnp.zeros((*pv.shape[:ba], n, *pv.shape[ba + 2:]),
+                              pv.dtype)
+                if ba == 2:   # stacked pair entry [count, 2, n_pages, ...]
+                    nseg[name] = pv.at[:, :, page_ids, offsets].set(z)
+                else:         # per-layer entry [count, n_pages, ...]
+                    nseg[name] = pv.at[:, page_ids, offsets].set(z)
+            else:
+                nseg[name] = pv
+        out.append(nseg)
+    return out
+
+
+def rewind_plan(pages: List[int], n_shared: int, new_len: int, old_len: int,
+                page_size: int) -> Tuple[List[Tuple[int, int]], List[int]]:
+    """Host-side rewind bookkeeping: shrink a request's written horizon
+    from ``old_len`` to ``new_len`` tokens.
+
+    Returns ``(zero_pairs, free_pages)``:
+
+    - ``zero_pairs``: the ``(page, offset)`` of every position in
+      ``[new_len, old_len)`` — feed to ``rewind_tokens`` to un-write them.
+    - ``free_pages``: the trailing pages left with NO live position — an
+      allocator that extends page holdings on demand returns these via
+      ``PagePool.free_rewound`` (which re-checks they are privately held).
+      The engine's own allocator claims prompt + max_new pages up front
+      and re-uses rewound positions for later commits, so it ignores this
+      list; the distinction is exercised by the rewind property test.
+
+    Radix-shared pages are read-only by refcount — a rewind may only
+    un-write THIS request's own writes, so ``new_len`` may never cut into
+    the shared prefix.
+    """
+    if not 0 <= new_len <= old_len:
+        raise ValueError(f"rewind to {new_len} from {old_len}: the new "
+                         "horizon must be within the written one")
+    if new_len < n_shared * page_size:
+        raise ValueError(
+            f"rewind to {new_len} tokens would cut into the "
+            f"{n_shared}-page radix-shared prefix "
+            f"({n_shared * page_size} tokens): shared pages are read-only "
+            "— only positions this request wrote itself can rewind")
+    if old_len > len(pages) * page_size:
+        raise ValueError(f"old_len={old_len} exceeds the "
+                         f"{len(pages)}-page holding")
+    zero_pairs = [(int(pages[t // page_size]), t % page_size)
+                  for t in range(new_len, old_len)]
+    first_keep = -(-new_len // page_size)
+    n_old = -(-old_len // page_size)
+    return zero_pairs, [int(p) for p in pages[first_keep:n_old]]

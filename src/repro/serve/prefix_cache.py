@@ -30,6 +30,14 @@ Copy-on-write needs no device-side machinery: a request only ever links
 WHOLE matched pages read-only and writes from its first unmatched position
 onward, which by construction lives in a freshly allocated private page
 (``Scheduler.admit`` caps the match so the written tail is never shared).
+
+Speculative decoding (``PagedServeConfig.spec_k``) composes with sharing:
+the tree indexes MAIN-tree kv only (draft bits are plan-specific and never
+donated), and the drafter re-prefills its own tree over the shared page
+ids — an idempotent write, since the same tokens at the same positions
+produce the same draft bits whoever computes them. Rewinds never touch
+shared pages either: rejected drafts live strictly past the prompt, and
+``paged_cache.rewind_plan`` refuses any horizon inside the shared prefix.
 """
 from __future__ import annotations
 

@@ -206,6 +206,25 @@ class PagePool:
                 self._free.append(p)
                 self.freed_total += 1
 
+    def free_rewound(self, pages: List[int]) -> None:
+        """Return fully-rewound pages (``paged_cache.rewind_plan``'s free
+        list) to the pool. A rewind un-writes this holder's OWN token
+        writes; it can never release a reference someone else holds — so
+        any page here still refcounted above 1 (radix-shared or CoW-linked)
+        is a caller bug, refused before anything mutates. Accepted pages
+        go through the ordinary 1 -> 0 free, keeping
+        ``allocated - freed == live_unique`` exact through arbitrary
+        draft/accept/rewind interleavings (the rewind property test)."""
+        self._validate(pages, "free")
+        for p in set(pages):
+            if self._ref[p] != 1:
+                raise PageAccountingError(
+                    f"rewind-free of page {p} at refcount "
+                    f"{int(self._ref[p])}: rewound pages return to the "
+                    "pool only when privately held — a shared page's other "
+                    "holders still read it")
+        self.free(pages)
+
     def check_balance(self) -> None:
         assert self.allocated_total - self.freed_total == self.live, (
             self.allocated_total, self.freed_total, self.live)

@@ -257,6 +257,7 @@ class Telemetry:
         self.gauge_series: Dict[str, List[Tuple[int, float]]] = {}
         self.gauge_last: Dict[str, float] = {}
         self.hists: Dict[str, Histogram] = {}
+        self.spec_log: List[Dict[str, Any]] = []
         self.step_wall: Dict[int, float] = {}   # step -> perf_counter at end
 
     # -- scalar channels (always on) -----------------------------------
@@ -300,6 +301,20 @@ class Telemetry:
         h.observe(value)
 
     # -- growing channels (gated by ``enabled``) -----------------------
+    def spec_episode(self, step: int, slot: int, rid: int, *, probed: int,
+                     accepted: int, committed: int) -> None:
+        """One speculative draft/verify episode for a slot: ``probed``
+        drafts were checked, ``accepted`` matched the full model,
+        ``committed`` tokens landed (accepted + bonus, EOS may cut). The
+        log renders as per-slot trace slices (repro.serve.trace); the
+        always-on counters/histogram carry the aggregate view, so this is
+        a growing channel gated like spans. Step-denominated — same-seed
+        runs log byte-identically."""
+        if self.enabled:
+            self.spec_log.append({
+                "step": step, "slot": slot, "rid": rid, "probed": probed,
+                "accepted": accepted, "committed": committed})
+
     def gauge(self, name: str, step: int, value: float) -> None:
         self.gauge_last[name] = value
         if self.enabled:
@@ -363,6 +378,7 @@ class Telemetry:
         self.gauge_series.clear()
         self.gauge_last.clear()
         self.hists.clear()
+        self.spec_log.clear()
         self.step_wall.clear()
 
     # -- derived metrics ------------------------------------------------

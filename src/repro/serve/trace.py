@@ -16,7 +16,8 @@ Track layout (pid/tid are synthetic ids; ``M`` metadata events name them):
   ADMITTED->offslot episode of the request occupying the slot, named
   ``r<rid>`` with cohort/hit-token args, plus nested ``prefill:*`` /
   ``replay`` child slices (trace_event nests X events on the same tid by
-  containment).
+  containment) and, under speculative decoding, one ``spec:accepted/k``
+  slice per draft/verify episode.
 - pid "requests", one tid per rid: async-style lifetime from SUBMITTED to
   terminal plus instant (``ph: i``) markers for each state transition —
   queueing delay and preemption cycles read directly off this track.
@@ -108,6 +109,23 @@ def _slot_episodes(tel: Telemetry) -> List[Dict[str, Any]]:
     return events
 
 
+def _spec_episodes(tel: Telemetry) -> List[Dict[str, Any]]:
+    """X slices on the per-slot tracks: one draft/verify episode per
+    running slot per speculative step, named ``spec:accepted/probed`` so
+    acceptance collapse is visible on the timeline at a glance. Placed in
+    the middle of the step (the episode IS the step's decode work),
+    nesting inside the slot's admission slice by containment."""
+    events: List[Dict[str, Any]] = []
+    for e in tel.spec_log:
+        events.append({
+            "ph": "X", "pid": _PID_SLOTS, "tid": e["slot"],
+            "ts": _ts(e["step"], 0.5), "dur": US_PER_STEP // 4,
+            "name": f"spec:{e['accepted']}/{e['probed']}", "cat": "spec",
+            "args": {k: e[k] for k in ("rid", "probed", "accepted",
+                                       "committed")}})
+    return events
+
+
 def _request_track(tel: Telemetry) -> List[Dict[str, Any]]:
     """Per-request lifetime slices + transition instants."""
     events: List[Dict[str, Any]] = []
@@ -190,6 +208,7 @@ def build_trace(tel: Telemetry, *, n_slots: int = 0) -> Dict[str, Any]:
         events.append(_meta(_PID_SLOTS, f"slot{s}", tid=s,
                             kind="thread_name"))
     events += _slot_episodes(tel)
+    events += _spec_episodes(tel)
     events += _request_track(tel)
     events += _engine_track(tel)
     # Deterministic global order (ts, then pid/tid/ph/name) — json dump of

@@ -135,3 +135,52 @@ def test_collective_parser_on_synthetic_hlo():
     assert out["all-reduce"] == pytest.approx(2 * 128 * 256 * 4 * 3 / 4)
     assert out["all-gather"] == pytest.approx(64 * 2 * 7 / 8)
     assert out["reduce-scatter"] == pytest.approx(32 * 4 * 3)
+
+
+@SET
+@given(st.integers(0, 2),
+       st.lists(st.tuples(st.booleans(), st.integers(1, 9)),
+                min_size=1, max_size=20))
+def test_spec_rewind_page_accounting(n_shared, ops):
+    """Speculative rewind vs the page pool: any interleaving of horizon
+    extensions (draft/verify writes claiming pages) and rewinds (rejected
+    drafts un-written, fully-rewound pages returned) keeps the refcount
+    ledger balanced, never frees a radix-shared page, and accounts every
+    stale position exactly once."""
+    from repro.serve import PagePool, rewind_plan
+
+    ps = 4
+    pool = PagePool(n_pages=64)
+    shared = pool.alloc(n_shared) if n_shared else []
+    if shared:
+        pool.share(shared)        # tree residency + the running request
+    pages = list(shared)
+    ln = n_shared * ps            # written horizon (tokens)
+    for grow, amount in ops:
+        if grow:
+            new = min(ln + amount, 30 * ps)
+            need = -(-new // ps) - len(pages)
+            if need > 0:
+                pages += pool.alloc(need)
+            ln = new
+        else:
+            new = max(ln - amount, n_shared * ps)
+            zero, free = rewind_plan(pages, n_shared, new, ln, ps)
+            assert len(zero) == ln - new          # every stale position
+            assert all(p in pages for p, _ in zero)
+            assert not set(free) & set(shared)    # shared never freed
+            pool.free_rewound(free)
+            pages = pages[:len(pages) - len(free)]
+            ln = new
+        pool.check_balance()
+        # Radix-shared pages stay pinned at refcount 2 throughout.
+        assert pool.shared == len(set(shared))
+    if shared:
+        with pytest.raises(Exception):
+            pool.free_rewound(shared)             # still doubly held
+        pool.check_balance()                      # refusal left no trace
+    pool.free(pages)                              # request releases
+    if shared:
+        pool.free(shared)                         # tree releases
+    pool.check_balance()
+    assert pool.live == 0
