@@ -35,8 +35,27 @@ from repro.core.lp import EMPTY_PLAN, plan_for_depth
 from repro.launch.mesh import make_serving_mesh
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext
-from repro.serve import (PagedEngine, PagedServeConfig, QueueFullError,
-                         ServeConfig, generate, make_sharded_generate)
+from repro.serve import (AdmissionConfig, DegradeConfig, PagedEngine,
+                         PagedServeConfig, QueueFullError, ServeConfig,
+                         SpecConfig, TelemetryConfig, generate,
+                         make_sharded_generate)
+
+
+def _parse_buckets(text: str):
+    """--bucket-sizes value -> PagedServeConfig.prefill_buckets: "auto"
+    (None, the power-of-two ladder), "off" ((), exact-length prefill), or
+    comma-separated widths ("8,16,32")."""
+    text = text.strip().lower()
+    if text == "auto":
+        return None
+    if text == "off":
+        return ()
+    try:
+        return tuple(int(t) for t in text.split(","))
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--bucket-sizes {text!r}: expected 'auto', 'off', or "
+            "comma-separated ints like '8,16,32'")
 
 
 def main() -> None:
@@ -54,9 +73,10 @@ def main() -> None:
                     help="(--continuous) number of synthetic requests")
     ap.add_argument("--page-size", type=int, default=16,
                     help="(--continuous) tokens per cache page")
-    ap.add_argument("--prefill-token-budget", type=int, default=4096,
-                    help="(--continuous) max prefill tokens admitted per "
-                         "step after the first (prefill/decode interleave)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="1xM device mesh; M > 1 runs the shard_map "
+                         "programs with tp=M — needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count>=M on CPU")
     ap.add_argument("--preempt-after", type=int, default=0,
                     help="(--continuous) blocked-head steps before the "
                          "youngest running request is preempted (0 = off)")
@@ -65,56 +85,79 @@ def main() -> None:
                     help="(--continuous) radix prefix sharing over whole "
                          "cache pages (--no-prefix-cache disables; "
                          "auto-disabled under tp > 1)")
-    ap.add_argument("--mesh", default="1x1",
-                    help="1xM device mesh; M > 1 runs the shard_map "
-                         "programs with tp=M — needs XLA_FLAGS="
-                         "--xla_force_host_platform_device_count>=M on CPU")
-    ap.add_argument("--max-queue", type=int, default=0,
-                    help="(--continuous) bound the submit queue; a full "
-                         "queue sheds the slackest-deadline request for a "
-                         "more urgent newcomer, else rejects (0 = "
-                         "unbounded)")
     ap.add_argument("--deadline-steps", type=int, default=0,
                     help="(--continuous) per-request deadline, engine "
                          "steps after submission; overrun requests EXPIRE "
                          "and release their pages (0 = none)")
-    ap.add_argument("--degrade-delta", action="store_true",
-                    help="(--continuous) overload degradation: overflow "
-                         "admissions run an aggressive-Δ re-pairing of the "
-                         "same weights in a reserved slot cohort")
-    ap.add_argument("--degrade-slots", type=int, default=0,
-                    help="(--degrade-delta) slots reserved for the "
-                         "degraded cohort (default: half the batch)")
-    ap.add_argument("--degrade-eff-depth", type=int, default=0,
-                    help="(--degrade-delta) effective depth of the "
-                         "degraded cohort (0 = maximal pairing)")
-    ap.add_argument("--spec-k", type=int, default=0,
-                    help="(--continuous) self-speculative decoding: draft "
-                         "this many greedy tokens per step with the same "
-                         "weights re-paired at an aggressive Δ, verify "
-                         "them in one full-depth launch (greedy-only, "
-                         "tp=1; 0 = off)")
-    ap.add_argument("--spec-delta", type=int, default=0,
-                    help="(--spec-k) drafter effective depth (0 = maximal "
-                         "pairing)")
-    ap.add_argument("--trace-out", default="",
-                    help="(--continuous) write the run's Chrome/Perfetto "
-                         "trace_event JSON here (open in chrome://tracing "
-                         "or ui.perfetto.dev)")
-    ap.add_argument("--metrics-out", default="",
-                    help="(--continuous) write the run's metrics snapshot "
-                         "here; a .prom suffix writes Prometheus text "
-                         "instead of JSON")
-    ap.add_argument("--telemetry", action=argparse.BooleanOptionalAction,
-                    default=True,
-                    help="(--continuous) retain spans/gauge series for "
-                         "traces (--no-telemetry caps memory on long "
-                         "soaks; counters and faults stay live)")
-    ap.add_argument("--profile-decode", action="store_true",
-                    help="(--continuous) bracket each decode launch in a "
-                         "jax.profiler StepTraceAnnotation (only useful "
-                         "under an active jax profiler session)")
+    # Argument groups mirror the PagedServeConfig sub-configs one-to-one:
+    # each group below builds exactly one grouped kwarg.
+    adm = ap.add_argument_group(
+        "admission (AdmissionConfig)",
+        "what enters the engine per step, and at what padded cost")
+    adm.add_argument("--prefill-token-budget", type=int, default=4096,
+                     help="(--continuous) max prefill tokens admitted per "
+                          "step after the first (prefill/decode "
+                          "interleave); bucketed admissions cost their "
+                          "PADDED width")
+    adm.add_argument("--max-queue", type=int, default=0,
+                     help="(--continuous) bound the submit queue; a full "
+                          "queue sheds the slackest-deadline request for a "
+                          "more urgent newcomer, else rejects (0 = "
+                          "unbounded)")
+    adm.add_argument("--bucket-sizes", type=_parse_buckets, default="auto",
+                     help="(--continuous) prefill bucket ladder: 'auto' "
+                          "(power-of-two page multiples up to max_len), "
+                          "'off' (exact-length prefill, one compile per "
+                          "distinct prompt length), or comma-separated "
+                          "widths like '16,32,64'")
+    deg = ap.add_argument_group(
+        "overload degradation (DegradeConfig)",
+        "surge admissions at an aggressive-Δ re-pairing of the weights")
+    deg.add_argument("--degrade-delta", action="store_true",
+                     help="(--continuous) overload degradation: overflow "
+                          "admissions run an aggressive-Δ re-pairing of "
+                          "the same weights in a reserved slot cohort")
+    deg.add_argument("--degrade-slots", type=int, default=0,
+                     help="(--degrade-delta) slots reserved for the "
+                          "degraded cohort (default: half the batch)")
+    deg.add_argument("--degrade-eff-depth", type=int, default=0,
+                     help="(--degrade-delta) effective depth of the "
+                          "degraded cohort (0 = maximal pairing)")
+    spec = ap.add_argument_group(
+        "speculative decoding (SpecConfig)",
+        "shallow-Δ drafts verified by the full-depth decode program")
+    spec.add_argument("--spec-k", type=int, default=0,
+                      help="(--continuous) self-speculative decoding: "
+                           "draft this many greedy tokens per step with "
+                           "the same weights re-paired at an aggressive "
+                           "Δ, verify them in one full-depth launch "
+                           "(greedy-only, tp=1; 0 = off)")
+    spec.add_argument("--spec-delta", type=int, default=0,
+                      help="(--spec-k) drafter effective depth (0 = "
+                           "maximal pairing)")
+    tel = ap.add_argument_group(
+        "telemetry (TelemetryConfig)",
+        "observation must never change the served bits")
+    tel.add_argument("--trace-out", default="",
+                     help="(--continuous) write the run's Chrome/Perfetto "
+                          "trace_event JSON here (open in chrome://tracing "
+                          "or ui.perfetto.dev)")
+    tel.add_argument("--metrics-out", default="",
+                     help="(--continuous) write the run's metrics snapshot "
+                          "here; a .prom suffix writes Prometheus text "
+                          "instead of JSON")
+    tel.add_argument("--telemetry", action=argparse.BooleanOptionalAction,
+                     default=True,
+                     help="(--continuous) retain spans/gauge series for "
+                          "traces (--no-telemetry caps memory on long "
+                          "soaks; counters and faults stay live)")
+    tel.add_argument("--profile-decode", action="store_true",
+                     help="(--continuous) bracket each decode launch in a "
+                          "jax.profiler StepTraceAnnotation (only useful "
+                          "under an active jax profiler session)")
     args = ap.parse_args()
+    if isinstance(args.bucket_sizes, str):      # default never went through
+        args.bucket_sizes = _parse_buckets(args.bucket_sizes)
 
     cfg = get_config(args.arch)
     if not args.full_config:
@@ -135,17 +178,19 @@ def main() -> None:
             n_slots=args.batch, page_size=ps,
             n_pages=1 + args.batch * (max_len // ps), max_len=max_len,
             temperature=args.temperature,
-            prefill_token_budget=args.prefill_token_budget,
             prefix_cache=args.prefix_cache,
             preempt_after=args.preempt_after,
-            max_queue=args.max_queue,
-            degrade_delta=args.degrade_delta,
-            degrade_slots=deg_slots,
-            degrade_eff_depth=args.degrade_eff_depth,
-            spec_k=args.spec_k,
-            spec_delta=args.spec_delta,
-            telemetry=args.telemetry,
-            profile_decode=args.profile_decode)
+            admission=AdmissionConfig(
+                prefill_token_budget=args.prefill_token_budget,
+                max_queue=args.max_queue,
+                prefill_buckets=args.bucket_sizes),
+            degrade=DegradeConfig(
+                enabled=args.degrade_delta, slots=deg_slots,
+                eff_depth=args.degrade_eff_depth),
+            spec=SpecConfig(k=args.spec_k, delta=args.spec_delta),
+            telemetry_cfg=TelemetryConfig(
+                enabled=args.telemetry,
+                profile_decode=args.profile_decode))
         if args.trace_out and not args.telemetry:
             ap.error("--trace-out needs telemetry (drop --no-telemetry)")
         eng = PagedEngine(params, ms, psv, mesh=mesh)

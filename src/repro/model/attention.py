@@ -156,16 +156,28 @@ def _dense_core(q, k, v, mask):
 
 
 def _chunked_core(q, k, v, *, kind, window, chunk, prefix_len, q0, k0,
-                  qb: int, kb: int):
+                  qb: int, kb: int, fixed_kb: bool = False):
     """Online-softmax (flash-style) core: O(S*block) memory, scan over q and
     kv tiles. ``q0``/``k0`` are the absolute offsets of q and k position 0.
     This is the XLA path; the Pallas kernel implements the same schedule on
     TPU (repro.kernels.flash_attention). Ragged S/T are padded to tile
-    multiples; padded kv columns are masked via ``k_limit``."""
+    multiples; padded kv columns are masked via ``k_limit``.
+
+    ``fixed_kb`` pins the kv tile width at ``kb`` even when T < kb (pad up
+    instead of clamping down). With a pinned tile, the reduction grouping
+    of every q row is a pure function of its own key horizon: a fully
+    masked tile contributes ``corr = exp(m - m) = 1`` and ``p = 0``, so
+    ``l = l * 1 + 0`` and ``acc = acc * 1 + 0`` are bitwise no-ops, and a
+    partially masked tile reduces over the same ``kb`` lanes whatever the
+    total padded length is. That makes right-padding the key axis BIT-
+    TRANSPARENT for rows below the true length — the property the serve
+    engine's bucketed prefill leans on (masked pad lanes carry finite
+    values, so ``0 * v`` is exactly 0)."""
     B, S0, Hk, g, hd = q.shape
     T0 = k.shape[1]
     qb = min(qb, S0)
-    kb = min(kb, T0)
+    if not fixed_kb:
+        kb = min(kb, T0)
     pad_q = (-S0) % qb
     pad_k = (-T0) % kb
     if pad_q:
@@ -225,6 +237,15 @@ def attention_core(q, k, v, *, kind, window=0, chunk=0, prefix_len=0,
                    q0=0, k0=0, impl="auto", qb=512, kb=1024):
     B, S, Hk, g, hd = q.shape
     T = k.shape[1]
+    if impl.startswith("chunked:"):
+        # Pinned kv tile width ("chunked:16" -> kb=16, never clamped to T):
+        # the serve prefill path uses this so bucket-padded and exact-length
+        # forwards reduce with identical per-tile grouping (see
+        # _chunked_core fixed_kb).
+        kb = int(impl.split(":", 1)[1])
+        return _chunked_core(q, k, v, kind=kind, window=window, chunk=chunk,
+                             prefix_len=prefix_len, q0=q0, k0=k0, qb=qb,
+                             kb=kb, fixed_kb=True)
     if impl == "auto":
         impl = "dense" if S * T <= 2048 * 2048 else "chunked"
     if impl == "pallas":

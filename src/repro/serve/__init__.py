@@ -1,9 +1,21 @@
+from repro.serve.bucketing import (  # noqa: F401
+    PREFILL_ATTN_IMPL,
+    bucket_for,
+    default_buckets,
+    rows_for_bucket,
+    validate_buckets,
+)
 from repro.serve.engine import (  # noqa: F401
+    AdmissionConfig,
+    DegradeConfig,
     PagedEngine,
     PagedServeConfig,
     ServeConfig,
+    SpecConfig,
+    TelemetryConfig,
     cache_pspecs,
     generate,
+    make_paged_bucket_prefill_fn,
     make_prefill,
     make_serve_step,
     make_sharded_generate,
@@ -29,6 +41,7 @@ from repro.serve.faults import (  # noqa: F401
 from repro.serve.telemetry import (  # noqa: F401
     DEFAULT_BUCKETS,
     Histogram,
+    ProgramCache,
     RequestSpan,
     SpanEvent,
     SpanStateError,
@@ -74,4 +87,5 @@ from repro.serve.speculative import (  # noqa: F401
 from repro.serve.paged_cache import (  # noqa: F401
     rewind_plan,
     rewind_tokens,
+    scatter_prefill_rows,
 )

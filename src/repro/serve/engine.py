@@ -92,6 +92,7 @@ from repro.core import lp as LP
 from repro.model import embedding as E
 from repro.model import transformer as T
 from repro.parallel.context import ParallelContext, make_context
+from repro.serve import bucketing as BK
 from repro.serve import faults as F
 from repro.serve import paged_cache as PG
 from repro.serve import speculative as SP
@@ -103,7 +104,8 @@ from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import (COHORT_DEGRADED, COHORT_MAIN,
                                    TERMINAL_STATES, PagePool, Request,
                                    Scheduler)
-from repro.serve.telemetry import (DECODE, PREFILL, REPLAY, Telemetry)
+from repro.serve.telemetry import (DECODE, PREFILL, REPLAY, ProgramCache,
+                                   Telemetry)
 from repro.serve.trace import write_trace
 
 PyTree = Any
@@ -115,7 +117,12 @@ class ServeConfig:
     temperature: float = 0.0      # 0 -> greedy
     kv_mode: str = "heads"        # heads | seq  (seq-sharded KV cache)
     cache_dtype: Any = jnp.bfloat16
-    attn_impl: str = "auto"
+    # Pinned-tile chunked attention: the impl whose prefill output is
+    # bit-invariant to right-padding the key axis (serve.bucketing). The
+    # one-shot reference and the engine's prefills must run the SAME impl
+    # or the engine==generate() bit-identity gates would compare different
+    # reduction tilings.
+    attn_impl: str = BK.PREFILL_ATTN_IMPL
 
 
 # ---------------------------------------------------------------------------
@@ -312,7 +319,8 @@ def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
     def f(params, caches, prompt, page_ids, slot, key):
         logits, _, seq = T.forward_full(
             params, prompt, ms=ms, pc=pc, emit_cache=True,
-            max_len=emit_len, kv_mode="heads")
+            max_len=emit_len, kv_mode="heads",
+            attn_impl=BK.PREFILL_ATTN_IMPL)
         # Same cast T.prefill applies to the ring cache.
         seq = jax.tree.map(
             lambda c: c.astype(psv.cache_dtype)
@@ -329,9 +337,106 @@ def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
     return f
 
 
+def make_paged_bucket_prefill_fn(ms: T.ModelStructure, pc: ParallelContext,
+                                 psv, bucket: int, rows: int):
+    """Bucketed batched prefill + masked page scatter: (params, caches,
+    prompts [rows, bucket], true_lens [rows], page_ids [rows, n_pg], key)
+    -> (first_tok [rows], ok [rows], caches).
+
+    ONE launch prefills up to ``rows`` requests right-padded to
+    ``bucket`` tokens. Bit-identity with the exact-length program holds
+    because the forward runs the pinned-tile chunked attention impl
+    (serve.bucketing): row i's logits at position ``true_lens[i] - 1``
+    depend only on kv tiles covering [0, true_lens[i]) — right-padding
+    and batching cannot move a bit. The per-row finite guard covers the
+    sampled logits AND the row's emitted cache (tp-reduced like the
+    decode guard), so one poisoned request fails alone while its
+    bucket-mates' streams stay untouched. Pad rows (group smaller than
+    ``rows``) carry ``true_lens == 1`` and all-garbage page ids: their
+    junk never lands (``scatter_prefill_rows`` masks garbage-directed
+    chunks) and the host ignores their outputs. Shared by the tp=1 jit
+    and the shard_map wrapper (``make_sharded_prefill(bucket_rows=)``).
+    """
+    def f(params, caches, prompts, true_lens, page_ids, key):
+        logits, _, seq = T.forward_full(
+            params, prompts, ms=ms, pc=pc, emit_cache=True,
+            max_len=bucket, kv_mode="heads",
+            attn_impl=BK.PREFILL_ATTN_IMPL)
+        seq = jax.tree.map(
+            lambda c: c.astype(psv.cache_dtype)
+            if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
+        last = jnp.take_along_axis(
+            logits, (true_lens - 1)[:, None, None], axis=1)[:, 0]
+        bad = jnp.any(~jnp.isfinite(last), axis=-1).astype(jnp.int32)
+        for seg in seq:
+            for name, c in seg.items():
+                if jnp.issubdtype(c.dtype, jnp.inexact):
+                    ba = T.cache_batch_axis(name)
+                    ax = tuple(i for i in range(c.ndim) if i != ba)
+                    bad = bad | jnp.any(~jnp.isfinite(c),
+                                        axis=ax).astype(jnp.int32)
+        ok = pc.pmax_tp(bad) == 0
+        if psv.temperature > 0:
+            tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
+        else:
+            tok0 = E.vocab_parallel_argmax(last, pc)
+        caches = PG.scatter_prefill_rows(caches, seq, page_ids)
+        return tok0.astype(jnp.int32), ok, caches
+
+    return f
+
+
+@dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission-side knobs: how much prefill work a step may take on and
+    how the submit queue bounds itself. ``prefill_buckets`` is the bucket
+    ladder for batched prefill — None picks the auto ladder
+    (``bucketing.default_buckets``), an empty tuple disables bucketing
+    (every prefill runs the exact-length program — the A/B reference),
+    an explicit tuple is validated against the page geometry."""
+    prefill_token_budget: int = 4096
+    max_queue: int = 0
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+
+
+@dataclass(frozen=True)
+class DegradeConfig:
+    """Overload degradation: the aggressive-Δ slot cohort (see
+    PagedServeConfig docstring)."""
+    enabled: bool = False
+    slots: int = 0
+    queue_depth: int = 1
+    eff_depth: int = 0
+
+
+@dataclass(frozen=True)
+class SpecConfig:
+    """Self-speculative decoding: shallow-Δ drafts, full-depth verify."""
+    k: int = 0
+    delta: int = 0
+
+
+@dataclass(frozen=True)
+class TelemetryConfig:
+    """Observability retention + profiling hooks."""
+    enabled: bool = True
+    profile_decode: bool = False
+
+
 @dataclass(frozen=True)
 class PagedServeConfig:
     """Static geometry of the continuous-batching engine.
+
+    Grouped view: the flat fields below decompose into four sub-configs —
+    ``AdmissionConfig`` (budget, queue bound, bucket ladder),
+    ``DegradeConfig``, ``SpecConfig``, ``TelemetryConfig`` — passable as
+    the ``admission`` / ``degrade`` / ``spec`` / ``telemetry_cfg``
+    kwargs. The flat kwargs stay accepted as a deprecation shim (every
+    existing caller passes them), and after construction BOTH views are
+    populated and consistent: group kwargs are copied onto the flats,
+    then the canonical group objects are rebuilt from the flats.
+    ``validate()`` is the one entry point for every cross-field rule; the
+    engine calls it first thing.
 
     max_len must be a page multiple: the decode step attends over exactly
     ``pages_per_slot * page_size == max_len`` gathered positions, the same
@@ -405,6 +510,121 @@ class PagedServeConfig:
     # jax.profiler trace to matter; off the hot path by default).
     telemetry: bool = True        # retain spans/gauge series/wall marks
     profile_decode: bool = False  # jax.profiler annotation around decode
+    # Bucketed prefill ladder: None = auto (powers-of-two page multiples
+    # capped at max_len), () = off, explicit tuple = validated ladder.
+    prefill_buckets: Optional[Tuple[int, ...]] = None
+    # Grouped sub-config kwargs (each overrides its flat fields when
+    # given; rebuilt canonically in __post_init__ so both views agree).
+    admission: Optional[AdmissionConfig] = None
+    degrade: Optional[DegradeConfig] = None
+    spec: Optional[SpecConfig] = None
+    telemetry_cfg: Optional[TelemetryConfig] = None
+
+    def __post_init__(self):
+        # Frozen dataclass: object.__setattr__ is the sanctioned escape
+        # hatch inside __post_init__.
+        def put(name, value):
+            object.__setattr__(self, name, value)
+
+        if self.admission is not None:
+            a = self.admission
+            put("prefill_token_budget", a.prefill_token_budget)
+            put("max_queue", a.max_queue)
+            put("prefill_buckets", a.prefill_buckets)
+        if self.degrade is not None:
+            d = self.degrade
+            put("degrade_delta", d.enabled)
+            put("degrade_slots", d.slots)
+            put("degrade_queue_depth", d.queue_depth)
+            put("degrade_eff_depth", d.eff_depth)
+        if self.spec is not None:
+            put("spec_k", self.spec.k)
+            put("spec_delta", self.spec.delta)
+        if self.telemetry_cfg is not None:
+            put("telemetry", self.telemetry_cfg.enabled)
+            put("profile_decode", self.telemetry_cfg.profile_decode)
+        if self.prefill_buckets is not None:
+            put("prefill_buckets", tuple(self.prefill_buckets))
+        # Canonical groups, rebuilt from the (possibly shimmed) flats.
+        put("admission", AdmissionConfig(
+            prefill_token_budget=self.prefill_token_budget,
+            max_queue=self.max_queue,
+            prefill_buckets=self.prefill_buckets))
+        put("degrade", DegradeConfig(
+            enabled=self.degrade_delta, slots=self.degrade_slots,
+            queue_depth=self.degrade_queue_depth,
+            eff_depth=self.degrade_eff_depth))
+        put("spec", SpecConfig(k=self.spec_k, delta=self.spec_delta))
+        put("telemetry_cfg", TelemetryConfig(
+            enabled=self.telemetry, profile_decode=self.profile_decode))
+
+    def validate(self, *, mesh: bool = False) -> None:
+        """Every cross-field configuration rule, in one place. Actionable
+        ValueErrors, not asserts: these are mistakes a user should be
+        able to fix from the message alone (validate_paged_support
+        style). ``mesh``: the engine runs under a tp > 1 mesh — some
+        features are tp=1-only for now."""
+        if self.max_len % self.page_size != 0:
+            raise ValueError(
+                f"max_len={self.max_len} is not a multiple of "
+                f"page_size={self.page_size}: the decode step attends over "
+                "exactly pages_per_slot * page_size positions, so a partial "
+                "trailing page would change reduction shapes and break the "
+                "bit-identity contract — pick max_len as a whole number of "
+                "pages")
+        if self.n_slots < 1:
+            raise ValueError(
+                f"n_slots={self.n_slots} must be >= 1: the decode program's "
+                "fixed batch is the slot count, and an engine with no slots "
+                "can never admit a request")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue={self.max_queue} must be >= 0 "
+                             "(0 = unbounded)")
+        if self.prefill_buckets:
+            BK.validate_buckets(self.prefill_buckets,
+                                page_size=self.page_size,
+                                max_len=self.max_len)
+        if self.degrade_delta:
+            if not 1 <= self.degrade_slots < self.n_slots:
+                raise ValueError(
+                    f"degrade_delta needs 1 <= degrade_slots < n_slots "
+                    f"(got degrade_slots={self.degrade_slots}, "
+                    f"n_slots={self.n_slots}): the degraded cohort must "
+                    "leave at least one main slot")
+            if mesh:
+                raise ValueError(
+                    "degrade_delta is tp=1-only for now: the degraded "
+                    "cohort would need its own sharded program pair and "
+                    "replanned param placement")
+        elif self.degrade_slots:
+            raise ValueError(
+                f"degrade_slots={self.degrade_slots} without degrade_delta: "
+                "reserved degraded slots would simply idle — set "
+                "degrade_delta=True or degrade_slots=0")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k={self.spec_k} must be >= 0 (0 = off)")
+        if self.spec_k:
+            if self.temperature > 0:
+                raise ValueError(
+                    "spec_k needs temperature=0.0: acceptance compares "
+                    "greedy argmax ids — sampled verification would need "
+                    "rejection sampling over full logit distributions, "
+                    "which the vocab-parallel sampler never materialises")
+            if mesh:
+                raise ValueError(
+                    "spec_k is tp=1-only for now: the draft and wide "
+                    "verify programs need their own sharded wrappers and "
+                    "replanned param placement")
+            if self.degrade_delta:
+                raise ValueError(
+                    "spec_k is exclusive with degrade_delta for now: the "
+                    "speculative controller drives the main cohort, and "
+                    "composing it with a degraded cohort needs a draft "
+                    "tree per cohort — pick one overload strategy")
+        elif self.spec_delta:
+            raise ValueError(
+                f"spec_delta={self.spec_delta} without spec_k: set "
+                "spec_k >= 1 to enable speculative decoding")
 
     @property
     def pages_per_slot(self) -> int:
@@ -447,66 +667,10 @@ class PagedEngine:
     def __init__(self, params, ms: T.ModelStructure, psv: PagedServeConfig,
                  *, pc: Optional[ParallelContext] = None, key=None,
                  mesh=None, fault_plan: Optional[F.FaultPlan] = None):
-        # Geometry errors are actionable ValueErrors, not asserts: they are
-        # configuration mistakes a user should be able to fix from the
-        # message alone (validate_paged_support style).
-        if psv.max_len % psv.page_size != 0:
-            raise ValueError(
-                f"max_len={psv.max_len} is not a multiple of "
-                f"page_size={psv.page_size}: the decode step attends over "
-                "exactly pages_per_slot * page_size positions, so a partial "
-                "trailing page would change reduction shapes and break the "
-                "bit-identity contract — pick max_len as a whole number of "
-                "pages")
-        if psv.n_slots < 1:
-            raise ValueError(
-                f"n_slots={psv.n_slots} must be >= 1: the decode program's "
-                "fixed batch is the slot count, and an engine with no slots "
-                "can never admit a request")
-        if psv.max_queue < 0:
-            raise ValueError(f"max_queue={psv.max_queue} must be >= 0 "
-                             "(0 = unbounded)")
-        if psv.degrade_delta:
-            if not 1 <= psv.degrade_slots < psv.n_slots:
-                raise ValueError(
-                    f"degrade_delta needs 1 <= degrade_slots < n_slots "
-                    f"(got degrade_slots={psv.degrade_slots}, "
-                    f"n_slots={psv.n_slots}): the degraded cohort must "
-                    "leave at least one main slot")
-            if mesh is not None:
-                raise ValueError(
-                    "degrade_delta is tp=1-only for now: the degraded "
-                    "cohort would need its own sharded program pair and "
-                    "replanned param placement")
-        elif psv.degrade_slots:
-            raise ValueError(
-                f"degrade_slots={psv.degrade_slots} without degrade_delta: "
-                "reserved degraded slots would simply idle — set "
-                "degrade_delta=True or degrade_slots=0")
-        if psv.spec_k < 0:
-            raise ValueError(f"spec_k={psv.spec_k} must be >= 0 (0 = off)")
-        if psv.spec_k:
-            if psv.temperature > 0:
-                raise ValueError(
-                    "spec_k needs temperature=0.0: acceptance compares "
-                    "greedy argmax ids — sampled verification would need "
-                    "rejection sampling over full logit distributions, "
-                    "which the vocab-parallel sampler never materialises")
-            if mesh is not None:
-                raise ValueError(
-                    "spec_k is tp=1-only for now: the draft and wide "
-                    "verify programs need their own sharded wrappers and "
-                    "replanned param placement")
-            if psv.degrade_delta:
-                raise ValueError(
-                    "spec_k is exclusive with degrade_delta for now: the "
-                    "speculative controller drives the main cohort, and "
-                    "composing it with a degraded cohort needs a draft "
-                    "tree per cohort — pick one overload strategy")
-        elif psv.spec_delta:
-            raise ValueError(
-                f"spec_delta={psv.spec_delta} without spec_k: set "
-                "spec_k >= 1 to enable speculative decoding")
+        # Cross-field configuration rules live on the config itself
+        # (PagedServeConfig.validate) — the engine calls it first thing,
+        # then checks only what needs the model structure or mesh/pc.
+        psv.validate(mesh=mesh is not None)
         PG.validate_paged_support(ms, psv.max_len)
         self.ms = ms
         self.psv = psv
@@ -589,17 +753,32 @@ class PagedEngine:
         self.telemetry.seed_counters(self.COUNTER_KEYS)
         self.telemetry.fault_counts.update(
             {k: 0 for k in F.ALL_FAULT_KINDS})
+        # ONE home for every compiled program, keyed (cohort, program,
+        # shape) — the same triple the telemetry compile-event stream
+        # uses, so cache misses and compile accounting can never drift.
+        self._programs = ProgramCache(self.telemetry)
         self.pool = PagePool(psv.n_pages)
         self.prefix = (PrefixCache(psv.page_size, telemetry=self.telemetry)
                        if psv.prefix_cache and ms.tp == 1
                        and self._prefix_eligible(ms)
                        else None)
+        # Bucketed prefill needs the pinned-tile chunked impl's padding
+        # transparency, which only the attention mixer family honours —
+        # same eligibility gate as the prefix cache. None = auto ladder,
+        # () = off (the exact-length A/B reference configuration).
+        if psv.prefill_buckets == () or not self._prefix_eligible(ms):
+            self._buckets: Tuple[int, ...] = ()
+        elif psv.prefill_buckets is None:
+            self._buckets = BK.default_buckets(psv.max_len, psv.page_size)
+        else:
+            self._buckets = psv.prefill_buckets
         self.sched = Scheduler(
             n_slots=psv.n_slots, pool=self.pool, page_size=psv.page_size,
             max_len=psv.max_len,
             prefill_token_budget=psv.prefill_token_budget,
             prefix_cache=self.prefix, preempt_after=psv.preempt_after,
-            degrade_slots=self.n_deg, telemetry=self.telemetry)
+            degrade_slots=self.n_deg, telemetry=self.telemetry,
+            prefill_buckets=self._buckets)
         if mesh is not None:
             c_abs, c_specs = PG.paged_cache_meta(
                 ms, n_slots=self.n_main, n_pages=psv.n_pages,
@@ -644,8 +823,6 @@ class PagedEngine:
         self._decode_deg = (self._make_decode(COHORT_DEGRADED)
                             if self.n_deg else None)
         self._spec_step = None
-        self._decode_draft = None             # lazy: resume catch-up only
-        self._rewind = None                   # lazy compiled rewind
         if self.spec_k:
             # ONE fused program holds both speculative bodies: the
             # k-step draft episode at the aggressive plan (batch n_main)
@@ -653,18 +830,20 @@ class PagedEngine:
             # a wider batch: n_main * (spec_k + 1) probe rows through
             # the same body the main cohort compiles at n_main (row
             # independence is what makes the wide launch bit-equal to
-            # sequential steps). One compile event per body.
-            self.telemetry.compile_event(SP.COHORT_SPEC_DRAFT, "decode",
-                                         self.n_main)
-            self.telemetry.compile_event(
-                SP.COHORT_SPEC_VERIFY, "decode",
-                self.n_main * (self.spec_k + 1))
-            self._spec_step = jax.jit(
-                make_spec_step_fn(self.ms_draft, ms, self.pc, psv,
-                                  self.spec_k),
-                donate_argnums=(2, 3))
-        self._prefills: Dict[Any, Any] = {}   # program-shape key -> jit fn
-        self._scrubs: Dict[str, Any] = {}     # cohort -> compiled scrub
+            # sequential steps). One build, one compile event per body:
+            # the fused program lives under the draft key and the verify
+            # body is note()d so the compile stream still shows both.
+            self._spec_step = self._programs.get(
+                SP.COHORT_SPEC_DRAFT, "decode", self.n_main,
+                lambda: jax.jit(
+                    make_spec_step_fn(self.ms_draft, ms, self.pc, psv,
+                                      self.spec_k),
+                    donate_argnums=(2, 3)))
+            self._programs.note(SP.COHORT_SPEC_VERIFY, "decode",
+                                self.n_main * (self.spec_k + 1))
+        # rids whose draft tree was primed by a bucketed draft-cohort
+        # prefill this step — _spec_prime then skips its full prefill.
+        self._spec_primed: set = set()
         # Greedy + fp32 pool => suffix/replay recomputation is bit-exact
         # against the original run; the engine then self-checks the replay.
         self._exact = (psv.temperature == 0.0
@@ -681,6 +860,7 @@ class PagedEngine:
     COUNTER_KEYS = (
         "prefill_tokens", "hit_tokens", "resume_hit_tokens",
         "replay_tokens", "full_prefills", "suffix_prefills", "prefix_hits",
+        "bucket_prefills", "bucket_groups", "pad_tokens",
         "submitted", "admitted", "decoded", "finished", "preempted",
         "failed", "expired", "cancelled", "shed", "degraded_admissions",
         "draft_steps", "verify_steps", "spec_accepted", "spec_rejected",
@@ -741,32 +921,63 @@ class PagedEngine:
         return self._decode if cohort == COHORT_MAIN else self._decode_deg
 
     # -- compiled programs ---------------------------------------------
+    # Every builder below is compile-event-FREE: callers route through
+    # ``self._programs.get(cohort, program, shape, build)``, which emits
+    # the compile event exactly once per distinct key — the single
+    # compile-accounting increment site.
     def _make_decode(self, cohort: str):
-        params_ms = self._model(cohort)[1] if cohort == COHORT_DEGRADED \
-            else self.ms
         size = self.n_main if cohort == COHORT_MAIN else self.n_deg
-        self.telemetry.compile_event(cohort, "decode", size)
-        if self.mesh is not None:
-            fn, _, _, _ = make_sharded_serve_step(
-                params_ms, self.mesh, None, batch=size, paged=self.psv)
-            return fn
-        local = make_paged_decode_fn(params_ms, self.pc, self.psv)
-        return jax.jit(local, donate_argnums=(1,))
+
+        def build():
+            params_ms = self._model(cohort)[1] \
+                if cohort == COHORT_DEGRADED else self.ms
+            if self.mesh is not None:
+                fn, _, _, _ = make_sharded_serve_step(
+                    params_ms, self.mesh, None, batch=size, paged=self.psv)
+                return fn
+            local = make_paged_decode_fn(params_ms, self.pc, self.psv)
+            return jax.jit(local, donate_argnums=(1,))
+
+        return self._programs.get(cohort, "decode", size, build)
 
     def _prefill_fn(self, prompt_len: int, cohort: str):
         """Exact-length prefill + page scatter, compiled once per distinct
         (prompt length, cohort) — the cohorts differ in both the model
         structure (re-paired stack) and the cache tree's slot count."""
-        ms = self._model(cohort)[1]
-        size = self.n_main if cohort == COHORT_MAIN else self.n_deg
-        self.telemetry.compile_event(cohort, "prefill_full", prompt_len)
-        if self.mesh is not None:
-            fn, _, _ = make_sharded_prefill(
-                ms, self.mesh, None, batch=1, prompt_len=prompt_len,
-                paged=self.psv, paged_slots=size)
-            return fn
-        local = make_paged_prefill_fn(ms, self.pc, self.psv, prompt_len)
-        return jax.jit(local, donate_argnums=(1,))
+        def build():
+            ms = self._model(cohort)[1]
+            size = self.n_main if cohort == COHORT_MAIN else self.n_deg
+            if self.mesh is not None:
+                fn, _, _ = make_sharded_prefill(
+                    ms, self.mesh, None, batch=1, prompt_len=prompt_len,
+                    paged=self.psv, paged_slots=size)
+                return fn
+            local = make_paged_prefill_fn(ms, self.pc, self.psv, prompt_len)
+            return jax.jit(local, donate_argnums=(1,))
+
+        return self._programs.get(cohort, "prefill_full", prompt_len, build)
+
+    def _bucket_prefill_fn(self, bucket: int, rows: int, cohort: str):
+        """Bucketed batched prefill: ``rows`` right-padded prompts through
+        one ``[rows, bucket]`` launch. Compiled once per distinct
+        (bucket, rows) — and rows is a pure function of (bucket, static
+        config), so the cohort's compile count is bounded by the ladder
+        length, not by arrivals."""
+        def build():
+            if self.mesh is not None:
+                fn, _, _ = make_sharded_prefill(
+                    self.ms, self.mesh, None, batch=rows,
+                    prompt_len=bucket, paged=self.psv,
+                    paged_slots=self.n_main, bucket_rows=rows)
+                return fn
+            ms = (self.ms_draft if cohort == SP.COHORT_SPEC_DRAFT
+                  else self._model(cohort)[1])
+            local = make_paged_bucket_prefill_fn(ms, self.pc, self.psv,
+                                                 bucket, rows)
+            return jax.jit(local, donate_argnums=(1,))
+
+        return self._programs.get(cohort, "prefill_bucket", (bucket, rows),
+                                  build)
 
     def _suffix_fn(self, n_ctx_pages: int, suffix_len: int):
         """Prefix-hit prefill: gather the matched pages as read-only
@@ -779,8 +990,6 @@ class PagedEngine:
         program writes only ``sfx_ids`` pages, never ``ctx_ids``. Main
         cohort only (the radix tree never holds degraded-plan pages).
         """
-        self.telemetry.compile_event(COHORT_MAIN, "prefill_suffix",
-                                     (n_ctx_pages, suffix_len))
         ms, pc, psv = self.ms, self.pc, self.psv
         assert ms.tp == 1, "prefix sharing is tp=1 only (auto-disabled)"
         ps = psv.page_size
@@ -792,7 +1001,8 @@ class PagedEngine:
             ctx = PG.gather_ctx(caches, ctx_ids)
             logits, _, seq = T.forward_full(
                 params, suffix, ms=ms, pc=pc, emit_cache=True,
-                max_len=emit_len, kv_mode="heads", ctx_kv=ctx, start=start)
+                max_len=emit_len, kv_mode="heads", ctx_kv=ctx, start=start,
+                attn_impl=BK.PREFILL_ATTN_IMPL)
             seq = jax.tree.map(
                 lambda c: c.astype(psv.cache_dtype)
                 if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
@@ -811,44 +1021,39 @@ class PagedEngine:
         """Single-step draft decode, compiled lazily — only the resume
         catch-up path needs it (the decode phase runs the fused
         ``_draft_episode`` program instead)."""
-        if self._decode_draft is None:
-            self.telemetry.compile_event(SP.COHORT_SPEC_DRAFT,
-                                         "decode_catchup", self.n_main)
-            self._decode_draft = jax.jit(
+        return self._programs.get(
+            SP.COHORT_SPEC_DRAFT, "decode_catchup", self.n_main,
+            lambda: jax.jit(
                 make_paged_decode_fn(self.ms_draft, self.pc, self.psv),
-                donate_argnums=(1,))
-        return self._decode_draft
+                donate_argnums=(1,)))
 
     def _spec_prefill_fn(self, prompt_len: int):
         """Draft-tree prefill at the aggressive plan, compiled once per
         distinct prompt length (tp=1 only — spec_k validation)."""
-        self.telemetry.compile_event(SP.COHORT_SPEC_DRAFT, "prefill_full",
-                                     prompt_len)
-        local = make_paged_prefill_fn(self.ms_draft, self.pc, self.psv,
-                                      prompt_len)
-        return jax.jit(local, donate_argnums=(1,))
+        return self._programs.get(
+            SP.COHORT_SPEC_DRAFT, "prefill_full", prompt_len,
+            lambda: jax.jit(
+                make_paged_prefill_fn(self.ms_draft, self.pc, self.psv,
+                                      prompt_len),
+                donate_argnums=(1,)))
 
     def _scrub_fn(self, cohort: str):
         """Compiled page/state scrub for one cohort (built lazily — the
         happy path never needs it). Fixed shapes: the page-id vector is
         padded with the garbage page."""
-        fn = self._scrubs.get(cohort)
-        if fn is not None:
-            return fn
-        self.telemetry.compile_event(cohort, "scrub",
-                                     self.psv.pages_per_slot)
-        if self.mesh is not None:
-            _, c_specs = PG.paged_cache_meta(
-                self.ms, n_slots=self.n_main, n_pages=self.psv.n_pages,
-                page_size=self.psv.page_size, dtype=self.psv.cache_dtype)
-            wrapped = shard_map(PG.scrub_pages, mesh=self.mesh,
-                                in_specs=(c_specs, P(), P()),
-                                out_specs=c_specs, check_vma=False)
-            fn = jax.jit(wrapped, donate_argnums=(0,))
-        else:
-            fn = jax.jit(PG.scrub_pages, donate_argnums=(0,))
-        self._scrubs[cohort] = fn
-        return fn
+        def build():
+            if self.mesh is not None:
+                _, c_specs = PG.paged_cache_meta(
+                    self.ms, n_slots=self.n_main, n_pages=self.psv.n_pages,
+                    page_size=self.psv.page_size, dtype=self.psv.cache_dtype)
+                wrapped = shard_map(PG.scrub_pages, mesh=self.mesh,
+                                    in_specs=(c_specs, P(), P()),
+                                    out_specs=c_specs, check_vma=False)
+                return jax.jit(wrapped, donate_argnums=(0,))
+            return jax.jit(PG.scrub_pages, donate_argnums=(0,))
+
+        return self._programs.get(cohort, "scrub",
+                                  self.psv.pages_per_slot, build)
 
     # -- public API ----------------------------------------------------
     def add_request(self, prompt, max_new: int,
@@ -1077,10 +1282,7 @@ class PagedEngine:
         slot = jnp.int32(r.slot - lo)
         self._key, sub = jax.random.split(self._key)
         if ctx == 0:
-            key = ("full", Lp, cohort)
-            fn = self._prefills.get(key)
-            if fn is None:
-                fn = self._prefills[key] = self._prefill_fn(Lp, cohort)
+            fn = self._prefill_fn(Lp, cohort)
             tok0, ok, caches = fn(
                 params, caches, jnp.asarray(r.prompt[None]),
                 jnp.asarray(r.pages[:n_pg_prompt], jnp.int32), slot, sub)
@@ -1089,10 +1291,8 @@ class PagedEngine:
         else:
             m = ctx // ps
             Ls = Lp - ctx
-            key = ("sfx", m, Ls)
-            fn = self._prefills.get(key)
-            if fn is None:
-                fn = self._prefills[key] = self._suffix_fn(m, Ls)
+            fn = self._programs.get(COHORT_MAIN, "prefill_suffix", (m, Ls),
+                                    lambda: self._suffix_fn(m, Ls))
             tok0, ok, caches = fn(
                 params, caches, jnp.asarray(r.prompt[None, ctx:]),
                 jnp.asarray(r.pages[:m], jnp.int32),
@@ -1188,16 +1388,19 @@ class PagedEngine:
         Lp = r.prompt_len
         _, _, bt_a, lo = self._arrays(COHORT_MAIN)
         loc = r.slot - lo
-        key = ("spec_full", Lp)
-        fn = self._prefills.get(key)
-        if fn is None:
-            fn = self._prefills[key] = self._spec_prefill_fn(Lp)
-        self._key, sub = jax.random.split(self._key)
-        _, _, self.caches_draft = fn(
-            self.params_draft, self.caches_draft,
-            jnp.asarray(r.prompt[None]),
-            jnp.asarray(r.pages[:-(-Lp // ps)], jnp.int32),
-            jnp.int32(loc), sub)
+        if r.rid in self._spec_primed:
+            # The bucketed admission pass already primed the draft tree
+            # through a mirrored draft-cohort group launch — only the
+            # resume catch-up below remains.
+            self._spec_primed.discard(r.rid)
+        else:
+            fn = self._spec_prefill_fn(Lp)
+            self._key, sub = jax.random.split(self._key)
+            _, _, self.caches_draft = fn(
+                self.params_draft, self.caches_draft,
+                jnp.asarray(r.prompt[None]),
+                jnp.asarray(r.pages[:-(-Lp // ps)], jnp.int32),
+                jnp.int32(loc), sub)
         # Resume catch-up: feed each parked token at its position through
         # the draft program (single active row, garbage-masked peers —
         # the _replay pattern), outputs ignored. No state snapshots
@@ -1216,24 +1419,17 @@ class PagedEngine:
                 self.params_draft, self.caches_draft, jnp.asarray(tok_v),
                 jnp.asarray(pos_v), jnp.asarray(bt), no_poison, sub)
 
-    def _start(self, r: Request) -> bool:
+    def _start(self, r: Request,
+               pre: Optional[Tuple[int, bool]] = None) -> bool:
         """Bring an admitted request onto its slot: link its block table,
-        run the stage-1 prefill (full / suffix / skipped when the radix hit
-        covers the whole prompt), and for resumed requests replay the
-        parked generated positions. Returns False when a fault guard
-        FAILED the request (admission rolled back: slot and pages already
-        released)."""
-        # Device-boundary prompt guard: submit-time validation ran, but the
-        # prompt may have been corrupted since (the poisoned-prompt chaos
-        # kind models a tokenizer/host bug). An out-of-vocab id would index
-        # the embedding out of range — fail the request, not the engine.
-        vocab = self.ms.cfg.vocab_size
-        if (r.prompt < 0).any() or (r.prompt >= vocab).any():
-            self._fail(r, PoisonedPromptError(
-                f"rid={r.rid}: prompt token ids outside [0, {vocab}) at "
-                f"admission (min={int(r.prompt.min())}, "
-                f"max={int(r.prompt.max())})"), scrub=False)
-            return False
+        consume the bucketed-prefill result planned for it (``pre``) or
+        run the stage-1 prefill itself (full / suffix / skipped when the
+        radix hit covers the whole prompt), and for resumed requests
+        replay the parked generated positions. Returns False when a fault
+        guard FAILED the request (admission rolled back: slot and pages
+        already released). The device-boundary prompt guard ran in
+        ``_plan_prefills`` — every request reaching here has in-vocab
+        tokens."""
         ps = self.psv.page_size
         ctx = r.n_shared * ps
         Lp = r.prompt_len
@@ -1257,8 +1453,14 @@ class PagedEngine:
             self.telemetry.span_event(
                 r.rid, PREFILL, self.step_count,
                 kind="full" if ctx == 0 else "suffix",
-                hit_tokens=ctx, tokens=Lp - ctx)
-            tok0, ok = self._run_prefill(r, ctx)
+                hit_tokens=ctx, tokens=Lp - ctx, batched=pre is not None)
+            if pre is not None:
+                tok0, ok = pre
+                self.counters["prefill_tokens"] += Lp
+                self.counters["full_prefills"] += 1
+                self.counters["bucket_prefills"] += 1
+            else:
+                tok0, ok = self._run_prefill(r, ctx)
             if not ok:
                 # The prefill may have scattered non-finite kv into the
                 # request's pages before the guard was read — scrub.
@@ -1296,15 +1498,111 @@ class PagedEngine:
         self._clear_slot(slot)
         self.results[r.rid] = np.asarray(r.out, np.int32)
 
+    def _plan_prefills(self, admitted: List[Request]
+                       ) -> Dict[int, Tuple[int, bool]]:
+        """Pass 1 of admission: vocab-guard every admitted request, then
+        pack the bucket-eligible cold prefills into (cohort, bucket)
+        groups and launch each group ONCE. Returns rid -> (first token,
+        finite-ok) for every request whose prefill ran batched; pass 2
+        (``_start``) consumes those instead of launching per request.
+
+        Eligibility: the ladder is on, the request has NO radix context
+        (the suffix program's (ctx_pages, suffix_len) shape is
+        heterogeneous per hit — bucketing it is a follow-on), and a rung
+        holds the prompt. Resumed full re-prefills qualify: ctx == 0 and
+        the padded batched forward is bit-equal to the exact program, so
+        the resume bit-identity assert still holds."""
+        pre: Dict[int, Tuple[int, bool]] = {}
+        vocab = self.ms.cfg.vocab_size
+        groups: Dict[Tuple[str, int], List[Request]] = {}
+        for r in admitted:
+            # Device-boundary prompt guard: submit-time validation ran,
+            # but the prompt may have been corrupted since (the
+            # poisoned-prompt chaos kind models a tokenizer/host bug). An
+            # out-of-vocab id would index the embedding out of range —
+            # fail the request, not the engine (and never launch a batch
+            # holding it).
+            if (r.prompt < 0).any() or (r.prompt >= vocab).any():
+                self._fail(r, PoisonedPromptError(
+                    f"rid={r.rid}: prompt token ids outside [0, {vocab}) "
+                    f"at admission (min={int(r.prompt.min())}, "
+                    f"max={int(r.prompt.max())})"), scrub=False)
+                continue
+            if not self._buckets or r.n_shared:
+                continue
+            b = BK.bucket_for(r.prompt_len, self._buckets)
+            if b is not None:
+                groups.setdefault((r.cohort, b), []).append(r)
+        for (cohort, b), grp in sorted(groups.items()):
+            pre.update(self._launch_bucket(cohort, b, grp))
+        return pre
+
+    def _launch_bucket(self, cohort: str, bucket: int, grp: List[Request]
+                       ) -> Dict[int, Tuple[int, bool]]:
+        """One bucket group: right-pad each prompt to ``bucket``, launch
+        chunks of the program's fixed row count (short chunks pad with
+        inert rows: zero prompts, all-garbage page ids), slice each row's
+        logits at its true length, and mask the page scatter so pad rows
+        and pad pages write nothing."""
+        ps = self.psv.page_size
+        cohort_slots = self.n_main if cohort == COHORT_MAIN else self.n_deg
+        rows = BK.rows_for_bucket(bucket, cohort_slots,
+                                  self.psv.prefill_token_budget)
+        fn = self._bucket_prefill_fn(bucket, rows, cohort)
+        # Speculative mirror: the SAME group through the draft-plan
+        # program warms the draft tree (quality-only — outputs ignored,
+        # the trees are independent, and _spec_prime skips its own full
+        # prefill for rids primed here).
+        draft_fn = (self._bucket_prefill_fn(bucket, rows,
+                                            SP.COHORT_SPEC_DRAFT)
+                    if self.spec_k and cohort == COHORT_MAIN else None)
+        caches = self._get_caches(cohort)
+        n_pg = bucket // ps
+        out: Dict[int, Tuple[int, bool]] = {}
+        for i0 in range(0, len(grp), rows):
+            chunk = grp[i0:i0 + rows]
+            prompts = np.zeros((rows, bucket), np.int32)
+            true_lens = np.ones((rows,), np.int32)
+            page_ids = np.full((rows, n_pg), PG.GARBAGE_PAGE, np.int32)
+            for i, r in enumerate(chunk):
+                Lp = r.prompt_len
+                prompts[i, :Lp] = r.prompt
+                true_lens[i] = Lp
+                npg = -(-Lp // ps)
+                page_ids[i, :npg] = r.pages[:npg]
+            self._key, sub = jax.random.split(self._key)
+            if draft_fn is not None:
+                _, _, self.caches_draft = draft_fn(
+                    self.params_draft, self.caches_draft,
+                    jnp.asarray(prompts), jnp.asarray(true_lens),
+                    jnp.asarray(page_ids), sub)
+            tok0, ok, caches = fn(
+                self._model(cohort)[0], caches, jnp.asarray(prompts),
+                jnp.asarray(true_lens), jnp.asarray(page_ids), sub)
+            tok0, ok = np.asarray(tok0), np.asarray(ok)
+            for i, r in enumerate(chunk):
+                out[r.rid] = (int(tok0[i]), bool(ok[i]))
+                if draft_fn is not None:
+                    self._spec_primed.add(r.rid)
+            self.counters["bucket_groups"] += 1
+            self.counters["pad_tokens"] += rows * bucket - sum(
+                r.prompt_len for r in chunk)
+        self._set_caches(cohort, caches)
+        return out
+
     def _admit(self, *, count_blocked: bool) -> None:
         degrade = (self.psv.degrade_delta
                    and self.sched.n_queued >= self.psv.degrade_queue_depth)
-        for r in self.sched.admit(self.step_count,
-                                  count_blocked=count_blocked,
-                                  degrade=degrade):
+        admitted = self.sched.admit(self.step_count,
+                                    count_blocked=count_blocked,
+                                    degrade=degrade)
+        pre = self._plan_prefills(admitted)
+        for r in admitted:
+            if r.status in TERMINAL_STATES:
+                continue          # failed by the pass-1 vocab guard
             if r.cohort == COHORT_DEGRADED and not r.preemptions:
                 self.counters["degraded_admissions"] += 1
-            if not self._start(r):
+            if not self._start(r, pre.get(r.rid)):
                 continue
             # "admitted" counts requests that SURVIVED admission (slot
             # linked, prefill guards passed) — a request failed by a guard
@@ -1368,13 +1666,12 @@ class PagedEngine:
         offs = np.zeros((cap,), np.int32)
         for i, (p, o) in enumerate(pairs):
             pages[i], offs[i] = p, o
-        if self._rewind is None:
-            self.telemetry.compile_event(SP.COHORT_SPEC_VERIFY, "rewind",
-                                         cap)
-            self._rewind = jax.jit(PG.rewind_tokens, donate_argnums=(0,))
+        rewind = self._programs.get(
+            SP.COHORT_SPEC_VERIFY, "rewind", cap,
+            lambda: jax.jit(PG.rewind_tokens, donate_argnums=(0,)))
         pg, of = jnp.asarray(pages), jnp.asarray(offs)
-        self.caches = self._rewind(self.caches, pg, of)
-        self.caches_draft = self._rewind(self.caches_draft, pg, of)
+        self.caches = rewind(self.caches, pg, of)
+        self.caches_draft = rewind(self.caches_draft, pg, of)
 
     def _decode_spec(self) -> None:
         """Speculative main-cohort step: ONE fused ``spec_k``-step draft
@@ -1688,7 +1985,8 @@ def make_sharded_serve_step(ms: T.ModelStructure, mesh, sv: ServeConfig,
 def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
                          *, batch: int, prompt_len: int, sp: bool = True,
                          paged: Optional[PagedServeConfig] = None,
-                         paged_slots: Optional[int] = None):
+                         paged_slots: Optional[int] = None,
+                         bucket_rows: Optional[int] = None):
     """jit(shard_map(prefill)) for the ring cache (default), or — with
     ``paged`` — the engine's exact-length prefill + page scatter: the
     forward runs replicated over the sequence (sp off: prompt lengths are
@@ -1696,10 +1994,18 @@ def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
     of the emitted pages into its pool shard, and page ids/slot stay
     host-side and tp-agnostic. ``paged_slots`` overrides the cache tree's
     slot count (cohort-partitioned engines build per-cohort trees).
-    Returns (fn, cache_pspecs, pc)."""
+    ``bucket_rows``: build the BUCKETED batched prefill instead —
+    ``prompt_len`` is the bucket width and the program takes
+    ``[bucket_rows, prompt_len]`` right-padded prompts plus per-row true
+    lengths and page-id rows (same 6-arg arity as the exact program, so
+    the shard specs are shared). Returns (fn, cache_pspecs, pc)."""
     if paged is not None:
         pc = make_context(mesh, sp=False)
-        local = make_paged_prefill_fn(ms, pc, paged, prompt_len)
+        if bucket_rows is not None:
+            local = make_paged_bucket_prefill_fn(ms, pc, paged, prompt_len,
+                                                 bucket_rows)
+        else:
+            local = make_paged_prefill_fn(ms, pc, paged, prompt_len)
         p_specs = T.param_pspecs(ms)
         _, c_specs = PG.paged_cache_meta(
             ms, n_slots=paged_slots or paged.n_slots, n_pages=paged.n_pages,

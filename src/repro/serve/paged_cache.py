@@ -256,6 +256,58 @@ def scatter_prefill(pool: List[Dict], seq: List[Dict], page_ids, slot):
     return out
 
 
+def scatter_prefill_rows(pool: List[Dict], seq: List[Dict], page_ids):
+    """Place a BUCKETED prefill batch's caches into each row's pages in
+    one shot — the batched twin of ``scatter_prefill``.
+
+    pool: the paged cache tree.
+    seq:  a batch-``n_rows`` ring cache tree from the bucket forward
+          (``forward_full(emit_cache=True, max_len=bucket)`` — the bucket
+          is a whole number of pages).
+    page_ids: [n_rows, n_pg] int32. Row i's first ``ceil(true_len_i /
+          page_size)`` entries are its real pages; every PAD entry — the
+          whole-page tail a short prompt does not reach, and every entry
+          of an empty pad row — is ``GARBAGE_PAGE``. Garbage-directed
+          chunks are ZEROED before the scatter, so (a) pad rows write
+          nothing anywhere real, (b) the garbage page stays all-zero (its
+          contract), and (c) the duplicate garbage indices are
+          deterministic — every colliding write stores the same zeros.
+          Positions in a row's LAST real page past its true length
+          receive that row's junk-tail kv, exactly like the exact-length
+          path's emit rounding: safe because they stay masked (pos >
+          horizon) until decode overwrites each in turn.
+
+    Bucketing is attention-only (the engine gates it on the same
+    eligibility as prefix sharing), so there are no slot-state entries to
+    place — a recurrent mixer's state would advance on pad positions with
+    no way to mask the corruption.
+    """
+    n_rows, n_pg = page_ids.shape
+    flat = page_ids.reshape(-1)                      # [n_rows * n_pg]
+    valid = flat != GARBAGE_PAGE
+    out = []
+    for pool_seg, seq_seg in zip(pool, seq):
+        nseg = {}
+        for name, pv in pool_seg.items():
+            assert is_paged_entry(name), (
+                f"{name}: bucketed prefill requires attention-only caches")
+            sv = seq_seg[name]
+            ba = T.cache_batch_axis(name)            # rows at ba, len at ba+1
+            ps = pv.shape[ba + 1]
+            # Merge (rows, len) -> (rows * n_pg, ps): adjacent axes.
+            s = sv.reshape(*sv.shape[:ba], n_rows * n_pg, ps,
+                           *sv.shape[ba + 2:])
+            mask = valid.reshape((1,) * ba + (n_rows * n_pg,)
+                                 + (1,) * (s.ndim - ba - 1))
+            s = jnp.where(mask, s, jnp.zeros((), s.dtype)).astype(pv.dtype)
+            if ba == 2:   # stacked pair entry [count, 2, n_pages, ...]
+                nseg[name] = pv.at[:, :, flat].set(s)
+            else:         # per-layer entry [count, n_pages, ...]
+                nseg[name] = pv.at[:, flat].set(s)
+        out.append(nseg)
+    return out
+
+
 def rewind_tokens(pool: List[Dict], page_ids, offsets):
     """Un-write single token positions: zero ``(page_ids[i], offsets[i])``
     across every paged entry (both halves of a stacked pair at once).

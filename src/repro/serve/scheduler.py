@@ -72,10 +72,11 @@ from __future__ import annotations
 
 from collections import Counter, deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve.bucketing import bucket_for
 from repro.serve.faults import (DeadlineExceededError, InvalidRequestError,
                                 LoadShedError, PageAccountingError,
                                 ServeError, error_kind)
@@ -327,13 +328,19 @@ class Scheduler:
                  max_len: int, prefill_token_budget: int = 4096,
                  prefix_cache: Optional[PrefixCache] = None,
                  preempt_after: int = 0, degrade_slots: int = 0,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 prefill_buckets: Tuple[int, ...] = ()):
         assert 0 <= degrade_slots < n_slots
         self.telemetry = telemetry
         self.pool = pool
         self.page_size = page_size
         self.max_len = max_len
         self.prefill_token_budget = prefill_token_budget
+        # When the engine buckets its cold prefills, the admission budget
+        # must count what the device will actually COMPUTE — the padded
+        # bucket width — or a step could pack more forward rows than the
+        # budget promises to bound.
+        self.prefill_buckets = tuple(prefill_buckets)
         self.prefix_cache = prefix_cache
         self.preempt_after = preempt_after
         self.n_slots = n_slots
@@ -519,8 +526,15 @@ class Scheduler:
                         and cohort == COHORT_MAIN)
             path = self._match_head(r, step) if use_tree else []
             # Cost this step = tokens actually recomputed (suffix forward
-            # rows + decode replay steps), not the full prompt.
+            # rows + decode replay steps), not the full prompt. A cold
+            # admission headed for the bucketed path costs its PADDED
+            # width plus any replay tail — mirror of the engine's bucket
+            # eligibility (ladder on, no radix context, rung holds it).
             cost = len(r.seq_tokens) - len(path) * self.page_size
+            if self.prefill_buckets and not path:
+                b = bucket_for(r.prompt_len, self.prefill_buckets)
+                if b is not None:
+                    cost = b + (len(r.seq_tokens) - r.prompt_len)
             if admitted and cost > budget:
                 break  # prefill/decode interleaving: cap this step's cost
             if not self._try_admit_head(r, path, step, cohort):

@@ -73,6 +73,7 @@ __all__ = [
     "PREEMPTED", "FINISHED", "FAILED", "CANCELLED", "EXPIRED",
     "SPAN_TERMINAL", "SPAN_TRANSITIONS", "DEFAULT_BUCKETS",
     "SpanStateError", "SpanEvent", "RequestSpan", "Histogram", "Telemetry",
+    "ProgramCache",
 ]
 
 # Span states. The terminal four reuse the scheduler's status strings so a
@@ -217,6 +218,48 @@ class Histogram:
                 "count": self.count, "sum": self.sum}
 
 
+class ProgramCache:
+    """ONE cache for every compiled serve program, keyed exactly like
+    telemetry compile events: ``(cohort, program, shape)``.
+
+    Before this class the engine kept per-family dicts and lazy attrs
+    (``self._prefills``, ``self._scrubs``, ``self._decode_draft``, ...),
+    each pairing its own membership test with its own
+    ``compile_event`` call — the accounting could drift from the cache.
+    Here a miss ALWAYS emits the compile event and then builds, so the
+    telemetry compile map is by construction the cache's key census, and
+    the bucket ladder's shapes register through the same single site as
+    everything else.
+    """
+
+    def __init__(self, telemetry: "Telemetry"):
+        self._telemetry = telemetry
+        self._programs: Dict[Tuple[str, str, Any], Any] = {}
+
+    def get(self, cohort: str, program: str, shape, build):
+        """The compiled fn for the key, building (and recording the
+        compile event) on first use. ``build`` is a zero-arg callable
+        returning the jitted fn."""
+        key = (cohort, program, shape)
+        fn = self._programs.get(key)
+        if fn is None:
+            self._telemetry.compile_event(cohort, program, shape)
+            fn = self._programs[key] = build()
+        return fn
+
+    def note(self, cohort: str, program: str, shape) -> None:
+        """Record a compile event for a program that rides inside another
+        key's build (the fused speculative step holds both the draft
+        episode and the wide verify — one build, two program bodies)."""
+        self._telemetry.compile_event(cohort, program, shape)
+
+    def __len__(self) -> int:
+        return len(self._programs)
+
+    def __contains__(self, key) -> bool:
+        return key in self._programs
+
+
 def _percentiles(vals: List[float], qs=(50, 99)) -> List[float]:
     if not vals:
         return [0.0 for _ in qs]
@@ -276,8 +319,10 @@ class Telemetry:
         """Record one compiled-program-cache MISS, keyed ``(cohort,
         program, shape)``. The key is the host-side jit-wrapper cache key
         — a deterministic proxy for an XLA compile (each wrapper compiles
-        on its first call). ``prefill compiles == distinct prompt
-        lengths`` is the bucketed-prefill baseline the CI test pins."""
+        on its first call). The engine's ``ProgramCache`` is the single
+        increment site; bucketed prefill pins ``prefill compiles <=
+        len(bucket ladder)`` per cohort in CI (the pre-bucket baseline
+        was one compile per distinct prompt length)."""
         key = (cohort, program, shape)
         self.compiles[key] = self.compiles.get(key, 0) + 1
 

@@ -1,0 +1,341 @@
+"""Bucketed batched prefill: bit-identity, padding containment, config.
+
+The tentpole contract: an engine that right-pads admitted prompts to a
+bucket ladder and prefills several requests in ONE launch must produce
+per-request greedy streams BIT-identical to the exact-length engine (and
+so to one-shot ``generate()``), while bounding prefill compile count by
+the ladder length. Padding must be contained: pad rows and pad pages
+write nothing into the pool, and the radix tree never sees a padded
+page. The config redesign rides along: grouped sub-configs are pure
+views over the flat fields, and ``validate()`` is the one entry point
+for every cross-field rule.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
+from repro.serve import (AdmissionConfig, DegradeConfig, PagedEngine,
+                         PagedServeConfig, PagePool, ProgramCache,
+                         Scheduler, ServeConfig, SpecConfig, Telemetry,
+                         TelemetryConfig, bucket_for, default_buckets,
+                         generate, make_paged_bucket_prefill_fn,
+                         rows_for_bucket, validate_buckets)
+from repro.serve import paged_cache as PG
+from repro.serve.engine import make_paged_prefill_fn
+
+from _helpers import tiny
+
+KEY = jax.random.PRNGKey(0)
+PC = ParallelContext()
+
+
+def _build(n_layers=2):
+    cfg = tiny(n_layers=n_layers)
+    ms = T.build_structure(cfg, tp=1)
+    return cfg, ms, T.init_params(ms, KEY)
+
+
+def _psv(**kw):
+    base = dict(n_slots=4, page_size=8, n_pages=21, max_len=32,
+                cache_dtype=jnp.float32)
+    base.update(kw)
+    return PagedServeConfig(**base)
+
+
+def _prompt(i, length, vocab):
+    return np.asarray(jax.random.randint(jax.random.fold_in(KEY, i),
+                                         (length,), 0, vocab))
+
+
+# ---------------------------------------------------------------------------
+# Ladder math
+# ---------------------------------------------------------------------------
+
+def test_ladder_math():
+    assert default_buckets(48, 8) == (8, 16, 32, 48)
+    assert default_buckets(32, 8) == (8, 16, 32)
+    assert bucket_for(5, (8, 16)) == 8
+    assert bucket_for(9, (8, 16)) == 16
+    assert bucket_for(17, (8, 16)) is None
+    assert rows_for_bucket(8, 4, 4096) == 4     # slot-capped
+    assert rows_for_bucket(16, 8, 32) == 2      # budget-capped
+    assert rows_for_bucket(64, 8, 32) == 1      # floor: wider than budget
+    validate_buckets((8, 16, 32), page_size=8, max_len=32)
+    with pytest.raises(ValueError, match="strictly increasing"):
+        validate_buckets((16, 8), page_size=8, max_len=32)
+    with pytest.raises(ValueError, match="multiple of"):
+        validate_buckets((8, 12), page_size=8, max_len=32)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        validate_buckets((8, 64), page_size=8, max_len=32)
+
+
+# ---------------------------------------------------------------------------
+# The tentpole bit-identity contract
+# ---------------------------------------------------------------------------
+
+def test_bucketed_engine_matches_exact_engine_staggered():
+    """Staggered arrivals, mixed lengths: the bucketed engine's streams
+    are BIT-identical to the exact-length reference engine's
+    (``prefill_buckets=()``), and page accounting balances in both."""
+    cfg, ms, params = _build()
+    lens = [5, 8, 12, 16, 7, 20, 9, 13]
+    prompts = [_prompt(i, L, cfg.vocab_size) for i, L in enumerate(lens)]
+    engines = [PagedEngine(params, ms, _psv(prefill_buckets=pb))
+               for pb in (None, ())]
+    assert engines[0]._buckets == (8, 16, 32)
+    assert engines[1]._buckets == ()
+    for eng in engines:
+        for p in prompts[:5]:
+            eng.add_request(p, 6)
+        for _ in range(2):
+            eng.step()
+        for p in prompts[5:]:
+            eng.add_request(p, 6)
+        eng.drain()
+        eng.pool.check_balance()
+        assert eng.pool.live == 0
+    bkt, ref = engines
+    assert sorted(bkt.results) == sorted(ref.results)
+    for rid in bkt.results:
+        assert (bkt.results[rid] == ref.results[rid]).all(), rid
+    assert bkt.counters["bucket_prefills"] == len(lens)
+    assert bkt.counters["bucket_groups"] >= 1
+    assert bkt.counters["pad_tokens"] > 0
+    assert ref.counters["bucket_prefills"] == 0
+    # Compile count bounded by the ladder, not by the 7 distinct lengths.
+    bkt_pins = [k for k in bkt.telemetry.compiles if k[1] == "prefill_bucket"]
+    assert 1 <= len(bkt_pins) <= len(bkt._buckets)
+
+
+def test_bucketed_engine_matches_one_shot_generate():
+    cfg, ms, params = _build(n_layers=4)
+    eng = PagedEngine(params, ms, _psv())
+    lens = [6, 11, 8, 14]
+    prompts = [_prompt(i, L, cfg.vocab_size) for i, L in enumerate(lens)]
+    rids = [eng.add_request(p, 5) for p in prompts]
+    eng.drain()
+    sv = ServeConfig(max_len=32, temperature=0.0, cache_dtype=jnp.float32)
+    for rid, p in zip(rids, prompts):
+        ref = np.asarray(generate(params, jnp.asarray(p)[None], 5,
+                                  ms=ms, pc=PC, sv=sv)[0])
+        assert (eng.results[rid] == ref).all(), rid
+
+
+def test_bucket_fn_matches_exact_fn_rowwise():
+    """Program level: one [rows, bucket] launch with right-padded prompts
+    and an inert pad row produces, per real row, the SAME first token and
+    the SAME page bits as the exact-length batch-1 program."""
+    cfg, ms, params = _build()
+    psv = _psv()
+    ps = psv.page_size
+    bucket, rows = 16, 3
+    lens = [9, 16]
+    prompts_np = [_prompt(i, L, cfg.vocab_size) for i, L in enumerate(lens)]
+    key = jax.random.PRNGKey(7)
+
+    fn_b = jax.jit(make_paged_bucket_prefill_fn(ms, PC, psv, bucket, rows))
+    n_pg = bucket // ps
+    prompts = np.zeros((rows, bucket), np.int32)
+    true_lens = np.ones((rows,), np.int32)
+    page_ids = np.full((rows, n_pg), PG.GARBAGE_PAGE, np.int32)
+    pages = [[1, 2], [3, 4]]       # rows 0..1 real, row 2 inert pad
+    for i, (p, L) in enumerate(zip(prompts_np, lens)):
+        prompts[i, :L] = p
+        true_lens[i] = L
+        page_ids[i, :-(-L // ps)] = pages[i][:-(-L // ps)]
+    caches = PG.init_paged_caches(ms, n_slots=psv.n_slots,
+                                  n_pages=psv.n_pages, page_size=ps,
+                                  dtype=psv.cache_dtype)
+    tok_b, ok_b, caches_b = fn_b(params, caches,
+                                 jnp.asarray(prompts),
+                                 jnp.asarray(true_lens),
+                                 jnp.asarray(page_ids), key)
+    assert np.asarray(ok_b).all()
+    for i, (p, L) in enumerate(zip(prompts_np, lens)):
+        fn_e = jax.jit(make_paged_prefill_fn(ms, PC, psv, L))
+        caches_e = PG.init_paged_caches(ms, n_slots=psv.n_slots,
+                                        n_pages=psv.n_pages, page_size=ps,
+                                        dtype=psv.cache_dtype)
+        npg = -(-L // ps)
+        tok_e, _, caches_e = fn_e(params, caches_e,
+                                  jnp.asarray(p[None]),
+                                  jnp.asarray(pages[i][:npg], jnp.int32),
+                                  jnp.int32(i), key)
+        assert int(np.asarray(tok_b)[i]) == int(np.asarray(tok_e)[0])
+        for seg_b, seg_e in zip(caches_b, caches_e):
+            for name in seg_b:
+                if not PG.is_paged_entry(name):
+                    continue
+                ba = T.cache_batch_axis(name)
+                for pg in pages[i][:npg]:
+                    # Bit equality over the page's REAL positions (the
+                    # in-page position axis sits right after the pool's
+                    # page axis); the tail of a partial page holds junk
+                    # kv in the bucketed tree but is never unmasked
+                    # before decode overwrites it.
+                    n_real = min(ps, L - pages[i].index(pg) * ps)
+                    sl = (slice(None),) * ba + (pg, slice(0, n_real))
+                    got = np.asarray(seg_b[name][sl])
+                    want = np.asarray(seg_e[name][sl])
+                    assert (got == want).all(), name
+
+
+def test_scatter_rows_masks_pad_rows_and_pages():
+    """Garbage-directed rows/pages write NOTHING: the garbage page stays
+    zero and no allocatable page moves."""
+    cfg, ms, params = _build()
+    psv = _psv()
+    caches = PG.init_paged_caches(ms, n_slots=psv.n_slots,
+                                  n_pages=psv.n_pages,
+                                  page_size=psv.page_size,
+                                  dtype=psv.cache_dtype)
+    bucket, rows = 16, 2
+    fn = jax.jit(make_paged_bucket_prefill_fn(ms, PC, psv, bucket, rows))
+    prompts = np.zeros((rows, bucket), np.int32)
+    prompts[0, :9] = _prompt(0, 9, cfg.vocab_size)
+    true_lens = np.asarray([9, 1], np.int32)
+    page_ids = np.full((rows, 2), PG.GARBAGE_PAGE, np.int32)
+    page_ids[0] = (5, 6)           # row 1 is ALL pad
+    before = jax.tree.map(np.asarray, caches)
+    _, _, caches = fn(params, caches, jnp.asarray(prompts),
+                      jnp.asarray(true_lens), jnp.asarray(page_ids),
+                      jax.random.PRNGKey(0))
+    for seg_b, seg_a in zip(before, caches):
+        for name in seg_b:
+            if not PG.is_paged_entry(name):
+                continue
+            ba = T.cache_batch_axis(name)
+            after = np.asarray(seg_a[name])
+            for pg in range(psv.n_pages):
+                sl = (slice(None),) * ba + (pg,)
+                if pg in (5, 6):
+                    continue       # the one real row's pages
+                assert (after[sl] == seg_b[name][sl]).all(), (name, pg)
+                if pg == PG.GARBAGE_PAGE:
+                    assert (after[sl] == 0).all(), name
+
+
+def test_radix_never_donates_a_padded_page():
+    """Donation is structural: ``r.pages`` only ever holds the request's
+    ALLOCATED pages (ceil(Lp/ps) of them), so bucket pad pages cannot
+    reach the tree — and a same-prefix follower still bit-matches the
+    exact engine."""
+    cfg, ms, params = _build()
+    lens = [12, 12, 5]             # 12 -> bucket 16: one padded page slot
+    base = _prompt(0, 12, cfg.vocab_size)
+    prompts = [base, base, _prompt(2, 5, cfg.vocab_size)]
+    engines = [PagedEngine(params, ms,
+                           _psv(prefix_cache=True, prefill_buckets=pb))
+               for pb in (None, ())]
+    for eng in engines:
+        rids = [eng.add_request(p, 4) for p in prompts]
+        eng.drain()
+        if eng._buckets:
+            # Every radix-held page id was allocated for REAL prompt
+            # tokens — donation only ever considers len(tokens)//ps WHOLE
+            # prompt pages, so a bucket's padded page slots (GARBAGE ids,
+            # never allocated) are structurally unreachable.
+            held = set()
+            stack = list(eng.prefix.root.children.values())
+            while stack:
+                n = stack.pop()
+                held.add(n.page)
+                stack.extend(n.children.values())
+            assert PG.GARBAGE_PAGE not in held
+            assert len(held) <= 2          # 12//8 + 5//8 whole pages
+    bkt, ref = engines
+    for rid in bkt.results:
+        assert (bkt.results[rid] == ref.results[rid]).all(), rid
+    assert bkt.counters["prefix_hits"] == ref.counters["prefix_hits"]
+
+
+# ---------------------------------------------------------------------------
+# Scheduler: the budget counts what the device computes
+# ---------------------------------------------------------------------------
+
+def test_scheduler_budget_counts_padded_tokens():
+    def mk(buckets):
+        pool = PagePool(9)
+        s = Scheduler(n_slots=4, pool=pool, page_size=8, max_len=32,
+                      prefill_token_budget=20, prefill_buckets=buckets)
+        for i in range(2):
+            s.submit(np.zeros(9, np.int32), 2, -1)
+        return s
+
+    exact = mk(())
+    assert len(exact.admit(0)) == 2        # 9 + 9 <= 20
+    padded = mk((16,))
+    # First admission ignores the budget (anti-livelock), but its PADDED
+    # cost (16) leaves only 4 — the second 16-wide admission must wait.
+    assert len(padded.admit(0)) == 1
+
+
+# ---------------------------------------------------------------------------
+# Config groups + ProgramCache
+# ---------------------------------------------------------------------------
+
+def test_config_groups_are_views_over_flats():
+    flat = PagedServeConfig(n_slots=4, page_size=8, n_pages=9, max_len=32,
+                            prefill_token_budget=64, max_queue=3,
+                            degrade_delta=True, degrade_slots=1,
+                            degrade_queue_depth=2, degrade_eff_depth=2,
+                            telemetry=False, profile_decode=True)
+    grouped = PagedServeConfig(
+        n_slots=4, page_size=8, n_pages=9, max_len=32,
+        admission=AdmissionConfig(prefill_token_budget=64, max_queue=3),
+        degrade=DegradeConfig(enabled=True, slots=1, queue_depth=2,
+                              eff_depth=2),
+        telemetry_cfg=TelemetryConfig(enabled=False, profile_decode=True))
+    assert flat == grouped
+    assert grouped.degrade_slots == 1 and grouped.max_queue == 3
+    assert flat.admission == AdmissionConfig(prefill_token_budget=64,
+                                             max_queue=3)
+    spec = PagedServeConfig(n_slots=4, page_size=8, n_pages=9, max_len=32,
+                            spec=SpecConfig(k=2, delta=3))
+    assert spec.spec_k == 2 and spec.spec_delta == 3
+    spec.validate()
+
+
+def test_validate_is_the_single_entry_point():
+    def cfg(**kw):
+        return _psv(**kw)
+
+    with pytest.raises(ValueError, match="whole number of pages"):
+        cfg(max_len=20).validate()
+    with pytest.raises(ValueError, match="n_slots=0 must be >= 1"):
+        cfg(n_slots=0).validate()
+    with pytest.raises(ValueError, match="without spec_k"):
+        cfg(spec_delta=3).validate()
+    with pytest.raises(ValueError, match="without degrade_delta"):
+        cfg(degrade_slots=1).validate()
+    with pytest.raises(ValueError, match="tp=1-only"):
+        cfg(spec_k=2, spec_delta=3).validate(mesh=True)
+    with pytest.raises(ValueError, match="multiple of"):
+        cfg(prefill_buckets=(8, 12)).validate()
+    # The engine routes through validate(): a bad ladder dies in __init__.
+    cfg_bad = cfg(prefill_buckets=(12,))
+    _, ms, params = _build()
+    with pytest.raises(ValueError, match="multiple of"):
+        PagedEngine(params, ms, cfg_bad)
+
+
+def test_program_cache_single_increment_site():
+    tel = Telemetry()
+    pc = ProgramCache(tel)
+    built = []
+
+    def build():
+        built.append(1)
+        return "fn"
+
+    assert pc.get("main", "decode", 4, build) == "fn"
+    assert pc.get("main", "decode", 4, build) == "fn"
+    assert built == [1]                       # one build...
+    assert tel.compiles[("main", "decode", 4)] == 1   # ...one event
+    assert ("main", "decode", 4) in pc and len(pc) == 1
+    pc.note("spec_verify", "decode", 8)       # fused-program second body
+    assert tel.compiles[("spec_verify", "decode", 8)] == 1
+    assert len(pc) == 1                       # note() caches nothing

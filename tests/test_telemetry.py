@@ -188,16 +188,26 @@ def test_engine_spans_snapshot_and_trace():
     assert {"slot", "request", "lifecycle"} <= cats
 
 
-def test_compile_counter_pins_prefill_compiles_to_distinct_lengths():
+def test_compile_counter_pins_prefill_compiles_to_bucket_ladder():
+    # Bucketed prefill bounds compile count by the LADDER length, not by
+    # distinct arrival lengths: lengths (8, 16, 8, 16, 8) land on rungs 8
+    # and 16 of the auto ladder (8, 16, 32), each compiled exactly once
+    # at the program's fixed row count. (Pre-bucketing this test pinned
+    # one "prefill_full" program per distinct length.)
     cfg, ms, params = _build()
     eng = PagedEngine(params, ms, _psv())
+    assert eng._buckets == (8, 16, 32)
     for i, L in enumerate((8, 16, 8, 16, 8)):   # two DISTINCT lengths
         eng.add_request(_prompt(i, L, cfg.vocab_size), 2)
     eng.drain()
     prefills = {k: n for k, n in eng.telemetry.compiles.items()
-                if k[1] == "prefill_full"}
-    assert prefills == {("main", "prefill_full", 8): 1,
-                        ("main", "prefill_full", 16): 1}
+                if k[1] == "prefill_bucket"}
+    assert set(prefills) == {("main", "prefill_bucket", (8, 2)),
+                             ("main", "prefill_bucket", (16, 2))}
+    assert all(n == 1 for n in prefills.values())
+    assert len(prefills) <= len(eng._buckets)
+    assert not any(k[1] == "prefill_full"
+                   for k in eng.telemetry.compiles)
     assert eng.telemetry.compiles[("main", "decode", 2)] == 1
 
 
