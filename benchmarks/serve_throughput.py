@@ -13,10 +13,10 @@ page pool, and finish independently. Reported per run:
 
 Latency/TTFT/occupancy/prefix numbers all come from
 ``engine.metrics_snapshot()`` — the telemetry subsystem's span-derived
-percentiles — not from benchmark-side timestamp dicts. The serve-structural
-gate runs the retired host-side bookkeeping ONE more time alongside and
-asserts the snapshot agrees (``_drive(..., legacy_check=True)``), which is
-what licensed deleting it everywhere else.
+percentiles — not from benchmark-side timestamp dicts. (The pre-telemetry
+host-side bookkeeping that once cross-checked the snapshot is gone: it
+rode along as ``_drive(..., legacy_check=True)`` for two PRs of overlap
+and the snapshot never drifted.)
 
 ``--shared-prefix`` switches to deployment-shaped traffic: N request
 families share a per-family system prompt (whole cache pages), exercising
@@ -62,8 +62,6 @@ asserts the subsystem's invariants instead:
       registry is pure host bookkeeping and observing a run may never
       change it (launch counts are a per-PROGRAM property gated in (a);
       telemetry never enters a traced function, so they cannot move);
-  (q) the telemetry-derived latency/TTFT/occupancy agree with the retired
-      host-side bookkeeping (one-time legacy cross-check);
   (r) ``engine.dump_trace`` writes valid Chrome trace_event JSON
       (results/trace_structural.json, uploaded as a CI artifact).
 ``--structural --mesh 1x2`` (the sharded-structural CI gate, needs
@@ -73,8 +71,21 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8) runs the tp>1 half:
   (h) page accounting balance is tp-invariant (same host-side scheduler);
   (i) the tp>1 engine's staggered greedy streams are bit-identical to the
       tp=1 engine AND to one-shot ``sharded_generate`` per request;
-  (j) the prefix cache auto-disables under tp>1 (radix-aware sharded
-      serving is a ROADMAP follow-on).
+  (j) the prefix cache STAYS ON under tp>1 (``prefix_cache=True`` builds a
+      live radix tree under the mesh engine, same as tp=1).
+``--structural --shared-prefix --mesh 1x2`` (sharded-prefix CI gate) runs
+the family workload through the SHARDED engine with the radix cache on:
+  (z) measured hit_rate > 0 and prefix_hits > 0 on the tp>1 engine —
+      suffix prefills ride the per-row ctx-gather bucket path;
+  (z2) every request's greedy stream is bit-identical to the tp=1
+      prefix-ON engine on the same arrivals (hit, cold, and resumed rows
+      alike — the per-row ctx gather is bit-transparent);
+  (z3) page accounting balances and drains to the radix tree's residents,
+      tp-invariantly;
+  (z4) prefill compile count stays <= the bucket ladder length even with
+      heterogeneous (ctx_pages, suffix_len) rows sharing launches — the
+      carve-out that previously sent radix hits down the exact-length
+      path is closed.
 
 ``--chaos`` (the chaos-structural CI gate) runs the hardening soak:
   (k) >= 200 engine steps under a seeded FaultPlan firing all five fault
@@ -195,6 +206,11 @@ BENCH_PREFILL_KEYS = frozenset({"ttft_p50_ms", "ttft_p99_ms",
                                 "bucket_groups", "bucket_prefills",
                                 "pad_tokens", "compiles_prefill",
                                 "exact_compiles_prefill", "n_buckets"})
+BENCH_SHARDED_PREFIX_KEYS = frozenset({"hit_rate", "prefix_hits",
+                                       "prefill_tokens", "hit_tokens",
+                                       "suffix_prefills",
+                                       "compiles_prefill", "n_buckets",
+                                       "tp"})
 
 
 def _check_bench_schema(data: dict) -> None:
@@ -209,11 +225,13 @@ def _check_bench_schema(data: dict) -> None:
             required = BENCH_DRIVE_KEYS | BENCH_SPEC_KEYS
         elif section == "prefill_batch":
             required = BENCH_PREFILL_KEYS
+        elif section == "sharded_prefix":
+            required = BENCH_DRIVE_KEYS | BENCH_SHARDED_PREFIX_KEYS
         else:
             raise AssertionError(
                 f"BENCH_serve.json schema drift: unknown section "
                 f"{section!r} (known: tpN / shared_prefix / chaos / spec "
-                f"/ prefill_batch)")
+                f"/ prefill_batch / sharded_prefix)")
         missing = required - payload.keys()
         assert not missing, (
             f"BENCH_serve.json schema drift: section {section!r} lost "
@@ -329,36 +347,19 @@ def _shared_prefix_workload(cfg, rate: float, seed: int = 17):
     return reqs
 
 
-def _drive(eng: PagedEngine, reqs, *, legacy_check: bool = False):
+def _drive(eng: PagedEngine, reqs):
     """Run the arrival schedule to drain; per-request metrics (latency +
     TTFT percentiles, occupancy) come from ``engine.metrics_snapshot()``
-    — the span-derived telemetry path. ``legacy_check=True`` ALSO runs
-    the retired host-side timestamp bookkeeping and asserts the snapshot
-    agrees (gate (q); the serve-structural run flips it once)."""
-    legacy = ({"submit": {}, "first": {}, "finish": {}, "occ": []}
-              if legacy_check else None)
+    — the span-derived telemetry path."""
     rids = []
     nxt = 0
     t0 = time.perf_counter()
     while nxt < len(reqs) or eng.sched.n_queued or eng.sched.n_running:
         while nxt < len(reqs) and reqs[nxt][0] <= eng.step_count:
             _, prompt, max_new = reqs[nxt]
-            rid = eng.add_request(prompt, max_new)
-            rids.append(rid)
-            if legacy is not None:
-                legacy["submit"][rid] = time.perf_counter()
+            rids.append(eng.add_request(prompt, max_new))
             nxt += 1
-        done_before = set(eng.results) if legacy is not None else ()
         eng.step()
-        if legacy is not None:
-            legacy["occ"].append(eng.occupancy)
-            now = time.perf_counter()
-            for rid in rids:
-                if rid not in legacy["first"] and \
-                        len(eng.request(rid).out) > 0:
-                    legacy["first"][rid] = now
-            for rid in set(eng.results) - done_before:
-                legacy["finish"][rid] = now
     wall = time.perf_counter() - t0
     tokens = sum(len(eng.results[r]) for r in rids)
     snap = eng.metrics_snapshot()
@@ -376,30 +377,7 @@ def _drive(eng: PagedEngine, reqs, *, legacy_check: bool = False):
         "occ_max": occ["max"],
         "steps": eng.step_count,
     }
-    if legacy is not None:
-        _assert_legacy_agreement(m, legacy, rids)
     return m
-
-
-def _assert_legacy_agreement(m: dict, legacy: dict, rids) -> None:
-    """Gate (q): the telemetry percentiles vs the pre-telemetry host-side
-    bookkeeping. The two stamp the SAME engine step from opposite sides of
-    a few Python statements (telemetry inside submit/step, the legacy loop
-    right after), so wall values agree to well under the 10 ms tolerance;
-    occupancy uses the identical per-step pool reads and must agree to
-    rounding."""
-    lat = np.array([legacy["finish"][r] - legacy["submit"][r] for r in rids])
-    ttft = np.array([legacy["first"][r] - legacy["submit"][r] for r in rids])
-    ref = {
-        "lat_p50_ms": float(np.percentile(lat, 50)) * 1e3,
-        "lat_p99_ms": float(np.percentile(lat, 99)) * 1e3,
-        "ttft_p50_ms": float(np.percentile(ttft, 50)) * 1e3,
-        "ttft_p99_ms": float(np.percentile(ttft, 99)) * 1e3,
-    }
-    for k, v in ref.items():
-        assert abs(m[k] - v) <= 10.0, ("telemetry vs legacy", k, m[k], v)
-    assert abs(m["occ_mean"] - float(np.mean(legacy["occ"]))) <= 1e-3
-    assert abs(m["occ_max"] - float(np.max(legacy["occ"]))) <= 1e-3
 
 
 def _prefix_stats(eng: PagedEngine) -> dict:
@@ -467,7 +445,7 @@ def structural() -> dict:
                            cache_dtype=jnp.float32)
     eng = PagedEngine(params, ms, psv)
     reqs = _workload(cfg, 12, rate=4.0)
-    m = _drive(eng, reqs, legacy_check=True)   # (q) once, here
+    m = _drive(eng, reqs)
     assert eng.pool.live == 0
     assert eng.pool.allocated_total == eng.pool.freed_total > 0
     sv = ServeConfig(max_len=MAX_LEN, temperature=0.0,
@@ -653,19 +631,100 @@ def structural_sharded(mesh_spec: str = "1x2", seed: int = 17) -> dict:
                                mesh=mesh, sv=sv)[0]
         assert (eng2.results[rid] == ref).all(), rid
 
-    # (j) prefix sharing auto-disables under tp>1 (and stays on at tp=1).
+    # (j) prefix sharing stays ON under tp>1 — the radix tree builds under
+    # the mesh engine exactly as at tp=1 (the full sharded-prefix workload
+    # gate is structural_sharded_prefix; this is the cheap config check).
     psv_px = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
                               n_pages=N_PAGES, max_len=MAX_LEN,
                               cache_dtype=jnp.float32, prefix_cache=True)
-    assert PagedEngine(params, ms_tp, psv_px, mesh=mesh).prefix is None
+    assert PagedEngine(params, ms_tp, psv_px, mesh=mesh).prefix is not None
     assert PagedEngine(params, ms1, psv_px).prefix is not None
 
     out = {"mesh": mesh_spec, "rows": rows, "tp1": m1, f"tp{m}": m2}
     print(f"sharded-structural OK (mesh {mesh_spec}): launches==groups "
           f"{rows} | {len(reqs)} staggered requests bit-identical at "
-          f"tp={m} vs tp=1 vs sharded one-shot | prefix auto-disabled")
+          f"tp={m} vs tp=1 vs sharded one-shot | prefix cache live "
+          f"under the mesh")
     _bench_summary(f"tp{m}", _drive_summary(m2))
     C.save_result("serve_throughput_sharded", {"structural": out})
+    return out
+
+
+def structural_sharded_prefix(mesh_spec: str = "1x2",
+                              seed: int = 17) -> dict:
+    """The sharded-prefix CI gate — module docstring items (z)-(z4): the
+    family workload through the SHARDED engine with the radix cache ON.
+    Radix-hit members prefill only their suffix via the per-row ctx-page
+    gather on the bucket path; everything must stay bit-identical to the
+    tp=1 prefix-on engine."""
+    mesh, m = make_serving_mesh(mesh_spec)
+    assert m > 1, (
+        f"--shared-prefix --mesh needs a model axis > 1, got {mesh_spec}")
+
+    cfg, ms1, params = _build(3, tp=1)
+    _, ms_tp = _structure(3, tp=m)
+    psv = PagedServeConfig(n_slots=N_SLOTS, page_size=PAGE_SIZE,
+                           n_pages=N_PAGES, max_len=MAX_LEN,
+                           cache_dtype=jnp.float32, prefix_cache=True)
+    reqs = _shared_prefix_workload(cfg, rate=1.0, seed=seed)
+
+    # tp=1 prefix-ON reference (its own bit-identity to one-shot generate
+    # is gated by structural_shared_prefix; here it anchors the tp sweep).
+    eng1 = PagedEngine(params, ms1, psv)
+    m1 = _drive(eng1, reqs)
+    s1 = _prefix_stats(eng1)
+
+    eng2 = PagedEngine(params, ms_tp, psv, mesh=mesh)
+    m2 = _drive(eng2, reqs)
+    s2 = _prefix_stats(eng2)
+
+    # (z) the sharded radix tree actually hit, and hit members prefilled
+    # only their suffix — sharing works under the mesh, not merely "on".
+    assert eng2.prefix is not None
+    assert s2["prefix_hits"] > 0, s2
+    assert s2["hit_rate"] > 0, s2
+    assert eng2.counters["suffix_prefills"] > 0, dict(eng2.counters)
+    # Sharing decisions are host-side and tp-invariant: identical stats.
+    assert s2 == s1, (s2, s1)
+
+    # (z2) per-request greedy streams bit-identical to the tp=1 engine.
+    assert sorted(eng2.results) == sorted(eng1.results)
+    for rid in sorted(eng1.results):
+        assert (eng2.results[rid] == eng1.results[rid]).all(), rid
+    assert eng2.step_count == eng1.step_count
+
+    # (z3) page accounting balances and drains to the tree's residents,
+    # tp-invariantly.
+    assert eng2.pool.live == eng2.prefix.resident_pages
+    eng2.pool.check_balance()
+    assert eng2.pool.allocated_total == eng1.pool.allocated_total
+    assert eng2.pool.freed_total == eng1.pool.freed_total
+
+    # (z4) heterogeneous (ctx_pages, suffix_len) rows shared launches: the
+    # prefill compile count stays bounded by the LADDER — no exact-length
+    # suffix program, no exact-length full program, on either engine.
+    for eng in (eng1, eng2):
+        bucket_compiles = [k for k in eng.telemetry.compiles
+                           if k[1] == "prefill_bucket"]
+        assert 0 < len(bucket_compiles) <= len(eng._buckets), bucket_compiles
+        assert not any(k[1] in ("prefill_full", "prefill_suffix")
+                       for k in eng.telemetry.compiles), (
+            dict(eng.telemetry.compiles))
+
+    out = {"mesh": mesh_spec, "tp1": dict(m1, **s1), f"tp{m}": dict(m2, **s2)}
+    print(f"sharded-prefix OK (mesh {mesh_spec}): hit_rate={s2['hit_rate']} "
+          f"hits={s2['prefix_hits']} suffix_prefills="
+          f"{eng2.counters['suffix_prefills']} | {len(reqs)} family "
+          f"requests bit-identical at tp={m} vs tp=1 (prefix ON both) | "
+          f"prefill compiles <= ladder on both engines")
+    _bench_summary("sharded_prefix", _drive_summary(
+        m2, hit_rate=s2["hit_rate"], prefix_hits=s2["prefix_hits"],
+        prefill_tokens=s2["prefill_tokens"], hit_tokens=s2["hit_tokens"],
+        suffix_prefills=int(eng2.counters["suffix_prefills"]),
+        compiles_prefill=sum(1 for k in eng2.telemetry.compiles
+                             if k[1] == "prefill_bucket"),
+        n_buckets=len(eng2._buckets), tp=m))
+    C.save_result("serve_throughput_sharded_prefix", {"structural": out})
     return out
 
 
@@ -1153,9 +1212,11 @@ def run(structural_only: bool = False, *, n_requests: int = 32,
         raise SystemExit("--spec-k is a structural gate; add --structural")
     if structural_only:
         # --structural, --structural --shared-prefix, --structural
-        # --mesh AxB and --structural --spec-k K are SEPARATE CI steps;
-        # each gates only its own half so no job pays another's
-        # assertions twice.
+        # --mesh AxB (plus --shared-prefix for the sharded-prefix gate)
+        # and --structural --spec-k K are SEPARATE CI steps; each gates
+        # only its own half so no job pays another's assertions twice.
+        if mesh and shared_prefix:
+            return structural_sharded_prefix(mesh, seed)
         if mesh:
             return structural_sharded(mesh, seed)
         if spec_k:
@@ -1238,7 +1299,9 @@ if __name__ == "__main__":
     ap.add_argument("--shared-prefix", action="store_true",
                     help="family traffic with shared system prompts; with "
                          "--structural also gates hit-rate, prefill-token "
-                         "reduction, and preempt-resume bit-identity")
+                         "reduction, and preempt-resume bit-identity; "
+                         "combined with --mesh 1xM it is the sharded-"
+                         "prefix gate (radix cache ON under tp=M)")
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--rate", type=float, default=2.0,
                     help="Poisson arrival rate, requests per engine step")

@@ -83,8 +83,8 @@ def main() -> None:
     ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="(--continuous) radix prefix sharing over whole "
-                         "cache pages (--no-prefix-cache disables; "
-                         "auto-disabled under tp > 1)")
+                         "cache pages, tp=1 and sharded --mesh engines "
+                         "alike (--no-prefix-cache disables)")
     ap.add_argument("--deadline-steps", type=int, default=0,
                     help="(--continuous) per-request deadline, engine "
                          "steps after submission; overrun requests EXPIRE "

@@ -120,11 +120,16 @@ def attn_template(cfg, tp: int, *, cross: bool = False):
 # ---------------------------------------------------------------------------
 
 def tile_mask(kind: str, qpos, kpos, *, window=0, chunk=0, prefix_len=0):
-    """Boolean allowed-mask for absolute q positions x k positions."""
-    q = qpos[:, None]
+    """Boolean allowed-mask for absolute q positions x k positions.
+
+    ``qpos`` may be [qb] (one offset for the whole batch) or [B, qb]
+    (per-row offsets — the bucketed radix-suffix path, where every row
+    starts at its own ctx length); the mask is [qb, kb] or [B, qb, kb]
+    respectively."""
+    q = qpos[..., None]
     k = kpos[None, :]
     if kind == "attn_bidir":
-        return jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+        return jnp.ones(qpos.shape + kpos.shape, bool)
     causal = k <= q
     if kind in ("attn", "attn_global"):
         if prefix_len:
@@ -172,7 +177,12 @@ def _chunked_core(q, k, v, *, kind, window, chunk, prefix_len, q0, k0,
     total padded length is. That makes right-padding the key axis BIT-
     TRANSPARENT for rows below the true length — the property the serve
     engine's bucketed prefill leans on (masked pad lanes carry finite
-    values, so ``0 * v`` is exactly 0)."""
+    values, so ``0 * v`` is exactly 0).
+
+    ``q0`` may be an [B]-shaped array of PER-ROW offsets (the bucketed
+    radix-suffix path: row i's queries start at its own ctx length); the
+    mask then resolves per row while the tile schedule — and with
+    ``fixed_kb`` the reduction grouping — stays row-independent."""
     B, S0, Hk, g, hd = q.shape
     T0 = k.shape[1]
     qb = min(qb, S0)
@@ -194,20 +204,25 @@ def _chunked_core(q, k, v, *, kind, window, chunk, prefix_len, q0, k0,
     kt = k.reshape(B, nk, kb, Hk, hd).transpose(1, 0, 3, 2, 4)        # [nk,B,Hk,kb,hd]
     vt = v.reshape(B, nk, kb, Hk, hd).transpose(1, 0, 3, 2, 4)
 
+    per_row = getattr(q0, "ndim", 0) > 0   # q0 is [B]: per-row offsets
+
     def q_step(_, qi_and_tile):
         qi, qtile = qi_and_tile
-        qpos = q0 + qi * qb + jnp.arange(qb)
+        base = q0[:, None] if per_row else q0
+        qpos = base + qi * qb + jnp.arange(qb)   # [qb] or [B,qb]
 
         def kv_step(carry, ki_and_tiles):
             m, l, acc = carry
             ki, ktile, vtile = ki_and_tiles
             kpos = k0 + ki * kb + jnp.arange(kb)
             msk = tile_mask(kind, qpos, kpos, window=window, chunk=chunk,
-                            prefix_len=prefix_len)  # [qb,kb]
+                            prefix_len=prefix_len)  # [qb,kb] or [B,qb,kb]
             msk = msk & (kpos < k_limit)[None, :]   # kv padding columns
             s = jnp.einsum("bngqh,bnkh->bngqk", qtile.astype(jnp.float32),
                            ktile.astype(jnp.float32)) * scale
-            s = s + jnp.where(msk, 0.0, NEG_INF)[None, None, None, :, :]
+            bias = jnp.where(msk, 0.0, NEG_INF)
+            s = s + (bias[:, None, None, :, :] if per_row
+                     else bias[None, None, None, :, :])
             m_new = jnp.maximum(m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(m - m_new)
@@ -237,6 +252,13 @@ def attention_core(q, k, v, *, kind, window=0, chunk=0, prefix_len=0,
                    q0=0, k0=0, impl="auto", qb=512, kb=1024):
     B, S, Hk, g, hd = q.shape
     T = k.shape[1]
+    if getattr(q0, "ndim", 0) > 0 and not impl.startswith("chunked:"):
+        # Per-row offsets are only wired through the pinned-tile chunked
+        # core (the serve prefill impl); the dense/pallas paths would
+        # silently build a single shared mask from the wrong-rank qpos.
+        raise NotImplementedError(
+            f"per-row q0 requires a pinned chunked impl ('chunked:<kb>'), "
+            f"got impl={impl!r}")
     if impl.startswith("chunked:"):
         # Pinned kv tile width ("chunked:16" -> kb=16, never clamped to T):
         # the serve prefill path uses this so bucket-padded and exact-length

@@ -163,6 +163,30 @@ def attention_phase_full(gp, xn, cfg, dims, pc, *, group: Group, positions,
             cks, cvs = _fold_ctx_kv(ctx_kv, dims, pc, group=group)
             ks = jnp.concatenate([cks.astype(ks.dtype), ks], axis=1)
             vs = jnp.concatenate([cvs.astype(vs.dtype), vs], axis=1)
+            if getattr(q0, "ndim", 0) > 0:
+                # Per-row ctx lengths (bucketed radix-suffix rows): row i's
+                # REAL context is its first q0[i] positions of the
+                # Tc-padded ctx block; the rest is garbage-page filler.
+                # Rearrange each row's key axis to [real ctx | suffix |
+                # junk] so every real key sits at its absolute position —
+                # junk lands at kpos >= q0[i] + S, PAST the row's last
+                # query (q0[i] + S - 1), where the ordinary causal mask
+                # kills it. With the pinned-kv-tile chunked core the junk
+                # columns are then bit-transparent exactly like bucket
+                # padding (finite masked lanes contribute exact zeros), so
+                # a ctx row reduces identically to the cold full-prompt
+                # program and a ctx-less row (q0[i] = 0, all-junk tail) is
+                # bit-identical to the plain bucket program.
+                assert attn_impl.startswith("chunked:"), (
+                    "per-row ctx lengths require the pinned-tile chunked "
+                    f"attention impl, got {attn_impl!r}")
+                Tc, Tt = cks.shape[1], ks.shape[1]
+                j = jnp.arange(Tt)[None, :]
+                c = q0[:, None]
+                idx = jnp.where(j < c, j,
+                                jnp.where(j < c + S, Tc + (j - c), j - S))
+                ks = jnp.take_along_axis(ks, idx[:, :, None, None], axis=1)
+                vs = jnp.take_along_axis(vs, idx[:, :, None, None], axis=1)
             # Materialise the concatenated kv: otherwise XLA splits the
             # value contraction through the concat (p@[v_ctx;v_sfx] ->
             # p1@v_ctx + p2@v_sfx), regrouping the float accumulation and
@@ -224,18 +248,44 @@ def _fold_ctx_kv(ctx_kv, dims, pc, *, group: Group):
     ``_sel_pairwise`` produces for fresh projections, so a suffix forward can
     concatenate context before suffix keys along the length axis. Keys in the
     cache are already roped; the pair fold is pair-major, matching
-    ``_sel_pairwise``'s [B,S,2,hkv,...] reshape."""
+    ``_sel_pairwise``'s [B,S,2,hkv,...] reshape.
+
+    Per-rank branch (tp > 1): a kv-SHARDED pool's ``gather_ctx`` hands each
+    rank its LOCAL head shard inside shard_map, so the fold is the identity
+    on the head axis; a REPLICATED pool (n_kv < tp) hands every rank all
+    stored heads, and the rank in-gathers its own head(s) here — the same
+    selection the paged decode kernel performs in-kernel via
+    ``paged_head_map``. Either way the folded head count must equal
+    ``core_layout``'s per-rank count — audited at trace time so a
+    mis-sharded ctx tree fails loudly instead of reducing at a different
+    shape than the cold full-prompt program (bit-identity is the
+    contract)."""
+    Hk_eff, _ = A.core_layout(dims)
     if pair_cache_stacked(group):
         ck, cv = ctx_kv["k"], ctx_kv["v"]              # [2,B,Tc,hkv,hd]
-        ks = A.select_local_kv_pair(ck, dims, pc)
-        vs = A.select_local_kv_pair(cv, dims, pc)
+        if dims.kv_sharded or dims.tp == 1:
+            ks, vs = ck, cv                            # already rank-local
+        else:
+            ks = A.select_local_kv_pair(ck, dims, pc)  # in-gather this rank
+            vs = A.select_local_kv_pair(cv, dims, pc)
+        assert ks.shape[3] == Hk_eff, (
+            f"ctx kv folds to {ks.shape[3]} heads per pair half but the "
+            f"attention core reduces over {Hk_eff}: the gathered ctx tree "
+            "does not match this rank's kv layout")
         B, Tc, Hk = ks.shape[1], ks.shape[2], ks.shape[3]
         ks = jnp.moveaxis(ks, 0, 2).reshape(B, Tc, 2 * Hk, dims.hd)
         vs = jnp.moveaxis(vs, 0, 2).reshape(B, Tc, 2 * Hk, dims.hd)
         return ks, vs
     assert not group.pair, "heterogeneous pairs have no stored ctx layout"
-    ks = A.select_local_kv(ctx_kv["k0"], dims, pc)     # [B,Tc,hkv,hd]
-    vs = A.select_local_kv(ctx_kv["v0"], dims, pc)
+    if dims.kv_sharded or dims.tp == 1:
+        ks, vs = ctx_kv["k0"], ctx_kv["v0"]            # [B,Tc,hkv,hd]
+    else:
+        ks = A.select_local_kv(ctx_kv["k0"], dims, pc)
+        vs = A.select_local_kv(ctx_kv["v0"], dims, pc)
+    assert ks.shape[2] == Hk_eff, (
+        f"ctx kv folds to {ks.shape[2]} heads but the attention core "
+        f"reduces over {Hk_eff}: the gathered ctx tree does not match "
+        "this rank's kv layout")
     return ks, vs
 
 

@@ -223,7 +223,10 @@ def forward_full(params, tokens, *, ms: ModelStructure, pc: ParallelContext,
     layer layout of the emitted caches). Every suffix row attends over
     exactly ``start + S`` keys — the reduction shape the full-prompt
     forward gives the same row, which keeps suffix prefill bit-identical
-    to cold prefill. Attention-only; the emitted cache covers only the
+    to cold prefill. ``start`` may be a [B] array of PER-ROW context
+    lengths (bucketed radix-hit prefill: each row's suffix begins at its
+    own ctx length; requires the pinned-tile chunked ``attn_impl``).
+    Attention-only; the emitted cache covers only the
     suffix (length ``max_len``, local 0 == absolute ``start``).
     """
     cfg = ms.cfg
@@ -233,7 +236,13 @@ def forward_full(params, tokens, *, ms: ModelStructure, pc: ParallelContext,
         assert prefix_len == 0 and enc_frames is None, \
             "suffix prefill does not compose with prefix-LM/encoder inputs"
     S = S_text + prefix_len
-    positions = start + jnp.arange(S)[None, :]
+    if getattr(start, "ndim", 0) > 0:
+        # Per-row suffix offsets (bucketed radix-hit prefill): row i's
+        # suffix begins at its own ctx length. A bare broadcast would
+        # mis-align [B] against the length axis, so shape it explicitly.
+        positions = start[:, None] + jnp.arange(S)[None, :]
+    else:
+        positions = start + jnp.arange(S)[None, :]
 
     x = _embed(params, tokens, cfg, pc,
                positions=positions[:, prefix_len:])

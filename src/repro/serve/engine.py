@@ -70,7 +70,11 @@ its kv-head axis over the "model" axis exactly like the ring cache, every
 host-side structure (scheduler, block tables, positions, page ids) is
 tp-agnostic, and greedy decode streams stay bit-identical to the tp=1
 engine and to one-shot ``sharded_generate`` (the sharded-structural CI
-gate). Prefix sharing auto-disables under tp > 1 for now.
+gate). Prefix sharing runs under tp > 1 too: the suffix-prefill ctx fold
+branches per rank (kv-sharded pool: the gathered ctx arrives rank-local;
+replicated pool: the rank in-gathers its head(s) like the paged decode
+kernel), so radix hits keep their ~10x TTFT win exactly where production
+runs — gated by the sharded-structural shared-prefix job.
 """
 from __future__ import annotations
 
@@ -338,9 +342,11 @@ def make_paged_prefill_fn(ms: T.ModelStructure, pc: ParallelContext, psv,
 
 
 def make_paged_bucket_prefill_fn(ms: T.ModelStructure, pc: ParallelContext,
-                                 psv, bucket: int, rows: int):
+                                 psv, bucket: int, rows: int,
+                                 ctx_pages: int = 0):
     """Bucketed batched prefill + masked page scatter: (params, caches,
-    prompts [rows, bucket], true_lens [rows], page_ids [rows, n_pg], key)
+    prompts [rows, bucket], true_lens [rows], page_ids [rows, n_pg],
+    [ctx_ids [rows, ctx_pages], ctx_lens [rows],] key)
     -> (first_tok [rows], ok [rows], caches).
 
     ONE launch prefills up to ``rows`` requests right-padded to
@@ -356,11 +362,32 @@ def make_paged_bucket_prefill_fn(ms: T.ModelStructure, pc: ParallelContext,
     junk never lands (``scatter_prefill_rows`` masks garbage-directed
     chunks) and the host ignores their outputs. Shared by the tp=1 jit
     and the shard_map wrapper (``make_sharded_prefill(bucket_rows=)``).
+
+    ``ctx_pages > 0`` makes the program CTX-AWARE (prefix-on engines):
+    radix-HIT rows ride the same launch as cold rows. Row i's matched
+    prefix pages arrive in ``ctx_ids[i]`` (garbage-padded to the uniform
+    ``ctx_pages`` width) with its true ctx length in ``ctx_lens[i]``;
+    ``prompts[i]`` then holds only the SUFFIX (true_lens[i] = suffix
+    length) and the forward runs with per-row start offsets. Cold rows
+    pass ctx_len 0 + all-garbage ctx ids and reduce bit-identically to
+    the plain (ctx_pages=0) program: their gathered ctx is finite junk
+    that the per-row key rearrangement parks past the causal horizon,
+    where pinned-tile masking zeroes it exactly (see
+    blocks.attention_phase_full). One arity per engine keeps prefill
+    compiles <= n_buckets even at high hit-rates.
     """
-    def f(params, caches, prompts, true_lens, page_ids, key):
+    def f(params, caches, prompts, true_lens, page_ids, *rest):
+        if ctx_pages:
+            ctx_ids, ctx_lens, key = rest
+            ctx = PG.gather_ctx_rows(caches, ctx_ids)
+            start = ctx_lens
+        else:
+            (key,) = rest
+            ctx = None
+            start = 0
         logits, _, seq = T.forward_full(
             params, prompts, ms=ms, pc=pc, emit_cache=True,
-            max_len=bucket, kv_mode="heads",
+            max_len=bucket, kv_mode="heads", ctx_kv=ctx, start=start,
             attn_impl=BK.PREFILL_ATTN_IMPL)
         seq = jax.tree.map(
             lambda c: c.astype(psv.cache_dtype)
@@ -381,6 +408,48 @@ def make_paged_bucket_prefill_fn(ms: T.ModelStructure, pc: ParallelContext,
         else:
             tok0 = E.vocab_parallel_argmax(last, pc)
         caches = PG.scatter_prefill_rows(caches, seq, page_ids)
+        return tok0.astype(jnp.int32), ok, caches
+
+    return f
+
+
+def make_paged_suffix_prefill_fn(ms: T.ModelStructure, pc: ParallelContext,
+                                 psv, n_ctx_pages: int, suffix_len: int):
+    """Prefix-hit suffix prefill: (params, caches, suffix [1, suffix_len],
+    ctx_ids [n_ctx_pages], sfx_ids, slot, key) -> (first_tok [1], ok,
+    caches). Gathers the matched pages as read-only context kv, runs the
+    forward over ONLY the unmatched suffix, and scatters the suffix pages.
+    Every suffix row reduces over exactly ``ctx + suffix`` keys — the cold
+    full-prompt program's reduction shape for the same row — so greedy
+    outputs stay bit-identical to a cold run (fp32 pool). Copy-on-write
+    holds by construction: the program writes only ``sfx_ids`` pages,
+    never ``ctx_ids``. Runs under tp > 1 too: inside shard_map a
+    kv-sharded pool's ``gather_ctx`` yields each rank's local shard and
+    ``_fold_ctx_kv`` branches per rank (identity vs in-gather), audited
+    against the core's per-rank head count. Shared by the tp=1 jit and
+    the shard_map wrapper (``make_sharded_prefill(suffix_ctx_pages=)``).
+    """
+    ps = psv.page_size
+    start = n_ctx_pages * ps
+    n_sfx = -(-suffix_len // ps)
+    emit_len = n_sfx * ps
+
+    def f(params, caches, suffix, ctx_ids, sfx_ids, slot, key):
+        ctx = PG.gather_ctx(caches, ctx_ids)
+        logits, _, seq = T.forward_full(
+            params, suffix, ms=ms, pc=pc, emit_cache=True,
+            max_len=emit_len, kv_mode="heads", ctx_kv=ctx, start=start,
+            attn_impl=BK.PREFILL_ATTN_IMPL)
+        seq = jax.tree.map(
+            lambda c: c.astype(psv.cache_dtype)
+            if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
+        last = logits[:, suffix_len - 1]
+        ok = _finite_flag(pc, last, *jax.tree.leaves(seq))
+        if psv.temperature > 0:
+            tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
+        else:
+            tok0 = E.vocab_parallel_argmax(last, pc)
+        caches = PG.scatter_prefill(caches, seq, sfx_ids, slot)
         return tok0.astype(jnp.int32), ok, caches
 
     return f
@@ -653,10 +722,11 @@ class PagedEngine:
     (``ms`` must be built with the matching tp). The page pool shards its
     kv-head axis over the model axis like the ring cache; scheduling,
     block tables and per-slot positions stay host-side and tp-agnostic.
-    The radix prefix cache auto-disables under tp > 1 for now — the
-    suffix-prefill ctx path assumes replicated kv (radix-aware sharded
-    serving is a ROADMAP follow-on) — while preemption still works via
-    full re-prefill + bit-exact decode replay.
+    The radix prefix cache runs under tp > 1 too: gathered ctx kv folds
+    per rank (kv-sharded pool: identity; replicated pool: in-gather like
+    the paged decode kernel's head map), so prefix-hit streams stay
+    bit-identical to the tp=1 prefix-on engine and to sharded one-shot
+    ``generate()``.
 
     ``fault_plan``: a ``repro.serve.faults.FaultPlan`` — each step applies
     that step's scheduled events through the same hooks real faults would
@@ -759,8 +829,7 @@ class PagedEngine:
         self._programs = ProgramCache(self.telemetry)
         self.pool = PagePool(psv.n_pages)
         self.prefix = (PrefixCache(psv.page_size, telemetry=self.telemetry)
-                       if psv.prefix_cache and ms.tp == 1
-                       and self._prefix_eligible(ms)
+                       if psv.prefix_cache and self._prefix_eligible(ms)
                        else None)
         # Bucketed prefill needs the pinned-tile chunked impl's padding
         # transparency, which only the attention mixer family honours —
@@ -957,65 +1026,62 @@ class PagedEngine:
 
         return self._programs.get(cohort, "prefill_full", prompt_len, build)
 
+    def _bucket_ctx_pages(self, cohort: str) -> int:
+        """Ctx-page width of the cohort's bucket programs. Prefix-ON main
+        cohorts route EVERY bucket launch through the ctx-aware program
+        (cold rows pass ctx_len 0 + all-garbage ids and reduce
+        bit-identically to the plain program), so hits and colds share one
+        compile and the ladder bound holds with hits present. The width is
+        uniform: a radix match always leaves a >= 2-token (>= 1-page)
+        suffix (scheduler._match_cap), so ctx pages <= pages_per_slot - 1.
+        Draft-mirror and degraded launches keep the plain program (the
+        radix tree never holds their plan's pages)."""
+        if self.prefix is not None and cohort == COHORT_MAIN:
+            return self.psv.pages_per_slot - 1
+        return 0
+
     def _bucket_prefill_fn(self, bucket: int, rows: int, cohort: str):
         """Bucketed batched prefill: ``rows`` right-padded prompts through
         one ``[rows, bucket]`` launch. Compiled once per distinct
         (bucket, rows) — and rows is a pure function of (bucket, static
         config), so the cohort's compile count is bounded by the ladder
-        length, not by arrivals."""
+        length, not by arrivals. Prefix-on main cohorts build the
+        ctx-aware arity (``_bucket_ctx_pages``) so radix-hit suffixes ride
+        the same launch."""
+        ctx_pages = self._bucket_ctx_pages(cohort)
+
         def build():
             if self.mesh is not None:
                 fn, _, _ = make_sharded_prefill(
                     self.ms, self.mesh, None, batch=rows,
                     prompt_len=bucket, paged=self.psv,
-                    paged_slots=self.n_main, bucket_rows=rows)
+                    paged_slots=self.n_main, bucket_rows=rows,
+                    bucket_ctx_pages=ctx_pages)
                 return fn
             ms = (self.ms_draft if cohort == SP.COHORT_SPEC_DRAFT
                   else self._model(cohort)[1])
             local = make_paged_bucket_prefill_fn(ms, self.pc, self.psv,
-                                                 bucket, rows)
+                                                 bucket, rows, ctx_pages)
             return jax.jit(local, donate_argnums=(1,))
 
         return self._programs.get(cohort, "prefill_bucket", (bucket, rows),
                                   build)
 
     def _suffix_fn(self, n_ctx_pages: int, suffix_len: int):
-        """Prefix-hit prefill: gather the matched pages as read-only
-        context kv, run the forward over ONLY the unmatched suffix, and
-        scatter the suffix pages. Compiled once per (context pages, suffix
-        length) shape. Every suffix row reduces over exactly
-        ``ctx + suffix`` keys — the cold full-prompt program's reduction
-        shape for the same row — so greedy outputs stay bit-identical to a
-        cold run (fp32 pool). Copy-on-write holds by construction: the
-        program writes only ``sfx_ids`` pages, never ``ctx_ids``. Main
-        cohort only (the radix tree never holds degraded-plan pages).
-        """
-        ms, pc, psv = self.ms, self.pc, self.psv
-        assert ms.tp == 1, "prefix sharing is tp=1 only (auto-disabled)"
-        ps = psv.page_size
-        start = n_ctx_pages * ps
-        n_sfx = -(-suffix_len // ps)
-        emit_len = n_sfx * ps
-
-        def f(params, caches, suffix, ctx_ids, sfx_ids, slot, key):
-            ctx = PG.gather_ctx(caches, ctx_ids)
-            logits, _, seq = T.forward_full(
-                params, suffix, ms=ms, pc=pc, emit_cache=True,
-                max_len=emit_len, kv_mode="heads", ctx_kv=ctx, start=start,
-                attn_impl=BK.PREFILL_ATTN_IMPL)
-            seq = jax.tree.map(
-                lambda c: c.astype(psv.cache_dtype)
-                if c.dtype in (jnp.float32, jnp.bfloat16) else c, seq)
-            last = logits[:, suffix_len - 1]
-            ok = _finite_flag(pc, last, *jax.tree.leaves(seq))
-            if psv.temperature > 0:
-                tok0 = E.vocab_parallel_sample(last, key, psv.temperature, pc)
-            else:
-                tok0 = E.vocab_parallel_argmax(last, pc)
-            caches = PG.scatter_prefill(caches, seq, sfx_ids, slot)
-            return tok0.astype(jnp.int32), ok, caches
-
-        return jax.jit(f, donate_argnums=(1,))
+        """Prefix-hit exact-shape prefill, compiled once per (context
+        pages, suffix length) — the fallback when the suffix misses the
+        bucket ladder. Main cohort only (the radix tree never holds
+        degraded-plan pages); runs under tp > 1 via the shard_map wrapper
+        (the per-rank ctx fold in model.blocks)."""
+        if self.mesh is not None:
+            fn, _, _ = make_sharded_prefill(
+                self.ms, self.mesh, None, batch=1, prompt_len=suffix_len,
+                paged=self.psv, paged_slots=self.n_main,
+                suffix_ctx_pages=n_ctx_pages)
+            return fn
+        local = make_paged_suffix_prefill_fn(self.ms, self.pc, self.psv,
+                                             n_ctx_pages, suffix_len)
+        return jax.jit(local, donate_argnums=(1,))
 
     def _draft_decode_fn(self):
         """Single-step draft decode, compiled lazily — only the resume
@@ -1456,8 +1522,9 @@ class PagedEngine:
                 hit_tokens=ctx, tokens=Lp - ctx, batched=pre is not None)
             if pre is not None:
                 tok0, ok = pre
-                self.counters["prefill_tokens"] += Lp
-                self.counters["full_prefills"] += 1
+                self.counters["prefill_tokens"] += Lp - ctx
+                self.counters["suffix_prefills" if ctx
+                              else "full_prefills"] += 1
                 self.counters["bucket_prefills"] += 1
             else:
                 tok0, ok = self._run_prefill(r, ctx)
@@ -1501,18 +1568,21 @@ class PagedEngine:
     def _plan_prefills(self, admitted: List[Request]
                        ) -> Dict[int, Tuple[int, bool]]:
         """Pass 1 of admission: vocab-guard every admitted request, then
-        pack the bucket-eligible cold prefills into (cohort, bucket)
-        groups and launch each group ONCE. Returns rid -> (first token,
-        finite-ok) for every request whose prefill ran batched; pass 2
-        (``_start``) consumes those instead of launching per request.
+        pack the bucket-eligible prefills into (cohort, bucket) groups and
+        launch each group ONCE. Returns rid -> (first token, finite-ok)
+        for every request whose prefill ran batched; pass 2 (``_start``)
+        consumes those instead of launching per request.
 
-        Eligibility: the ladder is on, the request has NO radix context
-        (the suffix program's (ctx_pages, suffix_len) shape is
-        heterogeneous per hit — bucketing it is a follow-on), and a rung
-        holds the prompt. Resumed full re-prefills qualify: ctx == 0 and
-        the padded batched forward is bit-equal to the exact program, so
-        the resume bit-identity assert still holds."""
+        Eligibility: the ladder is on, the request still has suffix
+        tokens to compute (a full-prompt radix cover skips prefill
+        entirely), and a rung holds the SUFFIX length. Radix-hit rows
+        ride the same launch as cold rows through the ctx-aware bucket
+        program (``_bucket_ctx_pages``): each row carries its own ctx
+        pages + ctx length, cold rows pass zero ctx. Resumed re-prefills
+        qualify too: the padded batched forward is bit-equal to the exact
+        program, so the resume bit-identity assert still holds."""
         pre: Dict[int, Tuple[int, bool]] = {}
+        ps = self.psv.page_size
         vocab = self.ms.cfg.vocab_size
         groups: Dict[Tuple[str, int], List[Request]] = {}
         for r in admitted:
@@ -1528,9 +1598,12 @@ class PagedEngine:
                     f"at admission (min={int(r.prompt.min())}, "
                     f"max={int(r.prompt.max())})"), scrub=False)
                 continue
-            if not self._buckets or r.n_shared:
+            if not self._buckets:
                 continue
-            b = BK.bucket_for(r.prompt_len, self._buckets)
+            Ls = r.prompt_len - r.n_shared * ps
+            if Ls <= 0:
+                continue   # radix cover reaches the prompt: replay only
+            b = BK.bucket_for(Ls, self._buckets)
             if b is not None:
                 groups.setdefault((r.cohort, b), []).append(r)
         for (cohort, b), grp in sorted(groups.items()):
@@ -1539,20 +1612,26 @@ class PagedEngine:
 
     def _launch_bucket(self, cohort: str, bucket: int, grp: List[Request]
                        ) -> Dict[int, Tuple[int, bool]]:
-        """One bucket group: right-pad each prompt to ``bucket``, launch
-        chunks of the program's fixed row count (short chunks pad with
-        inert rows: zero prompts, all-garbage page ids), slice each row's
-        logits at its true length, and mask the page scatter so pad rows
-        and pad pages write nothing."""
+        """One bucket group: right-pad each row's SUFFIX (the full prompt
+        when cold) to ``bucket``, launch chunks of the program's fixed row
+        count (short chunks pad with inert rows: zero prompts, all-garbage
+        page ids), slice each row's logits at its true length, and mask
+        the page scatter so pad rows and pad pages write nothing. Under a
+        ctx-aware program radix-hit rows additionally carry their matched
+        ctx pages (garbage-padded to the uniform width) and ctx length."""
         ps = self.psv.page_size
         cohort_slots = self.n_main if cohort == COHORT_MAIN else self.n_deg
         rows = BK.rows_for_bucket(bucket, cohort_slots,
                                   self.psv.prefill_token_budget)
+        ctx_pages = self._bucket_ctx_pages(cohort)
         fn = self._bucket_prefill_fn(bucket, rows, cohort)
         # Speculative mirror: the SAME group through the draft-plan
         # program warms the draft tree (quality-only — outputs ignored,
         # the trees are independent, and _spec_prime skips its own full
-        # prefill for rids primed here).
+        # prefill for rids primed here). Radix-HIT rows are masked inert
+        # in the mirror and NOT marked primed: the draft tree needs the
+        # full prompt (its kv has no radix representation), so
+        # _spec_prime runs their full-prompt draft prefill instead.
         draft_fn = (self._bucket_prefill_fn(bucket, rows,
                                             SP.COHORT_SPEC_DRAFT)
                     if self.spec_k and cohort == COHORT_MAIN else None)
@@ -1564,29 +1643,44 @@ class PagedEngine:
             prompts = np.zeros((rows, bucket), np.int32)
             true_lens = np.ones((rows,), np.int32)
             page_ids = np.full((rows, n_pg), PG.GARBAGE_PAGE, np.int32)
+            ctx_ids = np.full((rows, ctx_pages), PG.GARBAGE_PAGE, np.int32)
+            ctx_lens = np.zeros((rows,), np.int32)
             for i, r in enumerate(chunk):
-                Lp = r.prompt_len
-                prompts[i, :Lp] = r.prompt
-                true_lens[i] = Lp
-                npg = -(-Lp // ps)
-                page_ids[i, :npg] = r.pages[:npg]
+                m = r.n_shared
+                Ls = r.prompt_len - m * ps
+                prompts[i, :Ls] = r.prompt[m * ps:]
+                true_lens[i] = Ls
+                npg = -(-r.prompt_len // ps)
+                page_ids[i, :npg - m] = r.pages[m:npg]
+                if m:
+                    assert ctx_pages, (cohort, m)
+                    ctx_ids[i, :m] = r.pages[:m]
+                    ctx_lens[i] = m * ps
             self._key, sub = jax.random.split(self._key)
             if draft_fn is not None:
+                hit = ctx_lens > 0
+                d_prompts = np.where(hit[:, None], 0, prompts)
+                d_lens = np.where(hit, 1, true_lens).astype(np.int32)
+                d_pages = np.where(hit[:, None], PG.GARBAGE_PAGE,
+                                   page_ids).astype(np.int32)
                 _, _, self.caches_draft = draft_fn(
                     self.params_draft, self.caches_draft,
-                    jnp.asarray(prompts), jnp.asarray(true_lens),
-                    jnp.asarray(page_ids), sub)
+                    jnp.asarray(d_prompts), jnp.asarray(d_lens),
+                    jnp.asarray(d_pages), sub)
+            args = [jnp.asarray(prompts), jnp.asarray(true_lens),
+                    jnp.asarray(page_ids)]
+            if ctx_pages:
+                args += [jnp.asarray(ctx_ids), jnp.asarray(ctx_lens)]
             tok0, ok, caches = fn(
-                self._model(cohort)[0], caches, jnp.asarray(prompts),
-                jnp.asarray(true_lens), jnp.asarray(page_ids), sub)
+                self._model(cohort)[0], caches, *args, sub)
             tok0, ok = np.asarray(tok0), np.asarray(ok)
             for i, r in enumerate(chunk):
                 out[r.rid] = (int(tok0[i]), bool(ok[i]))
-                if draft_fn is not None:
+                if draft_fn is not None and not r.n_shared:
                     self._spec_primed.add(r.rid)
             self.counters["bucket_groups"] += 1
             self.counters["pad_tokens"] += rows * bucket - sum(
-                r.prompt_len for r in chunk)
+                r.prompt_len - r.n_shared * ps for r in chunk)
         self._set_caches(cohort, caches)
         return out
 
@@ -1986,7 +2080,9 @@ def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
                          *, batch: int, prompt_len: int, sp: bool = True,
                          paged: Optional[PagedServeConfig] = None,
                          paged_slots: Optional[int] = None,
-                         bucket_rows: Optional[int] = None):
+                         bucket_rows: Optional[int] = None,
+                         bucket_ctx_pages: int = 0,
+                         suffix_ctx_pages: Optional[int] = None):
     """jit(shard_map(prefill)) for the ring cache (default), or — with
     ``paged`` — the engine's exact-length prefill + page scatter: the
     forward runs replicated over the sequence (sp off: prompt lengths are
@@ -1997,22 +2093,34 @@ def make_sharded_prefill(ms: T.ModelStructure, mesh, sv: ServeConfig,
     ``bucket_rows``: build the BUCKETED batched prefill instead —
     ``prompt_len`` is the bucket width and the program takes
     ``[bucket_rows, prompt_len]`` right-padded prompts plus per-row true
-    lengths and page-id rows (same 6-arg arity as the exact program, so
-    the shard specs are shared). Returns (fn, cache_pspecs, pc)."""
+    lengths and page-id rows; ``bucket_ctx_pages > 0`` adds the per-row
+    ctx operands (radix-hit rows ride the bucket — the ctx gather and
+    per-rank fold run inside shard_map over each rank's pool shard).
+    ``suffix_ctx_pages``: build the exact-shape SUFFIX prefill instead —
+    ``prompt_len`` is the suffix length. Every non-tree operand is
+    replicated (P()), so the spec count just follows the local program's
+    arity. Returns (fn, cache_pspecs, pc)."""
     if paged is not None:
         pc = make_context(mesh, sp=False)
-        if bucket_rows is not None:
-            local = make_paged_bucket_prefill_fn(ms, pc, paged, prompt_len,
-                                                 bucket_rows)
+        if suffix_ctx_pages is not None:
+            local = make_paged_suffix_prefill_fn(
+                ms, pc, paged, suffix_ctx_pages, prompt_len)
+            n_rep = 5   # suffix, ctx_ids, sfx_ids, slot, key
+        elif bucket_rows is not None:
+            local = make_paged_bucket_prefill_fn(
+                ms, pc, paged, prompt_len, bucket_rows, bucket_ctx_pages)
+            # prompts, true_lens, page_ids, [ctx_ids, ctx_lens,] key
+            n_rep = 4 + (2 if bucket_ctx_pages else 0)
         else:
             local = make_paged_prefill_fn(ms, pc, paged, prompt_len)
+            n_rep = 4   # prompt, page_ids, slot, key
         p_specs = T.param_pspecs(ms)
         _, c_specs = PG.paged_cache_meta(
             ms, n_slots=paged_slots or paged.n_slots, n_pages=paged.n_pages,
             page_size=paged.page_size, dtype=paged.cache_dtype)
         wrapped = shard_map(
             local, mesh=mesh,
-            in_specs=(p_specs, c_specs, P(), P(), P(), P()),
+            in_specs=(p_specs, c_specs) + (P(),) * n_rep,
             out_specs=(P(), P(), c_specs),
             check_vma=False)
         return jax.jit(wrapped, donate_argnums=(1,)), c_specs, pc

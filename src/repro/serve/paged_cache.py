@@ -181,6 +181,39 @@ def gather_ctx(pool: List[Dict], page_ids) -> List[Dict]:
     return out
 
 
+def gather_ctx_rows(pool: List[Dict], page_ids) -> List[Dict]:
+    """Per-row twin of ``gather_ctx`` for the bucketed radix-suffix path:
+    gather EVERY row's ctx pages in one shot so prefix-hit and cold rows
+    share a single ``[rows, bucket]`` prefill launch.
+
+    pool: the paged cache tree; page_ids: [rows, n_ctx_pages] int32 — row
+    i's first ``ctx_len_i / page_size`` entries are its matched prefix
+    pages in position order, the rest (and every entry of a cold row) is
+    ``GARBAGE_PAGE``. Returns one tree per segment with the emitted-cache
+    layout and ``rows`` as the batch axis: stacked pair entries
+    [count, 2, rows, n_ctx_pages * ps, Hkv, hd], per-layer entries
+    [count, rows, n_ctx_pages * ps, Hkv, hd]. Garbage-directed positions
+    gather the all-zero garbage page — finite junk the forward's per-row
+    key rearrangement parks behind each row's causal horizon, where the
+    pinned-tile chunked core treats it as exact-zero contribution (the
+    same masked-no-op argument as bucket padding). Attention-only, like
+    everything on the prefix path.
+    """
+    out = []
+    for seg in pool:
+        nseg = {}
+        for name, pv in seg.items():
+            assert is_paged_entry(name), (
+                f"{name}: prefix sharing requires attention-only caches")
+            ba = T.cache_batch_axis(name)   # page axis of the pool entry
+            # [.., rows, n_pg, ps, H, hd]: rows becomes the batch axis in
+            # place (no expand_dims — the row axis replaces batch-1).
+            g = jnp.take(pv, page_ids, axis=ba)
+            nseg[name] = g.reshape(*g.shape[:ba + 1], -1, *g.shape[ba + 3:])
+        out.append(nseg)
+    return out
+
+
 def scrub_pages(pool: List[Dict], page_ids, slot):
     """Zero a departing request's pages and its slot-state rows.
 

@@ -62,11 +62,10 @@ different pairing are not interchangeable with main-cohort pages).
 Tensor parallelism never reaches this module: page ids, block tables, slot
 indices and refcounts are logical names for DEVICE-side pages whose kv-head
 axis may be sharded over a mesh (repro.serve.paged_cache), so one scheduler
-instance drives tp=1 and tp>1 engines identically and the accounting
-invariant ``allocated - freed == live_unique`` is tp-invariant. Under tp>1
-the engine passes ``prefix_cache=None`` (radix sharing is tp=1-only for
-now); preemption still works — resume then takes the full-reprefill +
-decode-replay path.
+instance drives tp=1 and tp>1 engines identically — radix matching,
+preemption and the accounting invariant ``allocated - freed ==
+live_unique`` all included (the suffix-prefill ctx fold branches per rank
+inside the engine's compiled programs; nothing here knows or cares).
 """
 from __future__ import annotations
 
@@ -526,13 +525,16 @@ class Scheduler:
                         and cohort == COHORT_MAIN)
             path = self._match_head(r, step) if use_tree else []
             # Cost this step = tokens actually recomputed (suffix forward
-            # rows + decode replay steps), not the full prompt. A cold
-            # admission headed for the bucketed path costs its PADDED
-            # width plus any replay tail — mirror of the engine's bucket
-            # eligibility (ladder on, no radix context, rung holds it).
+            # rows + decode replay steps), not the full prompt. An
+            # admission headed for the bucketed path — cold OR radix-hit:
+            # hit suffixes ride the same ladder — costs its PADDED bucket
+            # width plus any replay tail, mirroring the engine's bucket
+            # eligibility (ladder on, suffix tokens remain, rung holds
+            # the suffix).
+            Ls = r.prompt_len - len(path) * self.page_size
             cost = len(r.seq_tokens) - len(path) * self.page_size
-            if self.prefill_buckets and not path:
-                b = bucket_for(r.prompt_len, self.prefill_buckets)
+            if self.prefill_buckets and Ls > 0:
+                b = bucket_for(Ls, self.prefill_buckets)
                 if b is not None:
                     cost = b + (len(r.seq_tokens) - r.prompt_len)
             if admitted and cost > budget:

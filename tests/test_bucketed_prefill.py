@@ -24,7 +24,8 @@ from repro.serve import (AdmissionConfig, DegradeConfig, PagedEngine,
                          generate, make_paged_bucket_prefill_fn,
                          rows_for_bucket, validate_buckets)
 from repro.serve import paged_cache as PG
-from repro.serve.engine import make_paged_prefill_fn
+from repro.serve.engine import (make_paged_prefill_fn,
+                                make_paged_suffix_prefill_fn)
 
 from _helpers import tiny
 
@@ -181,6 +182,120 @@ def test_bucket_fn_matches_exact_fn_rowwise():
                     got = np.asarray(seg_b[name][sl])
                     want = np.asarray(seg_e[name][sl])
                     assert (got == want).all(), name
+
+
+def test_bucket_ctx_fn_matches_suffix_and_exact_fn_rowwise():
+    """Program level, ctx-AWARE bucket: one [rows, bucket] launch carrying
+    a radix-HIT row (per-row ctx-page gather), a COLD row (ctx_len 0,
+    all-garbage ctx ids), and an inert pad row. The hit row must match the
+    exact-length suffix program bit for bit (token + suffix page kv); the
+    cold row must match the exact-length full program — heterogeneous
+    (ctx_pages, suffix_len) rows share ONE launch without moving a bit."""
+    cfg, ms, params = _build()
+    psv = _psv()
+    ps = psv.page_size
+    key = jax.random.PRNGKey(7)
+
+    # Donor: 16 shared tokens prefilled into pages (1, 2) — the radix ctx.
+    donor = _prompt(0, 16, cfg.vocab_size)
+    caches = PG.init_paged_caches(ms, n_slots=psv.n_slots,
+                                  n_pages=psv.n_pages, page_size=ps,
+                                  dtype=psv.cache_dtype)
+    fn_d = jax.jit(make_paged_prefill_fn(ms, PC, psv, 16))
+    _, _, caches = fn_d(params, caches, jnp.asarray(donor[None]),
+                        jnp.asarray([1, 2], jnp.int32), jnp.int32(0), key)
+
+    tail = _prompt(1, 6, cfg.vocab_size)     # hit row: ctx 16 + suffix 6
+    cold = _prompt(2, 7, cfg.vocab_size)     # cold row: 7 fresh tokens
+    bucket, rows, ctx_pages = 8, 3, 3        # pages_per_slot - 1
+    prompts = np.zeros((rows, bucket), np.int32)
+    true_lens = np.ones((rows,), np.int32)
+    page_ids = np.full((rows, 1), PG.GARBAGE_PAGE, np.int32)
+    ctx_ids = np.full((rows, ctx_pages), PG.GARBAGE_PAGE, np.int32)
+    ctx_lens = np.zeros((rows,), np.int32)
+    prompts[0, :6] = tail
+    true_lens[0] = 6
+    page_ids[0, 0] = 3
+    ctx_ids[0, :2] = (1, 2)
+    ctx_lens[0] = 16
+    prompts[1, :7] = cold
+    true_lens[1] = 7
+    page_ids[1, 0] = 4
+    fn_b = jax.jit(make_paged_bucket_prefill_fn(ms, PC, psv, bucket, rows,
+                                                ctx_pages))
+    tok_b, ok_b, caches_b = fn_b(params, caches, jnp.asarray(prompts),
+                                 jnp.asarray(true_lens),
+                                 jnp.asarray(page_ids),
+                                 jnp.asarray(ctx_ids),
+                                 jnp.asarray(ctx_lens), key)
+    assert np.asarray(ok_b).all()
+
+    # Hit-row reference: the exact-length suffix program over the SAME
+    # donor caches.
+    fn_s = jax.jit(make_paged_suffix_prefill_fn(ms, PC, psv, 2, 6))
+    tok_s, ok_s, caches_s = fn_s(params, caches, jnp.asarray(tail[None]),
+                                 jnp.asarray([1, 2], jnp.int32),
+                                 jnp.asarray([3], jnp.int32),
+                                 jnp.int32(0), key)
+    assert np.asarray(ok_s).all()
+    assert int(np.asarray(tok_b)[0]) == int(np.asarray(tok_s)[0])
+
+    # Cold-row reference: the exact-length full program on a fresh pool.
+    fn_e = jax.jit(make_paged_prefill_fn(ms, PC, psv, 7))
+    caches_e = PG.init_paged_caches(ms, n_slots=psv.n_slots,
+                                    n_pages=psv.n_pages, page_size=ps,
+                                    dtype=psv.cache_dtype)
+    tok_e, _, caches_e = fn_e(params, caches_e, jnp.asarray(cold[None]),
+                              jnp.asarray([4], jnp.int32), jnp.int32(1), key)
+    assert int(np.asarray(tok_b)[1]) == int(np.asarray(tok_e)[0])
+
+    for (pg, n_real, ref) in ((3, 6, caches_s), (4, 7, caches_e)):
+        for seg_b, seg_r in zip(caches_b, ref):
+            for name in seg_b:
+                if not PG.is_paged_entry(name):
+                    continue
+                ba = T.cache_batch_axis(name)
+                sl = (slice(None),) * ba + (pg, slice(0, n_real))
+                got = np.asarray(seg_b[name][sl])
+                want = np.asarray(seg_r[name][sl])
+                assert (got == want).all(), (name, pg)
+
+
+def test_engine_hit_and_cold_rows_share_one_bucket_group():
+    """Engine level: a radix-HIT member and a COLD request admitted
+    together land in the SAME bucket group (one launch), the hit prefills
+    only its suffix, prefill compiles stay bounded by the ladder with no
+    exact-length program ever built, and all streams are bit-identical to
+    one-shot ``generate()``."""
+    cfg, ms, params = _build()
+    eng = PagedEngine(params, ms, _psv(prefix_cache=True))
+    shared = _prompt(0, 8, cfg.vocab_size)          # one whole page
+    donor = np.concatenate([shared, _prompt(1, 8, cfg.vocab_size)])
+    member = np.concatenate([shared, _prompt(2, 6, cfg.vocab_size)])
+    cold = _prompt(3, 7, cfg.vocab_size)
+    rid0 = eng.add_request(donor, 5)
+    eng.drain()                                     # donates the shared page
+    g0 = eng.counters["bucket_groups"]
+    assert g0 == 1 and eng.counters["prefix_hits"] == 0
+    rid1 = eng.add_request(member, 5)
+    rid2 = eng.add_request(cold, 5)
+    eng.drain()
+    c = eng.counters
+    assert c["bucket_groups"] == g0 + 1, dict(c)    # ONE shared launch
+    assert c["prefix_hits"] == 1, dict(c)
+    assert c["suffix_prefills"] == 1, dict(c)
+    assert c["full_prefills"] == 2, dict(c)         # donor + cold
+    assert c["bucket_prefills"] == 3, dict(c)
+    pins = [k for k in eng.telemetry.compiles if k[1] == "prefill_bucket"]
+    assert 1 <= len(pins) <= len(eng._buckets), pins
+    assert not any(k[1] in ("prefill_full", "prefill_suffix")
+                   for k in eng.telemetry.compiles), (
+        dict(eng.telemetry.compiles))
+    sv = ServeConfig(max_len=32, temperature=0.0, cache_dtype=jnp.float32)
+    for rid, p in ((rid0, donor), (rid1, member), (rid2, cold)):
+        ref = np.asarray(generate(params, jnp.asarray(p)[None], 5,
+                                  ms=ms, pc=PC, sv=sv)[0])
+        assert (eng.results[rid] == ref).all(), rid
 
 
 def test_scatter_rows_masks_pad_rows_and_pages():

@@ -9,8 +9,9 @@ Slow subprocess tests (8 host devices): a tp=2 engine under staggered
 continuous batching is BIT-identical to the tp=1 engine and to one-shot
 ``sharded_generate``; one sharded paged decode step matches the sharded
 ring step; the Pallas in-kernel head selection agrees with the XLA gather
-path under replicated kv (tp > n_kv); and the prefix cache auto-disables
-under tp>1.
+path under replicated kv (tp > n_kv); and the prefix cache STAYS ON under
+tp>1 — radix-hit suffix prefills on the sharded engine are bit-identical
+to cold full prefills and to one-shot ``sharded_generate``.
 """
 import dataclasses
 import json
@@ -24,12 +25,25 @@ from repro.configs import get_config, reduced_config
 from repro.core.lp import plan_range
 from repro.kernels.decode_attention import (decode_attention_paged,
                                             decode_attention_pair_paged)
+from repro.model import attention as A
+from repro.model import blocks as BL
 from repro.model import transformer as T
+from repro.parallel.context import ParallelContext
 from repro.serve import paged_cache as PG
 
 from _helpers import run_multidevice, tiny
 
 KEY = jax.random.PRNGKey(0)
+
+
+@dataclasses.dataclass(frozen=True)
+class _FixedRank(ParallelContext):
+    """ParallelContext pinned to one rank — lets a single-device unit test
+    evaluate the per-rank kv in-gather for every rank without shard_map."""
+    rank: int = 0
+
+    def tp_index(self):
+        return jnp.int32(self.rank)
 
 
 # ---------------------------------------------------------------------------
@@ -116,6 +130,62 @@ def test_validate_paged_support_rejects_indivisible_kv():
     PG.validate_paged_support(repl, 64)
 
 
+def test_fold_ctx_kv_sharded_pool_is_identity_on_heads():
+    """kv-SHARDED pool: ``gather_ctx`` inside shard_map already hands each
+    rank its LOCAL head shard, so the fold must be pure layout (pair-major
+    head fold), bit-identical to folding the shard by hand."""
+    cfg = tiny(n_layers=4)                          # 4 q heads, 4 kv heads
+    ms = T.build_structure(cfg, plan=plan_range(cfg, 0, 4), tp=2)
+    dims = ms.dims
+    assert dims.kv_sharded
+    group = ms.segments[0].group
+    B, Tc = 2, 8
+    ck = jax.random.normal(jax.random.fold_in(KEY, 10),
+                           (2, B, Tc, dims.hkv, dims.hd))
+    cv = jax.random.normal(jax.random.fold_in(KEY, 11), ck.shape)
+    ks, vs = BL._fold_ctx_kv({"k": ck, "v": cv}, dims, ParallelContext(),
+                             group=group)
+    ref_k = jnp.moveaxis(ck, 0, 2).reshape(B, Tc, 2 * dims.hkv, dims.hd)
+    ref_v = jnp.moveaxis(cv, 0, 2).reshape(B, Tc, 2 * dims.hkv, dims.hd)
+    assert jnp.array_equal(ks, ref_k) and jnp.array_equal(vs, ref_v)
+
+    # The trace-time audit: a ctx tree carrying the GLOBAL head count on a
+    # sharded-kv rank is mis-sharded and must fail loudly.
+    bad = jax.random.normal(jax.random.fold_in(KEY, 12),
+                            (2, B, Tc, dims.hkv_global, dims.hd))
+    with pytest.raises(AssertionError, match="kv layout"):
+        BL._fold_ctx_kv({"k": bad, "v": bad}, dims, ParallelContext(),
+                        group=group)
+
+
+def test_fold_ctx_kv_replicated_pool_ingathers_rank_head():
+    """REPLICATED pool (n_kv < tp): every rank holds all stored heads and
+    the fold in-gathers this rank's head — the same selection the paged
+    decode kernel performs via ``paged_head_map``, checked against slicing
+    the pool by hand for EVERY rank."""
+    cfg = dataclasses.replace(tiny(n_layers=4), n_kv_heads=2)
+    tp = 4
+    ms = T.build_structure(cfg, plan=plan_range(cfg, 0, 4), tp=tp)
+    dims = ms.dims
+    assert not dims.kv_sharded
+    Hk_eff, _ = A.core_layout(dims)
+    group = ms.segments[0].group
+    B, Tc = 2, 8
+    ck = jax.random.normal(jax.random.fold_in(KEY, 13),
+                           (2, B, Tc, dims.hkv, dims.hd))
+    cv = jax.random.normal(jax.random.fold_in(KEY, 14), ck.shape)
+    for r in range(tp):
+        ks, vs = BL._fold_ctx_kv({"k": ck, "v": cv}, dims,
+                                 _FixedRank(rank=r), group=group)
+        assert ks.shape == (B, Tc, 2 * Hk_eff, dims.hd)
+        h = min(r * dims.hq // dims.group, dims.hkv - 1)
+        sel_k = ck[:, :, :, h:h + Hk_eff]
+        sel_v = cv[:, :, :, h:h + Hk_eff]
+        ref_k = jnp.moveaxis(sel_k, 0, 2).reshape(B, Tc, 2 * Hk_eff, dims.hd)
+        ref_v = jnp.moveaxis(sel_v, 0, 2).reshape(B, Tc, 2 * Hk_eff, dims.hd)
+        assert jnp.array_equal(ks, ref_k) and jnp.array_equal(vs, ref_v), r
+
+
 # ---------------------------------------------------------------------------
 # Multi-device (subprocess) parity
 # ---------------------------------------------------------------------------
@@ -123,8 +193,8 @@ def test_validate_paged_support_rejects_indivisible_kv():
 @pytest.mark.slow
 def test_tp2_engine_bit_identical_to_tp1_and_sharded_one_shot():
     """Staggered tp=2 continuous batching == tp=1 engine == one-shot
-    sharded_generate, bitwise per request; accounting drains; prefix
-    auto-disables under the mesh."""
+    sharded_generate, bitwise per request; accounting drains; the prefix
+    cache stays LIVE under the mesh."""
     out = run_multidevice(r"""
 import jax, jax.numpy as jnp, numpy as np, json
 from repro.configs import get_config, reduced_config
@@ -165,13 +235,83 @@ one_shot = all(
     for i in range(3))
 psv_px = PagedServeConfig(n_slots=4, page_size=8, n_pages=33, max_len=64,
                           cache_dtype=jnp.float32, prefix_cache=True)
-prefix_off = PagedEngine(params, ms2, psv_px, mesh=mesh).prefix is None
+prefix_on = PagedEngine(params, ms2, psv_px, mesh=mesh).prefix is not None
 print("RESULT " + json.dumps({"same": same, "one_shot": one_shot,
-                              "prefix_off": prefix_off}))
+                              "prefix_on": prefix_on}))
 """)
     res = json.loads([l for l in out.splitlines()
                       if l.startswith("RESULT")][0][7:])
-    assert res == {"same": True, "one_shot": True, "prefix_off": True}, res
+    assert res == {"same": True, "one_shot": True, "prefix_on": True}, res
+
+
+@pytest.mark.slow
+def test_tp2_prefix_hit_bit_identical_to_cold_and_one_shot():
+    """Sharded radix sharing end to end: a donor family prompt, then
+    radix-HIT members through the tp=2 prefix-on engine — bit-identical to
+    the tp=1 prefix-on engine, to a prefix-OFF tp=2 engine (cold prefills),
+    and to one-shot ``sharded_generate``; hit suffixes ride the bucket
+    path (no exact-length suffix program is ever compiled)."""
+    out = run_multidevice(r"""
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.configs import get_config, reduced_config
+from repro.core.lp import LPPlan, plan_range
+from repro.model import transformer as T
+from repro.serve import (PagedEngine, PagedServeConfig, ServeConfig,
+                         sharded_generate)
+
+cfg = reduced_config(get_config("tinyllama-1.1b"), n_layers=6)
+plan = LPPlan(plan_range(cfg, 0, 6).pairs[:3])
+ms1 = T.build_structure(cfg, plan=plan, tp=1)
+ms2 = T.build_structure(cfg, plan=plan, tp=2)
+params = T.init_params(ms1, jax.random.PRNGKey(0))
+mesh = jax.make_mesh((1, 2), ("data", "model"))
+psv = PagedServeConfig(n_slots=4, page_size=8, n_pages=33, max_len=64,
+                       cache_dtype=jnp.float32, prefix_cache=True)
+key = jax.random.PRNGKey(11)
+shared = np.asarray(jax.random.randint(jax.random.fold_in(key, 0), (16,),
+                                       0, cfg.vocab_size))
+tails = [np.asarray(jax.random.randint(jax.random.fold_in(key, 1 + i),
+                                       (8,), 0, cfg.vocab_size))
+         for i in range(3)]
+prompts = [np.concatenate([shared, t]) for t in tails]
+res, rids = {}, {}
+for name, ms, mk in (("tp1", ms1, None), ("tp2", ms2, mesh)):
+    eng = PagedEngine(params, ms, psv, mesh=mk)
+    r = [eng.add_request(prompts[0], 8)]       # donor: cold full prefill
+    eng.drain()                                # donates the shared pages
+    r += [eng.add_request(p, 8) for p in prompts[1:]]   # radix hits
+    eng.drain()
+    assert eng.counters["prefix_hits"] == 2, dict(eng.counters)
+    assert eng.counters["suffix_prefills"] == 2, dict(eng.counters)
+    assert not any(k[1] in ("prefill_full", "prefill_suffix")
+                   for k in eng.telemetry.compiles), (
+        dict(eng.telemetry.compiles))
+    assert sum(1 for k in eng.telemetry.compiles
+               if k[1] == "prefill_bucket") <= len(eng._buckets)
+    res[name], rids[name] = eng, r
+tp_same = all((res["tp1"].results[a] == res["tp2"].results[b]).all()
+              for a, b in zip(rids["tp1"], rids["tp2"]))
+psv_off = PagedServeConfig(n_slots=4, page_size=8, n_pages=33, max_len=64,
+                           cache_dtype=jnp.float32)
+eng_c = PagedEngine(params, ms2, psv_off, mesh=mesh)
+crids = [eng_c.add_request(p, 8) for p in prompts]
+eng_c.drain()
+assert eng_c.counters["suffix_prefills"] == 0
+cold_same = all((eng_c.results[c] == res["tp2"].results[b]).all()
+                for c, b in zip(crids, rids["tp2"]))
+sv = ServeConfig(max_len=64, temperature=0.0, cache_dtype=jnp.float32)
+one_shot = all(
+    (res["tp2"].results[b] ==
+     sharded_generate(params, prompts[i][None], 8, ms=ms2, mesh=mesh,
+                      sv=sv)[0]).all()
+    for i, b in enumerate(rids["tp2"]))
+print("RESULT " + json.dumps({"tp_same": tp_same, "cold_same": cold_same,
+                              "one_shot": one_shot}))
+""")
+    res = json.loads([l for l in out.splitlines()
+                      if l.startswith("RESULT")][0][7:])
+    assert res == {"tp_same": True, "cold_same": True,
+                   "one_shot": True}, res
 
 
 @pytest.mark.slow

@@ -6,7 +6,9 @@ spec_k>0 engine's greedy streams are BIT-IDENTICAL to the plain engine
 under staggered continuous batching — in the rejection-heavy regime
 (raw random weights: the shallow draft agrees with full depth only at
 chance level) and in the trained-model agreement regime (segments
-scaled down, where acceptance must actually pay). Plus the guard rails:
+scaled down, where acceptance must actually pay) — and with the radix
+prefix cache live, where a hit row prefills only its suffix yet the
+drafter must still see the full prompt. Plus the guard rails:
 recurrent-state architectures auto-disable speculation with a warning,
 and invalid spec configurations raise at construction.
 """
@@ -241,6 +243,47 @@ def test_spec_engine_accepts_in_agreement_regime():
     # Fewer engine steps than the plain engine: the speedup's
     # deterministic form.
     assert engk.step_count < eng0.step_count
+
+
+def test_spec_engine_bit_identical_with_prefix_cache():
+    """spec_k x radix cache: a prefix-HIT member rides the bucketed
+    suffix path while speculation is live.  The hit row sits out the
+    draft mirror's bucket prefill until the engine primes it with a
+    full-prompt draft prefill, so drafts see the tokens the shared pages
+    hold — gated here by bit-identity to the plain prefix-on engine,
+    with BOTH subsystems proven hot by the counters."""
+    cfg = tiny(n_layers=4)
+    ms = T.build_structure(cfg, plan=LPPlan(()), tp=1)
+    params = T.init_params(ms, KEY)
+    eng0, engk = _spec_engines(params, ms, spec_k=2, prefix_cache=True)
+
+    def toks(i, L):
+        return np.asarray(jax.random.randint(jax.random.fold_in(KEY, 10 + i),
+                                             (L,), 0, cfg.vocab_size))
+
+    shared = toks(0, 8)                         # one whole page
+    donor = np.concatenate([shared, toks(1, 8)])
+    member = np.concatenate([shared, toks(2, 6)])
+    cold = toks(3, 7)
+    rids = []
+    for eng in (eng0, engk):
+        r0 = eng.add_request(donor, 5)
+        eng.drain()                             # donates the shared page
+        r1 = eng.add_request(member, 5)
+        r2 = eng.add_request(cold, 5)
+        eng.drain()
+        rids.append((r0, r1, r2))
+    for a, b in zip(*rids):
+        assert (eng0.results[a] == engk.results[b]).all(), (a, b)
+    for eng in (eng0, engk):
+        c = eng.counters
+        assert c["prefix_hits"] == 1, dict(c)
+        assert c["suffix_prefills"] == 1, dict(c)
+        assert eng.pool.live == eng.prefix.resident_pages
+    ck = engk.counters
+    assert ck["verify_steps"] > 0, dict(ck)
+    assert ck["draft_steps"] == 2 * ck["verify_steps"], dict(ck)
+    assert ck["spec_accepted"] + ck["spec_rejected"] > 0, dict(ck)
 
 
 def test_spec_auto_disables_on_recurrent_blocks():
